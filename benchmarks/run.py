@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows, as required.
+
+  table1_e2e          Table I   (containerized app across systems)
+  table2_scaling      Table II  (same container, 1..8 devices)
+  table34_collectives Tables III/IV (native vs container collectives)
+  table5_kernels      Table V   (kernel GFLOP/s, reference vs native bound)
+  fig3_startup        Fig. 3    (startup metadata storm vs single manifest)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only table5_kernels,fig3_startup]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+_MODULES = [
+    "table1_e2e",
+    "table2_scaling",
+    "table34_collectives",
+    "table5_kernels",
+    "fig3_startup",
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module list (default: all)")
+    args = ap.parse_args(argv)
+    wanted = args.only.split(",") if args.only else _MODULES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in wanted:
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{mod_name},nan,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,72 @@
+"""Table I analogue — containerized TensorFlow run times across systems.
+
+The paper's claim: the SAME unmodified container runs on every system,
+with run time set by the system's hardware.  Here: the same Bundle
+(reduced LM, identical digest) is deployed on the 'laptop' platform
+(1 device) and the 'cluster' platform (8 forced host devices, flat DP) —
+wall-clock per train step is reported for each.  On this single-core CPU
+container the 8-"device" run shows SPMD overhead rather than speedup; the
+portability property (one artifact, two systems, numerics equal) is what
+the table demonstrates, exactly like Table I's unmodified-image rows.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import row, run_subprocess
+
+_STEPS = 6
+
+_CODE = """
+import time, json
+import jax
+from repro.configs.base import ShapeConfig
+from repro.core import Runtime
+from repro.data import DataConfig, SyntheticStream
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import DeployOptions, make_deployment
+from repro.launch.train import make_bundle
+from repro.configs.base import ModelConfig
+from repro.optim import adamw_init
+
+bundle = make_bundle("qwen2.5-14b", reduced=True)
+rt = Runtime(host_env={})
+container = rt.deploy(bundle, mesh=make_host_mesh())
+cfg = ModelConfig.from_dict(container.bundle.model_config)
+shape = ShapeConfig("b", 64, 8, "train")
+dep = make_deployment(cfg, shape, container.mesh,
+                      options=DeployOptions(donate=False),
+                      binding=container.binding)
+params = jax.device_put(dep.model.init(jax.random.PRNGKey(0)), dep.param_sharding)
+opt = jax.device_put(adamw_init(params), dep.opt_sharding)
+stream = SyntheticStream(cfg, shape, DataConfig())
+batch = jax.device_put(stream.global_batch_at(0), dep.batch_sharding)
+params, opt, m = dep.train_step(params, opt, batch)   # compile + warmup
+t0 = time.perf_counter()
+for s in range(%d):
+    batch = jax.device_put(stream.global_batch_at(s + 1), dep.batch_sharding)
+    params, opt, m = dep.train_step(params, opt, batch)
+float(m["loss"])
+dt = (time.perf_counter() - t0) / %d
+print(json.dumps({"per_step_s": dt, "loss": float(m["loss"]),
+                  "digest": container.bundle.digest,
+                  "devices": len(container.devices)}))
+"""
+
+
+def run() -> list[tuple[str, float, str]]:
+    import json
+
+    rows = []
+    results = {}
+    for system, devices in (("laptop", 1), ("cluster", 8)):
+        out = run_subprocess(_CODE % (_STEPS, _STEPS), devices=devices)
+        r = json.loads(out.strip().splitlines()[-1])
+        results[system] = r
+        rows.append(row(
+            f"table1/train_step/{system}",
+            r["per_step_s"] * 1e6,
+            f"devices={r['devices']};loss={r['loss']:.3f}",
+        ))
+    same = results["laptop"]["digest"] == results["cluster"]["digest"]
+    rows.append(row("table1/same_artifact", 0.0, f"unmodified_bundle={same}"))
+    return rows

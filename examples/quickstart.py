@@ -1,0 +1,64 @@
+"""Quickstart: the paper's Fig. 2 workflow in ~60 lines.
+
+  1. build a Bundle (the container image) on the "laptop";
+  2. test it locally;
+  3. push it to a registry;
+  4. pull it through the Gateway (flatten + convert + cache);
+  5. run it through the Runtime (platform detection, op binding, mesh).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.core import Gateway, Runtime
+from repro.launch.train import make_bundle
+from repro.models import build_model
+
+
+def main() -> None:
+    # 1) build the image: hardware-agnostic program spec + required op ABIs
+    bundle = make_bundle("qwen2.5-14b", reduced=True)
+    print(f"[1] built bundle {bundle.reference} (digest {bundle.digest})")
+    print(f"    required ops: {sorted(bundle.required_ops)}")
+
+    # 2) test locally (the laptop step): pure reference ops, no mesh
+    cfg = ModelConfig.from_dict(bundle.model_config)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    loss, _ = jax.jit(model.loss_fn)(params, {"tokens": toks, "labels": toks})
+    print(f"[2] local smoke test: loss = {float(loss):.4f}")
+
+    with tempfile.TemporaryDirectory() as d:
+        # 3) push to the registry
+        gw = Gateway(f"{d}/registry", f"{d}/cache")
+        gw.push(bundle)
+        print(f"[3] pushed to registry")
+
+        # 4) pull: fetch + flatten + convert into the site cache
+        flat = gw.pull(bundle.reference)
+        print(f"[4] pulled; cached images: {gw.images()}")
+
+        # 5) deploy: the Runtime detects the platform, binds ops (swapping
+        #    in natives where the site provides them), builds the mesh
+        rt = Runtime(host_env={})
+        container = rt.deploy(flat)
+        print("[5] deployed container:")
+        print(container.describe())
+
+        # run one forward step *through the container's binding*
+        model2 = build_model(cfg, binding=container.binding)
+        loss2, _ = jax.jit(model2.loss_fn)(params, {"tokens": toks, "labels": toks})
+        print(f"    containerized loss = {float(loss2):.4f} "
+              f"(matches local: {abs(float(loss) - float(loss2)) < 1e-5})")
+        rt.cleanup()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Serving example: batched decode with continuous slot refill.
+
+Deploys a reduced model through the Runtime and serves a stream of
+requests with the slot-based Server (static shapes; finished slots are
+refilled from the queue without recompiling).
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen2.5-14b", "--requests", "6", "--slots", "2",
+          "--max-len", "48", "--max-new", "6"])

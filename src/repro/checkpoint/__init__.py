@@ -1,0 +1,14 @@
+from repro.checkpoint.manifest import (
+    AsyncCheckpointer,
+    file_op_counts,
+    latest_step,
+    load_naive,
+    restore_checkpoint,
+    save_checkpoint,
+    save_naive,
+)
+
+__all__ = [
+    "AsyncCheckpointer", "file_op_counts", "latest_step", "load_naive",
+    "restore_checkpoint", "save_checkpoint", "save_naive",
+]

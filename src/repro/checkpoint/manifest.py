@@ -1,0 +1,233 @@
+"""Single-manifest checkpoints — the squashfs lesson applied to weights.
+
+Fig. 3 of the paper: Python startup at 3000 ranks dies on Lustre *metadata*
+(one MDS round-trip per shared object), while Shifter's loop-mounted
+squashfs needs ONE metadata lookup and then pure block reads.  A
+per-tensor checkpoint directory has exactly the same failure mode (one
+stat+open per tensor per rank).  So `repro` checkpoints are:
+
+  manifest.json   one metadata object: tree structure, per-leaf shape/
+                  dtype/offset/size/sha256, step, config digest
+  data.blob       one contiguous blob, leaves at recorded offsets
+
+Restore is one metadata read + offset reads (mmap) — and because the
+manifest records *logical* layout only, restore may apply ANY sharding:
+elastic rescaling = restore with a different mesh (see ft/elastic.py).
+
+`save_naive` / `load_naive` implement the per-tensor-files layout purely
+for the Fig. 3 benchmark comparison.
+
+Durability: blob + manifest are written to a temp name and atomically
+renamed; a `LATEST` pointer is updated last, so a crash mid-save never
+corrupts the restore path (the supervisor restarts from the previous
+checkpoint).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "AsyncCheckpointer",
+    "save_naive",
+    "load_naive",
+    "file_op_counts",
+]
+
+
+def _flatten(tree: Any, prefix: str = "") -> list[tuple[str, Any]]:
+    if isinstance(tree, dict):
+        out: list[tuple[str, Any]] = []
+        for k in sorted(tree):
+            out.extend(_flatten(tree[k], f"{prefix}/{k}" if prefix else str(k)))
+        return out
+    if isinstance(tree, (tuple, list)):
+        out = []
+        for i, v in enumerate(tree):
+            out.extend(_flatten(v, f"{prefix}/{i}" if prefix else str(i)))
+        return out
+    return [(prefix, tree)]
+
+
+def _unflatten_into(skeleton: Any, values: dict[str, np.ndarray], prefix: str = "") -> Any:
+    if isinstance(skeleton, dict):
+        return {
+            k: _unflatten_into(skeleton[k], values, f"{prefix}/{k}" if prefix else str(k))
+            for k in skeleton
+        }
+    if isinstance(skeleton, (tuple, list)):
+        seq = [
+            _unflatten_into(v, values, f"{prefix}/{i}" if prefix else str(i))
+            for i, v in enumerate(skeleton)
+        ]
+        return type(skeleton)(seq) if not hasattr(skeleton, "_fields") else type(skeleton)(*seq)
+    return values[prefix]
+
+
+# --------------------------------------------------------------------------- #
+# single-manifest format
+# --------------------------------------------------------------------------- #
+def save_checkpoint(
+    directory: Path | str,
+    step: int,
+    tree: Any,
+    *,
+    extra_meta: dict | None = None,
+) -> Path:
+    directory = Path(directory)
+    ckpt_dir = directory / f"step_{step:010d}"
+    tmp_dir = directory / f".tmp_step_{step:010d}"
+    tmp_dir.mkdir(parents=True, exist_ok=True)
+
+    leaves = _flatten(tree)
+    entries = {}
+    offset = 0
+    blob_path = tmp_dir / "data.blob"
+    with open(blob_path, "wb") as blob:
+        for path, leaf in leaves:
+            arr = np.asarray(jax.device_get(leaf))
+            raw = arr.tobytes()
+            digest = hashlib.sha256(raw).hexdigest()[:16]
+            entries[path] = {
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "offset": offset,
+                "nbytes": len(raw),
+                "sha256_16": digest,
+            }
+            blob.write(raw)
+            offset += len(raw)
+    manifest = {
+        "format": "repro-manifest-v1",
+        "step": step,
+        "total_bytes": offset,
+        "entries": entries,
+        "meta": extra_meta or {},
+    }
+    (tmp_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    os.replace(tmp_dir, ckpt_dir)                       # atomic publish
+    (directory / "LATEST.tmp").write_text(str(step))
+    os.replace(directory / "LATEST.tmp", directory / "LATEST")
+    return ckpt_dir
+
+
+def latest_step(directory: Path | str) -> int | None:
+    p = Path(directory) / "LATEST"
+    if not p.exists():
+        return None
+    return int(p.read_text().strip())
+
+
+def restore_checkpoint(
+    directory: Path | str,
+    skeleton: Any,
+    *,
+    step: int | None = None,
+    sharding_fn: Callable[[str, np.ndarray], Any] | None = None,
+    verify: bool = False,
+) -> tuple[Any, int]:
+    """Restore into `skeleton`'s structure.  `sharding_fn(path, arr)` may
+    return a jax.sharding.Sharding to place each leaf — reshard-on-restore
+    is what makes restarts mesh-shape-agnostic (elastic rescaling)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no LATEST pointer in {directory}")
+    ckpt_dir = directory / f"step_{step:010d}"
+    manifest = json.loads((ckpt_dir / "manifest.json").read_text())
+    blob = np.memmap(ckpt_dir / "data.blob", dtype=np.uint8, mode="r")
+
+    values: dict[str, Any] = {}
+    for path, ent in manifest["entries"].items():
+        raw = blob[ent["offset"] : ent["offset"] + ent["nbytes"]]
+        if verify:
+            digest = hashlib.sha256(raw.tobytes()).hexdigest()[:16]
+            if digest != ent["sha256_16"]:
+                raise IOError(f"checksum mismatch for {path} in step {step}")
+        arr = np.frombuffer(raw.tobytes(), dtype=np.dtype(ent["dtype"])).reshape(
+            ent["shape"]
+        )
+        if sharding_fn is not None:
+            sh = sharding_fn(path, arr)
+            values[path] = jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr)
+        else:
+            values[path] = jnp.asarray(arr)
+    return _unflatten_into(skeleton, values), step
+
+
+class AsyncCheckpointer:
+    """Double-buffered async save: snapshot to host, write on a thread.
+
+    `wait()` joins the in-flight write (call before the next save or exit).
+    The snapshot (device_get) happens on the caller's thread so the arrays
+    handed to the writer are immutable host copies.
+    """
+
+    def __init__(self, directory: Path | str):
+        self.directory = Path(directory)
+        self._thread: threading.Thread | None = None
+        self.saved_steps: list[int] = []
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            save_checkpoint(self.directory, step, host_tree)
+            self.saved_steps.append(step)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+# --------------------------------------------------------------------------- #
+# naive per-tensor layout (Fig. 3 comparison only)
+# --------------------------------------------------------------------------- #
+def save_naive(directory: Path | str, tree: Any) -> int:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    n = 0
+    for path, leaf in _flatten(tree):
+        fname = directory / (path.replace("/", "__") + ".npy")
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind == "V":   # .npy cannot express bf16 — widen.
+            arr = np.asarray(jax.device_get(jnp.asarray(leaf, jnp.float32)))
+        np.save(fname, arr)
+        n += 1
+    return n
+
+
+def load_naive(directory: Path | str, skeleton: Any) -> Any:
+    directory = Path(directory)
+    values = {}
+    for path, _ in _flatten(skeleton):
+        fname = directory / (path.replace("/", "__") + ".npy")
+        values[path] = jnp.asarray(np.load(fname))
+    return _unflatten_into(skeleton, values)
+
+
+def file_op_counts(tree: Any) -> dict[str, int]:
+    """Metadata-operation counts per rank for both layouts (Fig. 3 model)."""
+    n_leaves = len(_flatten(tree))
+    return {
+        "naive_metadata_ops": 2 * n_leaves,   # stat + open per tensor
+        "manifest_metadata_ops": 3,           # LATEST + manifest + blob
+    }

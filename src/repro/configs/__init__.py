@@ -1,0 +1,47 @@
+"""Assigned-architecture registry: ``--arch <id>`` resolves here."""
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from repro.configs.granite_3_8b import CONFIG as GRANITE_3_8B
+from repro.configs.jamba_15_large_398b import CONFIG as JAMBA_15_LARGE
+from repro.configs.llava_next_34b import CONFIG as LLAVA_NEXT_34B
+from repro.configs.mamba2_780m import CONFIG as MAMBA2_780M
+from repro.configs.minitron_8b import CONFIG as MINITRON_8B
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as MOONSHOT_16B
+from repro.configs.phi35_moe_42b_a66b import CONFIG as PHI35_MOE
+from repro.configs.qwen2_72b import CONFIG as QWEN2_72B
+from repro.configs.qwen25_14b import CONFIG as QWEN25_14B
+from repro.configs.whisper_base import CONFIG as WHISPER_BASE
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        MOONSHOT_16B,
+        PHI35_MOE,
+        LLAVA_NEXT_34B,
+        WHISPER_BASE,
+        MINITRON_8B,
+        QWEN2_72B,
+        GRANITE_3_8B,
+        QWEN25_14B,
+        JAMBA_15_LARGE,
+        MAMBA2_780M,
+    )
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown --arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_shape(shape: str) -> ShapeConfig:
+    if shape not in SHAPES:
+        raise KeyError(f"unknown --shape {shape!r}; known: {sorted(SHAPES)}")
+    return SHAPES[shape]
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "ModelConfig", "ShapeConfig",
+    "get_config", "get_shape", "shape_applicable",
+]

@@ -1,0 +1,22 @@
+"""granite-3-8b — IBM Granite 3.0 8B.
+
+40L d_model=4096 32H (GQA kv=8) d_ff=12800 vocab=49155.
+[hf:ibm-granite/granite-3.0-2b-base; hf]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-8b",
+    family="dense",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=12_800,
+    vocab_size=49_155,
+    rope_theta=1e4,
+    tie_embeddings=True,
+    notes="[hf:ibm-granite/granite-3.0-2b-base; hf] GQA",
+)

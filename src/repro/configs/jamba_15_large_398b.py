@@ -1,0 +1,31 @@
+"""jamba-1.5-large-398b — AI21 Jamba 1.5 Large (arXiv:2403.19887).
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, MoE 16e top-2,
+Mamba:attention 7:1 interleave (attention at layer i where i % 8 == 0),
+MoE on every other layer.  [arXiv:2403.19887; hf]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24_576,
+    moe_d_ff=24_576,
+    vocab_size=65_536,
+    num_experts=16,
+    top_k=2,
+    moe_every=2,
+    moe_offset=1,
+    attn_every=8,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_headdim=64,
+    rope_theta=1e4,
+    notes="[arXiv:2403.19887; hf] Mamba+attn 1:7 interleave, MoE every 2nd layer",
+)

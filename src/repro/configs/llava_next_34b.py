@@ -1,0 +1,25 @@
+"""llava-next-34b — LLaVA-NeXT 34B (Yi-34B backbone), anyres tiling.
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+The vision frontend (anyres tiling + projector) is a STUB per assignment:
+input_specs() provides precomputed patch embeddings; the transformer
+backbone is fully modeled.  [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20_480,
+    vocab_size=64_000,
+    rope_theta=5e6,
+    modality="vision",
+    n_patches=576,
+    notes="[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified] anyres tiling stubbed",
+)

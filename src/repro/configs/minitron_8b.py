@@ -1,0 +1,21 @@
+"""minitron-8b — pruned Nemotron-4 (arXiv:2407.14679).
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.
+[arXiv:2407.14679; hf]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16_384,
+    vocab_size=256_000,
+    rope_theta=1e4,
+    notes="[arXiv:2407.14679; hf] pruned nemotron",
+)

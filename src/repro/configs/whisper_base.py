@@ -1,0 +1,27 @@
+"""whisper-base — encoder-decoder speech model (arXiv:2212.04356).
+
+6L(+6L encoder) d_model=512 8H d_ff=2048 vocab=51865; conv audio frontend
+is a STUB per assignment: input_specs() provides precomputed frame
+embeddings (post-conv).  LayerNorm + GELU, no rotary (learned/sinusoidal
+positions -> modeled as learned positional embeddings).
+[arXiv:2212.04356; unverified]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,
+    encoder_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51_865,
+    norm="layernorm",
+    activation="gelu",
+    modality="audio",
+    notes="[arXiv:2212.04356; unverified] enc-dec, conv frontend stubbed",
+)

@@ -1,0 +1,119 @@
+"""Environment-triggered resource activation (the CUDA_VISIBLE_DEVICES leg).
+
+The paper (§IV-A) activates GPU support iff ``CUDA_VISIBLE_DEVICES`` holds a
+valid comma-separated device list; the workload manager (SLURM GRES) is the
+usual writer.  Invalid or absent values deactivate the feature silently.
+Inside the container devices are renumbered from 0 regardless of the host
+ids, so single-GPU images run unmodified on multi-GPU hosts.
+
+`repro` mirrors each behaviour:
+
+  REPRO_VISIBLE_DEVICES   comma-separated physical device indices (or 'all').
+                          Valid value  -> accelerator binding activates, the
+                          selected devices become logical devices 0..N-1.
+                          Invalid/absent -> feature off, single-device laptop
+                          semantics (reference ops, trivial mesh).
+  REPRO_PLATFORM          explicit site selection (overrides detection),
+                          the analogue of the sysadmin's shifter config.
+  REPRO_NATIVE_OPS        "1"/"0": default for the --native-ops flag (--mpi).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from typing import Sequence
+
+import jax
+
+from repro.core.platform import PLATFORMS, Platform, detect_platform
+
+__all__ = [
+    "VisibleDevices",
+    "parse_visible_devices",
+    "select_devices",
+    "resolve_platform",
+    "native_ops_default",
+    "ENV_VISIBLE",
+    "ENV_PLATFORM",
+    "ENV_NATIVE_OPS",
+]
+
+ENV_VISIBLE = "REPRO_VISIBLE_DEVICES"
+ENV_PLATFORM = "REPRO_PLATFORM"
+ENV_NATIVE_OPS = "REPRO_NATIVE_OPS"
+
+_INT_LIST_RE = re.compile(r"^\s*\d+\s*(,\s*\d+\s*)*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class VisibleDevices:
+    """Outcome of parsing REPRO_VISIBLE_DEVICES.
+
+    ``active`` is the GPU-support trigger: False replicates Shifter's
+    "do not trigger the GPU support procedure" path.
+    """
+
+    active: bool
+    indices: tuple[int, ...] | None  # None == 'all'
+    raw: str | None = None
+
+
+def parse_visible_devices(value: str | None) -> VisibleDevices:
+    """Validate the trigger variable exactly as §IV-A.1 prescribes.
+
+    A valid value is 'all' or a comma-separated list of non-negative
+    integers with no duplicates.  Anything else (empty string, negatives,
+    junk) deactivates the feature rather than erroring — a job scheduled
+    without accelerators must still run.
+    """
+    if value is None:
+        return VisibleDevices(active=False, indices=None, raw=None)
+    text = value.strip()
+    if text.lower() == "all":
+        return VisibleDevices(active=True, indices=None, raw=value)
+    if not _INT_LIST_RE.match(text):
+        return VisibleDevices(active=False, indices=None, raw=value)
+    idx = tuple(int(t) for t in text.split(","))
+    if len(set(idx)) != len(idx):
+        return VisibleDevices(active=False, indices=None, raw=value)
+    return VisibleDevices(active=True, indices=idx, raw=value)
+
+
+def select_devices(
+    vis: VisibleDevices, devices: Sequence[jax.Device] | None = None
+) -> list[jax.Device]:
+    """Renumber physical devices into the logical 0..N-1 space.
+
+    Mirrors §IV-A.3: with CUDA_VISIBLE_DEVICES=2 the container addresses
+    that device as 0.  Out-of-range indices are dropped (the scheduler may
+    describe a superset host); order is preserved so index 0 is the first
+    *visible* device, not the first physical one.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    if not vis.active or vis.indices is None:
+        return devices
+    return [devices[i] for i in vis.indices if 0 <= i < len(devices)]
+
+
+def resolve_platform(
+    env: dict[str, str] | None = None,
+    devices: Sequence[jax.Device] | None = None,
+) -> Platform:
+    """REPRO_PLATFORM override, else device-based detection."""
+    env = os.environ if env is None else env
+    name = env.get(ENV_PLATFORM, "").strip()
+    if name:
+        if name not in PLATFORMS:
+            raise KeyError(
+                f"{ENV_PLATFORM}={name!r} names no configured platform; "
+                f"known: {sorted(PLATFORMS)}"
+            )
+        return PLATFORMS[name]
+    return detect_platform(devices)
+
+
+def native_ops_default(env: dict[str, str] | None = None) -> bool:
+    env = os.environ if env is None else env
+    return env.get(ENV_NATIVE_OPS, "0").strip() == "1"

@@ -1,0 +1,118 @@
+"""Gateway — the Image Gateway of the paper (§III, Fig. 1), for Bundles.
+
+Responsibilities mirror the original:
+
+  * **pull**: fetch a bundle (and its base chain) from a *registry*
+    (a remote in production; a directory here), like `shifterimg pull`.
+  * **flatten**: collapse the layer chain onto a single bundle — "all layers
+    but the last one are discarded".
+  * **convert**: write the flattened bundle into the site cache as one
+    immutable blob keyed by digest — the squashfs-on-parallel-FS step.
+    Every node of a job loads this single artifact (one metadata lookup)
+    instead of re-resolving N layers (the Pynamic lesson).
+  * **query/list**: `shifterimg images`.
+
+The Gateway is the only component that touches the registry; the Runtime
+only ever reads the local cache.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+from pathlib import Path
+
+from repro.core.bundle import Bundle, BundleError
+
+__all__ = ["Gateway", "GatewayError"]
+
+log = logging.getLogger("repro.gateway")
+
+_MAX_LAYER_DEPTH = 16
+
+
+class GatewayError(RuntimeError):
+    pass
+
+
+class Gateway:
+    def __init__(self, registry_dir: Path | str, cache_dir: Path | str):
+        self.registry_dir = Path(registry_dir)
+        self.cache_dir = Path(cache_dir)
+        self.cache_dir.mkdir(parents=True, exist_ok=True)
+        (self.cache_dir / "tags").mkdir(exist_ok=True)
+
+    # -- registry side (docker hub analogue) -------------------------------
+    def push(self, bundle: Bundle) -> Path:
+        """Publish a bundle to the registry (the build-workstation step)."""
+        path = self.registry_dir / f"{bundle.name}__{bundle.tag}.json"
+        return bundle.save(path)
+
+    def _fetch(self, reference: str) -> Bundle:
+        name, _, tag = reference.partition(":")
+        tag = tag or "latest"
+        path = self.registry_dir / f"{name}__{tag}.json"
+        if not path.exists():
+            raise GatewayError(f"registry has no bundle {reference!r}")
+        return Bundle.load(path)
+
+    # -- pull + flatten + convert -------------------------------------------
+    def pull(self, reference: str) -> Bundle:
+        """Pull a bundle, flatten its base chain, convert into the cache.
+
+        Returns the flattened bundle.  Idempotent: a digest already in cache
+        is reused (images are content-addressed).
+        """
+        chain: list[Bundle] = []
+        ref = reference
+        for _ in range(_MAX_LAYER_DEPTH):
+            b = self._fetch(ref)
+            chain.append(b)
+            if b.base is None:
+                break
+            ref = b.base
+        else:
+            raise GatewayError(f"layer chain of {reference!r} exceeds {_MAX_LAYER_DEPTH}")
+
+        flat = chain[-1]
+        for child in reversed(chain[:-1]):
+            flat = child.flatten_onto(flat)
+
+        blob = self.cache_dir / f"{flat.digest}.bundle.json"
+        if not blob.exists():
+            flat.save(blob)
+            log.info("gateway: converted %s -> %s", reference, blob.name)
+        # tag file: mutable pointer, like the image tag listing
+        tagfile = self.cache_dir / "tags" / f"{flat.name}__{flat.tag}"
+        tagfile.write_text(flat.digest)
+        return flat
+
+    # -- runtime side ----------------------------------------------------------
+    def lookup(self, reference: str) -> Bundle:
+        """Resolve a pulled image from the local cache only (no registry I/O)."""
+        name, _, tag = reference.partition(":")
+        tagfile = self.cache_dir / "tags" / f"{name}__{tag or 'latest'}"
+        if not tagfile.exists():
+            raise GatewayError(
+                f"image {reference!r} not in cache; run gateway.pull() first"
+            )
+        digest = tagfile.read_text().strip()
+        return Bundle.load(self.cache_dir / f"{digest}.bundle.json")
+
+    def images(self) -> list[dict[str, str]]:
+        """`shifterimg images` — list cached, ready-to-run bundles."""
+        out = []
+        for tagfile in sorted((self.cache_dir / "tags").iterdir()):
+            name, _, tag = tagfile.name.partition("__")
+            out.append({"name": name, "tag": tag, "digest": tagfile.read_text().strip()})
+        return out
+
+    def gc(self) -> int:
+        """Drop cache blobs no tag points at; returns count removed."""
+        live = {t.read_text().strip() for t in (self.cache_dir / "tags").iterdir()}
+        removed = 0
+        for blob in self.cache_dir.glob("*.bundle.json"):
+            if blob.name.split(".")[0] not in live:
+                blob.unlink()
+                removed += 1
+        return removed

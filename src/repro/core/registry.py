@@ -1,0 +1,249 @@
+"""OpRegistry — the library-substitution engine (the paper's §IV-B in JAX).
+
+A logical op (e.g. ``attention``, ``rmsnorm``, ``moe_gmm``) is declared once
+with its ABI.  Implementations register against it:
+
+  * REFERENCE — pure jnp, hardware-agnostic: the MPICH the image ships with.
+  * NATIVE    — site-optimized (Pallas kernel, shard_map collective): the
+                Cray MPT the host bind-mounts in.
+
+At deployment the Runtime asks the registry for a *binding*: a frozen
+name -> callable table for a given platform with native support on or off.
+The swap is refused — keeping the reference — whenever the ABI strings do
+not match, the platform lacks the feature the impl requires, or the binding
+has been frozen (the privilege-drop analogue: once the container app runs,
+it cannot remount libraries).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import logging
+from typing import Any, Callable, Iterable, Mapping
+
+from repro.core.abi import AbiIncompatibility, AbiString
+from repro.core.platform import Platform
+
+__all__ = [
+    "ImplKind",
+    "OpImpl",
+    "OpDecl",
+    "OpRegistry",
+    "OpBinding",
+    "SwapReport",
+    "global_registry",
+]
+
+log = logging.getLogger("repro.registry")
+
+
+class ImplKind(enum.Enum):
+    REFERENCE = "reference"
+    NATIVE = "native"
+
+
+@dataclasses.dataclass(frozen=True)
+class OpImpl:
+    """One implementation of a logical op."""
+
+    abi: AbiString
+    kind: ImplKind
+    fn: Callable[..., Any]
+    requires_feature: str | None = None   # e.g. "pallas_kernels"
+    requires_device_kind: str | None = None   # e.g. "tpu": the paper's
+    # "the nvidia-uvm driver has to be loaded" precondition — the platform
+    # may *declare* the feature, but the device must actually be present.
+    provider: str = ""                    # human label ("pallas", "jnp", ...)
+
+    def available_on(self, platform: Platform) -> bool:
+        if self.requires_feature is not None and not platform.has(self.requires_feature):
+            return False
+        if self.requires_device_kind is not None:
+            import jax
+
+            if jax.default_backend() != self.requires_device_kind:
+                return False
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class OpDecl:
+    """The logical op: its required ABI plus registered implementations."""
+
+    abi: AbiString
+    impls: tuple[OpImpl, ...] = ()
+
+    @property
+    def reference(self) -> OpImpl | None:
+        for impl in self.impls:
+            if impl.kind is ImplKind.REFERENCE:
+                return impl
+        return None
+
+    def natives(self) -> tuple[OpImpl, ...]:
+        return tuple(i for i in self.impls if i.kind is ImplKind.NATIVE)
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapReport:
+    """Per-op outcome of the binding stage, for logs/EXPERIMENTS."""
+
+    op: str
+    bound: str          # provider label of the bound impl
+    kind: ImplKind
+    swapped: bool       # True if a native impl replaced the reference
+    reason: str         # why this impl (or why the swap was refused)
+
+
+class OpBinding(Mapping[str, Callable[..., Any]]):
+    """Frozen name -> callable table handed to the model at execution."""
+
+    def __init__(self, table: dict[str, OpImpl], reports: list[SwapReport]):
+        self._table = dict(table)
+        self.reports = tuple(reports)
+
+    def __getitem__(self, name: str) -> Callable[..., Any]:
+        return self._table[name].fn
+
+    def impl(self, name: str) -> OpImpl:
+        return self._table[name]
+
+    def __iter__(self):
+        return iter(self._table)
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def describe(self) -> str:
+        lines = []
+        for r in self.reports:
+            mark = "->" if r.swapped else "=="
+            lines.append(f"  {r.op:<18} {mark} {r.bound:<12} [{r.kind.value}] {r.reason}")
+        return "\n".join(lines)
+
+
+class OpRegistry:
+    def __init__(self) -> None:
+        self._decls: dict[str, OpDecl] = {}
+        self._frozen = False
+
+    # -- declaration -------------------------------------------------------
+    def declare(self, abi: AbiString) -> None:
+        self._check_mutable()
+        if abi.name in self._decls:
+            existing = self._decls[abi.name].abi
+            if existing != abi:
+                raise AbiIncompatibility(abi, existing, "redeclaration with different ABI")
+            return
+        self._decls[abi.name] = OpDecl(abi=abi)
+
+    def register(self, impl: OpImpl, *, strict: bool = True) -> bool:
+        """Attach an implementation; the ABI check is the libtool-string check.
+
+        strict=True raises on mismatch (author error); strict=False logs and
+        skips (deploy-time permissiveness), returning False.
+        """
+        self._check_mutable()
+        decl = self._decls.get(impl.abi.name)
+        if decl is None:
+            # first registration of a REFERENCE defines the contract
+            if impl.kind is not ImplKind.REFERENCE:
+                raise KeyError(
+                    f"op '{impl.abi.name}' has no declaration/reference yet; "
+                    "register the reference implementation first"
+                )
+            self._decls[impl.abi.name] = OpDecl(abi=impl.abi, impls=(impl,))
+            return True
+        if not decl.abi.compatible_with(impl.abi):
+            reason = decl.abi.why_incompatible(impl.abi) or "incompatible"
+            if strict:
+                raise AbiIncompatibility(decl.abi, impl.abi, reason)
+            log.warning("refusing registration of %s: %s", impl.abi, reason)
+            return False
+        self._decls[impl.abi.name] = dataclasses.replace(
+            decl, impls=decl.impls + (impl,)
+        )
+        return True
+
+    # -- binding (the deployment-time swap) ---------------------------------
+    def bind(
+        self,
+        ops: Iterable[str],
+        platform: Platform,
+        *,
+        native: bool,
+        freeze: bool = True,
+    ) -> OpBinding:
+        """Produce the frozen op table for this deployment.
+
+        ``native=False`` reproduces `shifter` without ``--mpi``: every op
+        keeps its reference implementation.  ``native=True`` swaps each op
+        whose platform-available native impl is ABI-compatible; refusals
+        fall back to the reference, mirroring the paper's behaviour of
+        "leave the container's MPI in place".
+        """
+        table: dict[str, OpImpl] = {}
+        reports: list[SwapReport] = []
+        for name in ops:
+            decl = self._decls.get(name)
+            if decl is None:
+                raise KeyError(f"op '{name}' was never declared/registered")
+            ref = decl.reference
+            if ref is None:
+                raise KeyError(f"op '{name}' lacks a reference implementation")
+            chosen, swapped, reason = ref, False, "reference (native support disabled)"
+            if native:
+                reason = "reference (no native impl registered)"
+                for cand in decl.natives():
+                    if not cand.available_on(platform):
+                        need = cand.requires_feature or (
+                            f"{cand.requires_device_kind} device"
+                        )
+                        reason = (
+                            f"reference (native '{cand.provider}' needs "
+                            f"'{need}' absent on {platform.name})"
+                        )
+                        continue
+                    why = decl.abi.why_incompatible(cand.abi)
+                    if why is not None:
+                        reason = f"reference (ABI refusal: {why})"
+                        log.warning("op %s: refusing native swap: %s", name, why)
+                        continue
+                    chosen, swapped = cand, True
+                    reason = f"native swap ({cand.provider}, abi {cand.abi})"
+                    break
+            table[name] = chosen
+            reports.append(
+                SwapReport(op=name, bound=chosen.provider or chosen.kind.value,
+                           kind=chosen.kind, swapped=swapped, reason=reason)
+            )
+        if freeze:
+            self._frozen = True
+        return OpBinding(table, reports)
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def frozen(self) -> bool:
+        return self._frozen
+
+    def thaw(self) -> None:
+        """Cleanup-stage reset (tests / successive deployments in-process)."""
+        self._frozen = False
+
+    def _check_mutable(self) -> None:
+        if self._frozen:
+            raise RuntimeError(
+                "registry is frozen: ops cannot be (re)registered after the "
+                "runtime dropped privileges and started execution"
+            )
+
+    def declared(self) -> tuple[str, ...]:
+        return tuple(sorted(self._decls))
+
+    def decl(self, name: str) -> OpDecl:
+        return self._decls[name]
+
+
+# The process-global registry the kernels/ package populates on import.
+global_registry = OpRegistry()

@@ -1,0 +1,205 @@
+"""Runtime — the Shifter Runtime, staged exactly as the paper's §III-A.
+
+    pull/reformat        -> Gateway (separate component, as in Fig. 1)
+    prepare environment  -> resolve platform, select+renumber devices,
+                            build the mesh, swap ops (native support)
+    chroot jail          -> Container object: the program sees ONLY the
+                            frozen OpBinding and merged env — never the
+                            registry or host environment directly
+    drop privileges      -> freeze the registry (no rebinding mid-run)
+    export env variables -> bundle env ∪ selected host env (host wins on
+                            the site-specific allowlist, like Shifter's
+                            config-driven variable sourcing)
+    execute              -> jit'd step functions run under the mesh
+    cleanup              -> thaw registry, release the container
+
+GPU-support trigger semantics (§IV-A) are preserved: accelerator binding
+activates only on a *valid* REPRO_VISIBLE_DEVICES; otherwise the container
+still runs, on the default (laptop) resources.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import jax
+
+from repro.core.bundle import Bundle
+from repro.core.env import (
+    ENV_VISIBLE,
+    native_ops_default,
+    parse_visible_devices,
+    resolve_platform,
+    select_devices,
+)
+from repro.core.platform import Platform
+from repro.core.registry import OpBinding, OpRegistry, global_registry
+
+__all__ = ["Runtime", "Container", "DeploymentError"]
+
+log = logging.getLogger("repro.runtime")
+
+# Host variables a container inherits (Shifter: "selected variables from the
+# host system are also added", per site configuration).
+_HOST_ENV_ALLOWLIST = (ENV_VISIBLE, "REPRO_PLATFORM", "REPRO_CHECKPOINT_DIR",
+                       "REPRO_COMPILE_CACHE")
+
+
+class DeploymentError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Container:
+    """A deployed program: the chroot'd view of the world.
+
+    Everything the program may touch is here — ops come exclusively from
+    ``binding`` (the bind-mounted libraries), resources from ``mesh``, and
+    configuration from ``env``/``bundle``.
+    """
+
+    bundle: Bundle
+    platform: Platform
+    mesh: jax.sharding.Mesh
+    binding: OpBinding
+    env: Mapping[str, str]
+    native_ops: bool
+
+    @property
+    def devices(self) -> tuple[jax.Device, ...]:
+        return tuple(self.mesh.devices.flat)
+
+    def describe(self) -> str:
+        head = (
+            f"container {self.bundle.reference} (digest {self.bundle.digest})\n"
+            f"  platform: {self.platform.name} ({self.platform.description})\n"
+            f"  mesh: shape={dict(zip(self.mesh.axis_names, self.mesh.devices.shape))} "
+            f"devices={self.mesh.devices.size}\n"
+            f"  native ops: {'enabled' if self.native_ops else 'disabled'}\n"
+        )
+        return head + self.binding.describe()
+
+
+class Runtime:
+    """Deploys bundles onto a site.  One Runtime per process, like `shifter`."""
+
+    def __init__(
+        self,
+        registry: OpRegistry | None = None,
+        host_env: Mapping[str, str] | None = None,
+    ) -> None:
+        self.registry = registry if registry is not None else global_registry
+        self.host_env = dict(os.environ if host_env is None else host_env)
+        self._active: Container | None = None
+
+    # ------------------------------------------------------------------ #
+    def deploy(
+        self,
+        bundle: Bundle,
+        *,
+        native_ops: bool | None = None,
+        platform: Platform | None = None,
+        mesh: jax.sharding.Mesh | None = None,
+        devices: Sequence[jax.Device] | None = None,
+        extra_ops: Iterable[str] = (),
+        freeze: bool = True,
+    ) -> Container:
+        """Run the preparation stages and hand back the executable Container.
+
+        ``native_ops`` is the ``--mpi`` flag (None -> REPRO_NATIVE_OPS env
+        default); ``mesh`` may be injected by launchers that already built
+        the production mesh (dryrun/train), otherwise one is derived from
+        the platform topology and the visible devices.
+        """
+        if self._active is not None:
+            raise DeploymentError(
+                "a container is already running in this Runtime; cleanup() first"
+            )
+
+        # -- stage: prepare software environment ---------------------------
+        if native_ops is None:
+            native_ops = native_ops_default(self.host_env)
+        vis = parse_visible_devices(self.host_env.get(ENV_VISIBLE))
+        if platform is None:
+            platform = resolve_platform(self.host_env, devices)
+        if mesh is None:
+            mesh = self._make_mesh(platform, vis, devices)
+
+        # ABI verification against the bundle's requirements: the runtime
+        # refuses deployment if the site cannot satisfy a required contract
+        # at all (no reference either) — a missing libmpi, not a bad swap.
+        required = bundle.required_abis()
+        for op, want in required.items():
+            try:
+                decl = self.registry.decl(op)
+            except KeyError as e:
+                raise DeploymentError(f"site provides no op '{op}'") from e
+            why = want.why_incompatible(decl.abi)
+            if why is not None:
+                raise DeploymentError(
+                    f"bundle requires {want} but site declares {decl.abi}: {why}"
+                )
+
+        ops = list(required) + [o for o in extra_ops if o not in required]
+        binding = self.registry.bind(ops, platform, native=native_ops, freeze=freeze)
+        for r in binding.reports:
+            log.info("bind %-18s %s", r.op, r.reason)
+
+        # -- stage: export of environment variables -------------------------
+        env = dict(bundle.env)
+        for key in _HOST_ENV_ALLOWLIST:
+            if key in self.host_env:
+                env[key] = self.host_env[key]
+
+        container = Container(
+            bundle=bundle,
+            platform=platform,
+            mesh=mesh,
+            binding=binding,
+            env=env,
+            native_ops=native_ops,
+        )
+        self._active = container
+        return container
+
+    # ------------------------------------------------------------------ #
+    def cleanup(self) -> None:
+        """Release the container: thaw the registry, clear the jit caches."""
+        self._active = None
+        self.registry.thaw()
+        jax.clear_caches()
+
+    # ------------------------------------------------------------------ #
+    def _make_mesh(
+        self,
+        platform: Platform,
+        vis,
+        devices: Sequence[jax.Device] | None,
+    ) -> jax.sharding.Mesh:
+        """Build the execution mesh from the visible, renumbered devices.
+
+        Mirrors §IV-A.3: logical coordinates always start at 0; the mesh is
+        shaped by the platform topology, truncated to a prefix shape if
+        fewer devices are visible (a container built for 1 GPU runs on a
+        multi-GPU host and vice versa).
+        """
+        import numpy as np
+
+        pool = select_devices(vis, devices)
+        if not pool:
+            raise DeploymentError("no visible devices after renumbering")
+        want = platform.num_devices
+        if len(pool) >= want:
+            chosen = pool[:want]
+            shape = platform.mesh_shape
+            axes = platform.mesh_axes
+        else:
+            # degrade to a 1-D data mesh over what is actually visible
+            chosen = pool
+            shape = (len(pool),)
+            axes = ("data",)
+        arr = np.array(chosen, dtype=object).reshape(shape)
+        return jax.sharding.Mesh(arr, axes)

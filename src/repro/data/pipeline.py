@@ -1,0 +1,98 @@
+"""Deterministic, shardable, restartable data pipeline.
+
+Synthetic token streams (the assignment trains on synthetic data) with the
+properties a production loader needs and that the fault-tolerance layer
+relies on:
+
+  * **deterministic by (seed, step)** — a restarted job replays the exact
+    batch sequence from its checkpointed step; no loader state to persist
+    beyond one integer.
+  * **host-shardable** — each data-parallel host materializes only its
+    slice (`host_slice`), so 1000-node ingestion never funnels through one
+    process.
+  * **straggler-aware** — `skip_hosts` lets the supervisor drop a slow
+    host's slice for a step and rebalance (see ft/straggler.py).
+
+Batches match Model.input_specs: tokens/labels (+ frames / patch_embeds
+stubs for the audio/vlm families).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["DataConfig", "SyntheticStream"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    num_hosts: int = 1
+    host_id: int = 0
+
+
+class SyntheticStream:
+    def __init__(self, model_cfg: ModelConfig, shape: ShapeConfig, data_cfg: DataConfig):
+        self.cfg = model_cfg
+        self.shape = shape
+        self.data_cfg = data_cfg
+        if shape.global_batch % data_cfg.num_hosts:
+            raise ValueError(
+                f"global_batch {shape.global_batch} not divisible by "
+                f"{data_cfg.num_hosts} hosts"
+            )
+        self.per_host = shape.global_batch // data_cfg.num_hosts
+
+    # ------------------------------------------------------------------ #
+    def batch_at(self, step: int, *, host_id: int | None = None) -> dict[str, np.ndarray]:
+        """The (deterministic) batch for `step`, this host's slice."""
+        host = self.data_cfg.host_id if host_id is None else host_id
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.data_cfg.seed, step, host])
+        )
+        cfg, b, s = self.cfg, self.per_host, self.shape.seq_len
+        if cfg.is_enc_dec:
+            return {
+                "frames": rng.standard_normal((b, s, cfg.d_model), dtype=np.float32) * 0.1,
+                "tokens": rng.integers(0, cfg.vocab_size, (b, s), dtype=np.int32),
+                "labels": rng.integers(0, cfg.vocab_size, (b, s), dtype=np.int32),
+            }
+        if cfg.modality == "vision":
+            p = cfg.n_patches
+            st = s - p
+            return {
+                "patch_embeds": rng.standard_normal((b, p, cfg.d_model), dtype=np.float32) * 0.1,
+                "tokens": rng.integers(0, cfg.vocab_size, (b, st), dtype=np.int32),
+                "labels": rng.integers(0, cfg.vocab_size, (b, st), dtype=np.int32),
+            }
+        tokens = rng.integers(0, cfg.vocab_size, (b, s + 1), dtype=np.int32)
+        return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+    def global_batch_at(self, step: int, *, skip_hosts: frozenset[int] = frozenset()):
+        """All hosts' slices concatenated (single-process runs / tests).
+
+        Slices of skipped (straggler) hosts are replaced by the next healthy
+        host's data so the batch shape — and therefore the compiled step —
+        never changes.
+        """
+        healthy = [h for h in range(self.data_cfg.num_hosts) if h not in skip_hosts]
+        if not healthy:
+            raise RuntimeError("all hosts skipped")
+        parts = []
+        for h in range(self.data_cfg.num_hosts):
+            src = h if h in healthy else healthy[h % len(healthy)]
+            parts.append(self.batch_at(step, host_id=src))
+        return {
+            k: np.concatenate([p[k] for p in parts], axis=0) for k in parts[0]
+        }
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,177 @@
+"""Logical-axis -> mesh-axis sharding rules (divisibility-checked).
+
+The schema declares *logical* axes ("heads", "ff", "vocab", "experts", ...);
+the deployment injects the mapping to *mesh* axes.  This is the same
+separation the paper enforces between the hardware-agnostic image and the
+site configuration: the bundle never names a mesh axis.
+
+Rules are an ordered preference list.  For each parameter leaf we walk the
+rules; an assignment is taken iff the logical axis occurs in the leaf, the
+mesh axis (or axis tuple) exists, is unused so far on this leaf, and the
+dimension is divisible by the axis size.  Non-divisible dims simply fall
+through to the next rule — whisper's 8 heads on a 16-way model axis shard
+by head_dim instead, published dims never force padding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.schema import LeafSpec, map_leaves
+
+__all__ = [
+    "ShardingRules",
+    "BASELINE_RULES",
+    "param_specs",
+    "param_shardings",
+    "batch_spec",
+    "cache_specs",
+    "mesh_axis_sizes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Ordered (logical_axis, mesh_axes) preferences.
+
+    mesh_axes is a tuple: all its axes are assigned to the dim together
+    (divisibility over the product), e.g. ("pod", "data") for FSDP storage.
+    """
+
+    rules: tuple[tuple[str, tuple[str, ...]], ...]
+
+    def with_override(self, *pairs: tuple[str, tuple[str, ...]]) -> "ShardingRules":
+        keys = {p[0] for p in pairs}
+        kept = tuple(r for r in self.rules if r[0] not in keys)
+        return ShardingRules(tuple(pairs) + kept)
+
+
+# Paper-faithful baseline: TP on the parallel dims, FSDP storage over the
+# DP axes for the big stacks (experts / embed).
+BASELINE_RULES = ShardingRules(
+    (
+        ("experts", ("data",)),
+        ("heads", ("model",)),
+        ("kv_heads", ("model",)),
+        ("ff", ("model",)),
+        ("vocab", ("model",)),
+        ("ssm_inner", ("model",)),
+        ("ssm_heads", ("model",)),
+        ("head_dim", ("model",)),
+        ("embed", ("pod", "data")),
+    )
+)
+
+
+def mesh_axis_sizes(mesh: jax.sharding.Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _leaf_spec(leaf: LeafSpec, rules: ShardingRules, sizes: dict[str, int]) -> P:
+    assignment: list = [None] * len(leaf.shape)
+    used_mesh: set[str] = set()
+    for logical, mesh_axes in rules.rules:
+        axes = tuple(a for a in mesh_axes if a in sizes)
+        if not axes or any(a in used_mesh for a in axes):
+            continue
+        prod = int(np.prod([sizes[a] for a in axes]))
+        for dim, name in enumerate(leaf.axes):
+            if name != logical or assignment[dim] is not None:
+                continue
+            if leaf.shape[dim] % prod == 0 and prod > 1:
+                assignment[dim] = axes if len(axes) > 1 else axes[0]
+                used_mesh.update(axes)
+            break  # only the first matching dim per rule
+    return P(*assignment)
+
+
+def param_specs(schema: dict, rules: ShardingRules, mesh: jax.sharding.Mesh) -> dict:
+    sizes = mesh_axis_sizes(mesh)
+    return map_leaves(lambda _, s: _leaf_spec(s, rules, sizes), schema)
+
+
+def param_shardings(schema: dict, rules: ShardingRules, mesh: jax.sharding.Mesh) -> dict:
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_specs(schema, rules, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_spec(
+    batch_size: int, mesh: jax.sharding.Mesh,
+    batch_axes: Sequence[str] = ("pod", "data"),
+) -> tuple:
+    """Largest prefix of batch_axes whose product divides batch_size."""
+    sizes = mesh_axis_sizes(mesh)
+    chosen: list[str] = []
+    prod = 1
+    for a in batch_axes:
+        if a not in sizes:
+            continue
+        if batch_size % (prod * sizes[a]) == 0:
+            chosen.append(a)
+            prod *= sizes[a]
+    return tuple(chosen)
+
+
+def cache_specs(cache_tree: dict, batch: int, mesh: jax.sharding.Mesh,
+                *, seq_shard: bool = True) -> dict:
+    """Specs for KV/SSM caches.
+
+    k/v preference order: batch over DP axes; kv_heads over model when
+    divisible, else the SEQUENCE over model (decode attention over an
+    S-sharded cache reduces with a tiny logsumexp psum, whereas a
+    head_dim-sharded cache makes every score einsum contract the sharded
+    dim — measured as multi-GB fp32 all-reduces); head_dim only as the
+    last resort.  Unshardable batch (long_500k B=1) pushes the DP axes
+    onto the sequence too."""
+    sizes = mesh_axis_sizes(mesh)
+    baxes = batch_spec(batch, mesh)
+    m = "model" if "model" in sizes else None
+
+    def spec_for(path: str, x) -> P:
+        shape = x.shape
+        leaf_kind = path.rsplit("/", 1)[-1]
+        if leaf_kind in ("k", "v", "ck", "cv"):      # (nb, B, S, KV, dh)
+            s, kv, dh = shape[2], shape[3], shape[4]
+            head_assign = None
+            dh_assign = None
+            seq_pool: list[str] = []
+            if not baxes:
+                seq_pool += [a for a in ("pod", "data") if a in sizes]
+            if m and kv % sizes[m] == 0:
+                head_assign = m
+            elif m and seq_shard:
+                seq_pool.append(m)
+            # largest prefix of seq_pool whose product divides S
+            seq_axes: list[str] = []
+            prod = 1
+            for a in seq_pool:
+                if s % (prod * sizes[a]) == 0:
+                    seq_axes.append(a)
+                    prod *= sizes[a]
+            if m and head_assign is None and m not in seq_axes and dh % sizes[m] == 0:
+                dh_assign = m
+            seq_assign = tuple(seq_axes) if seq_axes else None
+            return P(None, baxes or None, seq_assign, head_assign, dh_assign)
+        if leaf_kind == "state":                      # (nb, B, H, N, P)
+            h = shape[2]
+            ha = m if (m and h % sizes[m] == 0) else None
+            return P(None, baxes or None, ha, None, None)
+        if leaf_kind == "conv":                       # (nb, B, K-1, Din)
+            din = shape[3]
+            da = m if (m and din % sizes[m] == 0) else None
+            return P(None, baxes or None, None, da)
+        return P()
+
+    out = {}
+    for pk, entry in cache_tree.items():
+        out[pk] = {k: spec_for(f"{pk}/{k}", v) for k, v in entry.items()}
+    return out

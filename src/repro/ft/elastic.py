@@ -1,0 +1,76 @@
+"""Elastic rescaling: re-mesh + reshard-on-restore plans.
+
+Checkpoints record logical layout only (checkpoint/manifest.py), so a
+restart may use ANY device count.  This module picks the new mesh shape
+for a changed world size and produces the sharding function for
+restore_checkpoint — together they are the whole elasticity mechanism:
+
+    plan = rescale_plan(n_devices_now, target_axes)
+    params, step = restore_checkpoint(dir, skeleton,
+                                      sharding_fn=plan.sharding_fn(schema))
+
+Policy: keep the model axis as requested while it divides the device
+count (TP degree is an algorithmic choice); absorb all remaining devices
+into data (and pod) — losing a host costs DP ways, never a re-partition
+of the model math.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.distributed.sharding import ShardingRules, param_specs
+from repro.models.schema import leaf_items
+
+__all__ = ["RescalePlan", "rescale_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
+
+    def build_mesh(self, devices=None) -> jax.sharding.Mesh:
+        devices = list(devices if devices is not None else jax.devices())
+        n = int(np.prod(self.mesh_shape))
+        arr = np.array(devices[:n], dtype=object).reshape(self.mesh_shape)
+        return jax.sharding.Mesh(arr, self.mesh_axes)
+
+    def sharding_fn(self, schema: dict, rules: ShardingRules, devices=None):
+        mesh = self.build_mesh(devices)
+        specs = {p: s for p, s in leaf_items(param_specs(schema, rules, mesh))}
+
+        def fn(path: str, arr):
+            spec = specs.get(path)
+            if spec is None:
+                return None
+            return NamedSharding(mesh, spec)
+
+        return fn
+
+
+def rescale_plan(
+    num_devices: int,
+    *,
+    model: int = 1,
+    pods: int = 1,
+) -> RescalePlan:
+    """Largest data axis that fits: devices = pods * data * model."""
+    while model > 1 and num_devices % model:
+        model //= 2
+    denom = model * pods
+    if num_devices % denom:
+        pods = 1
+        denom = model
+    data = num_devices // denom
+    if data < 1:
+        raise ValueError(f"cannot fit model={model} pods={pods} in {num_devices} devices")
+    if pods > 1:
+        return RescalePlan((pods, data, model), ("pod", "data", "model"))
+    if model > 1:
+        return RescalePlan((data, model), ("data", "model"))
+    return RescalePlan((data,), ("data",))

@@ -1,0 +1,67 @@
+"""Straggler detection + mitigation policy.
+
+At thousands of hosts the slowest machine sets the step time.  The
+detector keeps an EMA of per-host step durations and flags hosts that
+exceed `threshold` x the fleet median for `patience` consecutive steps.
+Mitigation is a *plan*, applied by the training loop:
+
+  * ``redistribute`` — the data pipeline re-sources the straggler's batch
+    slice from healthy hosts (SyntheticStream.global_batch_at(skip_hosts=…))
+    so the compiled step shape never changes;
+  * ``evict`` — persistent stragglers are handed to the supervisor, which
+    treats them like failures (restart / elastic downscale).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+import numpy as np
+
+__all__ = ["StragglerConfig", "StragglerDetector", "MitigationPlan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerConfig:
+    threshold: float = 2.0       # x median
+    patience: int = 3            # consecutive flagged steps before action
+    evict_after: int = 10        # flagged steps before eviction
+    ema: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class MitigationPlan:
+    skip_hosts: frozenset[int]
+    evict_hosts: frozenset[int]
+
+    @property
+    def clean(self) -> bool:
+        return not self.skip_hosts and not self.evict_hosts
+
+
+class StragglerDetector:
+    def __init__(self, num_hosts: int, cfg: StragglerConfig = StragglerConfig()):
+        self.num_hosts = num_hosts
+        self.cfg = cfg
+        self._ema: dict[int, float] = {}
+        self._flags: dict[int, int] = defaultdict(int)
+
+    def observe(self, durations: dict[int, float]) -> MitigationPlan:
+        """Feed one step's per-host durations; get the mitigation plan."""
+        for h, d in durations.items():
+            prev = self._ema.get(h, d)
+            self._ema[h] = self.cfg.ema * d + (1 - self.cfg.ema) * prev
+        med = float(np.median(list(self._ema.values())))
+        skip, evict = set(), set()
+        for h in range(self.num_hosts):
+            ema = self._ema.get(h)
+            if ema is not None and med > 0 and ema > self.cfg.threshold * med:
+                self._flags[h] += 1
+            else:
+                self._flags[h] = 0
+            if self._flags[h] >= self.cfg.evict_after:
+                evict.add(h)
+            elif self._flags[h] >= self.cfg.patience:
+                skip.add(h)
+        return MitigationPlan(frozenset(skip), frozenset(evict))

@@ -1,0 +1,7 @@
+# Site-optimized compute layer: Pallas TPU kernels (+ jnp oracles) for the
+# hot spots the framework's op-substitution runtime swaps in — flash
+# attention, fused rmsnorm, mamba2 SSD scan, grouped expert matmul.
+
+from repro.kernels.ops import ABIS, OP_NAMES, default_binding, register_all
+
+__all__ = ["ABIS", "OP_NAMES", "default_binding", "register_all"]

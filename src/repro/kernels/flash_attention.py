@@ -1,0 +1,160 @@
+"""Flash attention (causal, GQA) — Pallas TPU kernel.
+
+TPU adaptation of the flash algorithm: the grid is (batch, q_heads,
+q_blocks, kv_blocks) with the kv dimension minor — TPU grids execute the
+minor dimension sequentially on a core, so the running softmax state
+(m, l, acc) lives in VMEM scratch and is carried across kv steps without
+HBM traffic.  Block shapes default to (128, head_dim): MXU-aligned and
+small enough that q/k/v tiles + scratch fit VMEM for head_dim <= 256.
+
+Causal blocks strictly above the diagonal are skipped with pl.when — for
+long sequences this halves the executed grid.  An optional kv_len scalar
+(SMEM) masks unwritten cache slots, which makes the same kernel serve
+decode (Sq == 1) against a partially filled cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    kvlen_ref,      # SMEM (1,) int32
+    q_ref,          # (1, bq, 1, dh)
+    k_ref,          # (1, bk, 1, dh)
+    v_ref,          # (1, bk, 1, dh)
+    o_ref,          # (1, bq, 1, dh)
+    m_ref,          # scratch (bq,)
+    l_ref,          # scratch (bq,)
+    acc_ref,        # scratch (bq, dh)
+    *,
+    causal: bool,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    kv_blocks: int,
+    q_offset: int,  # sk - sq, aligns causal diagonal for prefill
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # Skip fully-masked blocks (strictly above the causal diagonal).
+    run = jnp.bool_(True)
+    if causal:
+        run = (ik * block_k) <= (iq * block_q + q_offset + block_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        mask = k_pos < kvlen_ref[0]
+        if causal:
+            mask = mask & (k_pos <= q_pos + q_offset)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,                  # (B, Sq, H, Dh)
+    k: jnp.ndarray,                  # (B, Sk, KV, Dh)
+    v: jnp.ndarray,
+    kv_len: jnp.ndarray | None = None,   # () int32; None -> Sk
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0, f"GQA requires H % KV == 0, got {h} % {kv}"
+    group = h // kv
+    scale = dh ** -0.5 if scale is None else scale
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    q_blocks = pl.cdiv(sq, block_q)
+    kv_blocks = pl.cdiv(sk, block_k)
+    kv_len = jnp.asarray(sk if kv_len is None else kv_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        kv_blocks=kv_blocks,
+        q_offset=sk - sq,
+    )
+    grid = (b, h, q_blocks, kv_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, block_q, 1, dh), lambda bi, hi, iq, ik, kvl: (bi, iq, hi, 0)
+                ),
+                pl.BlockSpec(
+                    (1, block_k, 1, dh),
+                    lambda bi, hi, iq, ik, kvl: (bi, ik, hi // group, 0),
+                ),
+                pl.BlockSpec(
+                    (1, block_k, 1, dh),
+                    lambda bi, hi, iq, ik, kvl: (bi, ik, hi // group, 0),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, block_q, 1, dh), lambda bi, hi, iq, ik, kvl: (bi, iq, hi, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((block_q,), jnp.float32),
+                pltpu.VMEM((block_q,), jnp.float32),
+                pltpu.VMEM((block_q, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, dh), q.dtype),
+        interpret=interpret,
+    )(kv_len, q, k, v)
+    return out

@@ -1,0 +1,125 @@
+"""Pure-jnp oracle for (GQA) attention — the portable 'MPICH' of attention.
+
+Two evaluation strategies, numerically identical:
+  * plain — materialized (Sq, Sk) scores; small sequences;
+  * chunked — online-softmax over KV chunks (flash algorithm in jnp, each
+    chunk rematerialized in backward): O(Sq * chunk) live memory, which is
+    what keeps the 32k prefill cells inside HBM even on the reference path.
+
+Shapes:
+  q: (B, Sq, H,  Dh)
+  k: (B, Sk, KV, Dh)
+  v: (B, Sk, KV, Dh)     with H % KV == 0 (GQA group = H // KV)
+Returns (B, Sq, H, Dh).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "decode_attention_ref"]
+
+_NEG = -1e30
+
+
+def _plain(q, k, v, causal, scale):
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, sq, kv, group, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k).astype(jnp.float32)
+    if causal:
+        sk = k.shape[1]
+        # causal alignment for prefill: query i attends keys <= i + (sk - sq)
+        qi = jnp.arange(sq)[:, None] + (sk - sq)
+        ki = jnp.arange(sk)[None, :]
+        scores = jnp.where(qi >= ki, scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _chunked(q, k, v, causal, scale, chunk, unroll=False):
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    nc = sk // chunk
+    qg = (q.reshape(b, sq, kv, group, dh) * scale).astype(jnp.float32)
+    kc = k.reshape(b, nc, chunk, kv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, kv, dh).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(sq) + (sk - sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kch, vch, ci = xs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kch.astype(jnp.float32))
+        if causal:
+            k_pos = ci * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None, None], s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vch.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    body = jax.checkpoint(body)   # flash backward: recompute chunk scores
+    m0 = jnp.full((b, kv, group, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, kv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, group, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(nc)),
+        unroll=nc if unroll else 1,   # dry-run: cost_analysis must see all
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    chunk_kv: int | None = None,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    scale = q.shape[-1] ** -0.5 if scale is None else scale
+    sk = k.shape[1]
+    if chunk_kv and sk > chunk_kv and sk % chunk_kv == 0:
+        return _chunked(q, k, v, causal, scale, chunk_kv, unroll=unroll)
+    return _plain(q, k, v, causal, scale)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Single-token attention against a (possibly longer) cache.
+
+    q: (B, 1, H, Dh); caches: (B, Smax, KV, Dh); pos: () int32 — the index
+    of the new token; keys at positions > pos are masked (cache slots not
+    yet written).
+    """
+    b, _, h, dh = q.shape
+    kv = k_cache.shape[2]
+    group = h // kv
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(b, kv, group, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg * scale, k_cache).astype(jnp.float32)
+    valid = jnp.arange(k_cache.shape[1])[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, dh)

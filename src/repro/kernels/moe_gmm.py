@@ -1,0 +1,110 @@
+"""Grouped (ragged) expert matmul — Pallas TPU kernel (MegaBlocks-style).
+
+The host wrapper pads each expert's token group to a multiple of block_m
+(so every m-tile belongs to exactly one expert), builds the tile->expert
+map, and prefetches it as a scalar array: the kernel's BlockSpec index_map
+reads tile_expert[t] to fetch the right expert's weight tile — dynamic
+expert selection with fully static shapes, the TPU-native equivalent of
+CUDA gather-scatter grouped GEMM.
+
+Grid: (num_tiles_m, F/block_n); each step is a (block_m, D) x (D, block_n)
+MXU matmul.  VMEM per step: block_m*D + D*block_n + block_m*block_n fp32
+(~4.5 MB at D=8192, 128x128 tiles); for larger D a k-loop would be added.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["moe_gmm", "padded_layout"]
+
+
+def _gmm_kernel(te_ref, x_ref, w_ref, o_ref):
+    del te_ref  # consumed by the index_maps
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32),
+        w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def padded_layout(group_sizes: jnp.ndarray, total: int, block_m: int):
+    """Static-shape padded layout for ragged groups.
+
+    Returns (row_dest (T,), tile_expert (num_tiles,), padded_rows) where
+    row_dest[i] is the destination row of sorted token i in the padded
+    buffer and tile_expert[t] is the owning expert of m-tile t.  padded_rows
+    is the static worst case: total + E * block_m.
+    """
+    e = group_sizes.shape[0]
+    padded_sizes = ((group_sizes + block_m - 1) // block_m) * block_m
+    group_pad_starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(padded_sizes)[:-1].astype(jnp.int32)]
+    )
+    group_starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes)[:-1].astype(jnp.int32)]
+    )
+    # expert id of each sorted row
+    row_expert = jnp.sum(
+        jnp.arange(total)[:, None] >= group_starts[None, :], axis=1
+    ).astype(jnp.int32) - 1
+    row_dest = (
+        group_pad_starts[row_expert]
+        + jnp.arange(total, dtype=jnp.int32)
+        - group_starts[row_expert]
+    )
+    padded_rows = total + e * block_m  # static upper bound
+    tiles = padded_rows // block_m
+    tile_start = jnp.arange(tiles, dtype=jnp.int32) * block_m
+    pad_ends = jnp.cumsum(padded_sizes).astype(jnp.int32)
+    tile_expert = jnp.sum(
+        tile_start[:, None] >= pad_ends[None, :], axis=1
+    ).astype(jnp.int32)
+    tile_expert = jnp.minimum(tile_expert, e - 1)  # trailing dummy tiles
+    return row_dest, tile_expert, padded_rows
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def moe_gmm(
+    x: jnp.ndarray,              # (T, D) sorted by expert
+    w: jnp.ndarray,              # (E, D, F)
+    group_sizes: jnp.ndarray,    # (E,) int32, sum == T
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    t, d = x.shape
+    e, _, f = w.shape
+    block_n = min(block_n, f)
+    block_m_eff = min(block_m, max(t, 8))
+
+    row_dest, tile_expert, padded_rows = padded_layout(group_sizes, t, block_m_eff)
+    x_pad = jnp.zeros((padded_rows, d), x.dtype).at[row_dest].set(x)
+    tiles = padded_rows // block_m_eff
+
+    out_pad = pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(tiles, pl.cdiv(f, block_n)),
+            in_specs=[
+                pl.BlockSpec((block_m_eff, d), lambda ti, ni, te_ref: (ti, 0)),
+                pl.BlockSpec(
+                    (1, d, block_n), lambda ti, ni, te_ref: (te_ref[ti], 0, ni)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (block_m_eff, block_n), lambda ti, ni, te_ref: (ti, ni)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((padded_rows, f), x.dtype),
+        interpret=interpret,
+    )(tile_expert, x_pad, w)
+    return out_pad[row_dest]

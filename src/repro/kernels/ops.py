@@ -1,0 +1,175 @@
+"""Op declarations + registration: the site's "library inventory".
+
+Declares the ABI for every swappable logical op, registers the portable
+reference implementation (what the Bundle ships) and the Pallas TPU
+implementation (what the site bind-mounts in, gated on the
+``pallas_kernels`` platform feature — absent on CPU hosts, so deployment
+there keeps the references, exactly like Shifter on a system without the
+vendor stack).
+"""
+
+from __future__ import annotations
+
+import functools
+
+from repro.core.abi import AbiString
+from repro.core.registry import ImplKind, OpImpl, OpRegistry, global_registry
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention_ref import attention_ref, decode_attention_ref
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.moe_gmm_ref import moe_gmm_ref
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rmsnorm_ref import rmsnorm_ref
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan_ref import ssd_scan_ref
+
+__all__ = ["ABIS", "OP_NAMES", "register_all", "default_binding"]
+
+# Canonical signatures: the structural part of the ABI string.  Changing a
+# signature (or the semantic major version) makes old native kernels
+# un-swappable — the registry will refuse, like Shifter on a libtool
+# mismatch.
+_SIGS = {
+    "rmsnorm": {
+        "args": ["x:[*,d]", "weight:[d]"],
+        "kwargs": ["eps:float"],
+        "semantics": "y = x/rms(x)*w, fp32 accumulation",
+    },
+    "attention": {
+        "args": ["q:[b,sq,h,dh]", "k:[b,sk,kv,dh]", "v:[b,sk,kv,dh]"],
+        "kwargs": ["causal:bool", "scale:float?"],
+        "semantics": "softmax(qk^T*scale+causal_mask)v, GQA h%kv==0, fp32 softmax",
+    },
+    "decode_attention": {
+        "args": ["q:[b,1,h,dh]", "k_cache:[b,smax,kv,dh]", "v_cache:[b,smax,kv,dh]", "pos:i32"],
+        "kwargs": ["scale:float?"],
+        "semantics": "single-token attention, cache slots > pos masked",
+    },
+    "ssd_scan": {
+        "args": ["x:[b,s,h,p]", "dt:[b,s,h]", "A:[h]", "B:[b,s,g,n]", "C:[b,s,g,n]"],
+        "kwargs": ["chunk:int"],
+        "semantics": "mamba2 SSD; returns (y, final_state[b,h,n,p] fp32)",
+    },
+    "moe_gmm": {
+        "args": ["x:[t,d] sorted-by-expert", "w:[e,d,f]", "group_sizes:[e]"],
+        "kwargs": [],
+        "semantics": ("per-group matmul, groups partition rows of x; "
+                      "capacity-truncated baseline, dropless native"),
+    },
+}
+
+ABIS: dict[str, AbiString] = {
+    name: AbiString.make(name, sig, major=1, minor=0) for name, sig in _SIGS.items()
+}
+OP_NAMES: tuple[str, ...] = tuple(sorted(ABIS))
+
+
+# -- native call-convention adapters ----------------------------------------
+def _native_attention(q, k, v, *, causal=True, scale=None, interpret=False):
+    return flash_attention(q, k, v, causal=causal, scale=scale,
+                           interpret=interpret)
+
+
+def _native_decode_attention(q, k_cache, v_cache, pos, *, scale=None,
+                             interpret=False):
+    # decode = flash with Sq=1 over the written prefix of the cache
+    return flash_attention(
+        q, k_cache, v_cache, kv_len=pos + 1, causal=False, scale=scale,
+        interpret=interpret,
+    )
+
+
+def _ref_decode_attention(q, k_cache, v_cache, pos, *, scale=None):
+    return decode_attention_ref(q, k_cache, v_cache, pos, scale=scale)
+
+
+def _ref_attention(q, k, v, *, causal=True, scale=None):
+    # chunked (flash-in-jnp) automatically above 2k keys: same math, O(S)
+    # live memory — the portable reference stays deployable at 32k.
+    chunk = 1024 if k.shape[1] > 2048 else None
+    return attention_ref(q, k, v, causal=causal, scale=scale, chunk_kv=chunk)
+
+
+_REFS = {
+    "rmsnorm": rmsnorm_ref,
+    "attention": _ref_attention,
+    "decode_attention": _ref_decode_attention,
+    "ssd_scan": ssd_scan_ref,
+    "moe_gmm": moe_gmm_ref,
+}
+
+_NATIVES = {
+    "rmsnorm": functools.partial(rmsnorm, interpret=False),
+    "attention": _native_attention,
+    "decode_attention": _native_decode_attention,
+    "ssd_scan": functools.partial(ssd_scan, interpret=False),
+    "moe_gmm": functools.partial(moe_gmm, interpret=False),
+}
+
+# interpret-mode variants: the Pallas kernel body executed by the HLO
+# interpreter — numerically the real kernel, bindable on CPU simulation
+# hosts (platform feature "pallas_interpret").
+_NATIVES_INTERPRET = {
+    "rmsnorm": functools.partial(rmsnorm, interpret=True),
+    "attention": functools.partial(_native_attention, interpret=True),
+    "decode_attention": functools.partial(_native_decode_attention, interpret=True),
+    "ssd_scan": functools.partial(ssd_scan, interpret=True),
+    "moe_gmm": functools.partial(moe_gmm, interpret=True),
+}
+
+_registered: set[int] = set()
+
+
+def register_all(registry: OpRegistry | None = None) -> OpRegistry:
+    """Populate a registry with every op (idempotent per registry)."""
+    reg = registry if registry is not None else global_registry
+    if id(reg) in _registered and reg is global_registry:
+        return reg
+    for name in OP_NAMES:
+        reg.declare(ABIS[name])
+        reg.register(
+            OpImpl(abi=ABIS[name], kind=ImplKind.REFERENCE, fn=_REFS[name],
+                   provider="jnp-ref")
+        )
+        reg.register(
+            OpImpl(abi=ABIS[name], kind=ImplKind.NATIVE, fn=_NATIVES[name],
+                   requires_feature="pallas_kernels",
+                   requires_device_kind="tpu", provider="pallas-tpu")
+        )
+        reg.register(
+            OpImpl(abi=ABIS[name], kind=ImplKind.NATIVE,
+                   fn=_NATIVES_INTERPRET[name],
+                   requires_feature="pallas_interpret",
+                   provider="pallas-interpret")
+        )
+    _registered.add(id(reg))
+    return reg
+
+
+def default_binding():
+    """Reference-only binding for code running outside a Runtime (smoke
+    tests, oracles).  Uses the real registry path with swap disabled."""
+    from repro.core.platform import LAPTOP
+
+    reg = register_all()
+    return reg.bind(OP_NAMES, LAPTOP, native=False, freeze=False)
+
+
+def measurement_binding():
+    """Dry-run cost binding: identical math to the references, but with
+    every internal lax.scan UNROLLED — XLA's cost_analysis counts a while
+    body once regardless of trip count, so rolled chunk loops (chunked
+    attention, SSD inter-chunk scan) silently undercount FLOPs/bytes."""
+
+    def attention_u(q, k, v, *, causal=True, scale=None):
+        chunk = 1024 if k.shape[1] > 2048 else None
+        return attention_ref(q, k, v, causal=causal, scale=scale,
+                             chunk_kv=chunk, unroll=True)
+
+    def ssd_u(x, dt, A, Bm, Cm, *, chunk=128):
+        return ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk, unroll=True)
+
+    table = dict(default_binding())
+    table["attention"] = attention_u
+    table["ssd_scan"] = ssd_u
+    return table

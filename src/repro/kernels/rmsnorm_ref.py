@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for RMSNorm."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm_ref"]
+
+
+def rmsnorm_ref(x: jnp.ndarray, weight: jnp.ndarray, *, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)

@@ -1,0 +1,93 @@
+"""Pure-jnp oracle for the Mamba-2 SSD chunked scan (arXiv:2405.21060).
+
+Recurrence (per batch b, head h):
+    state_t = exp(dt_t * A_h) * state_{t-1} + dt_t * B_t x_t^T
+    y_t     = C_t . state_t
+
+Chunked 'state-space duality' evaluation: intra-chunk term is a masked
+attention-like matmul, inter-chunk term is a scan over chunk states —
+this is also exactly the blocking the Pallas kernel uses on TPU.
+
+Shapes:
+  x:  (B, S, H, P)   dt: (B, S, H)   A: (H,)  (A < 0)
+  Bm: (B, S, G, N)   Cm: (B, S, G, N)   (H % G == 0)
+Returns (y (B,S,H,P), final_state (B,H,N,P)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_scan_ref", "ssd_decode_step_ref"]
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, *, chunk: int = 128, unroll: bool = False):
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    nc = s // chunk
+    xc = xf.reshape(b, nc, chunk, h, p)
+    dtc = dtf.reshape(b, nc, chunk, h)
+    Bc = Bh.reshape(b, nc, chunk, h, n)
+    Cc = Ch.reshape(b, nc, chunk, h, n)
+
+    dA = dtc * A.astype(jnp.float32)              # log-decay per step (<0)
+    dA_cum = jnp.cumsum(dA, axis=2)               # inclusive
+
+    # -- intra-chunk (the 'duality' attention block) -------------------------
+    diff = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]   # (b,c,i,j,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # mask BEFORE exp: masked entries have diff > 0 and may overflow to inf,
+    # which poisons the backward (inf * 0 = nan in the where-grad).
+    decay = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc)
+    M = scores * decay * dtc[:, :, None, :, :]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # -- chunk states ---------------------------------------------------------
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)        # (b,c,q,h)
+    weighted_B = (decay_to_end * dtc)[..., None] * Bc            # (b,c,q,h,n)
+    chunk_states = jnp.einsum("bcqhn,bcqhp->bchnp", weighted_B, xc)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                   # (b,c,h)
+
+    # -- inter-chunk recurrence ------------------------------------------------
+    def step(state, inp):
+        cs, cd = inp
+        new = state * cd[:, :, None, None] + cs
+        return new, state                                        # emit entering state
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final, states_in = jax.lax.scan(
+        step, init, (chunk_states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+        unroll=nc if unroll else 1,
+    )
+    states_in = states_in.swapaxes(0, 1)                          # (b,c,h,n,p)
+
+    y_inter = jnp.einsum(
+        "bcihn,bchnp->bcihp", Cc * jnp.exp(dA_cum)[..., None], states_in
+    )
+    y = (y_diag + y_inter).reshape(b, s, h, p).astype(x.dtype)
+    return y, final.astype(jnp.float32)
+
+
+def ssd_decode_step_ref(x, dt, A, Bm, Cm, state):
+    """One-token state update.  x: (B,H,P), dt: (B,H), Bm/Cm: (B,G,N),
+    state: (B,H,N,P).  Returns (y (B,H,P), new_state)."""
+    b, h, p = x.shape
+    g, n = Bm.shape[1], Bm.shape[2]
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (B,H)
+    contrib = (dt.astype(jnp.float32)[..., None, None]
+               * Bh[..., :, None] * x.astype(jnp.float32)[..., None, :])  # (B,H,N,P)
+    new_state = state * dA[..., None, None] + contrib
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,9 @@
+"""Launchers: production mesh, dry-run, training and serving drivers.
+
+NOTE: repro.launch.dryrun must be imported only in a fresh process (it
+sets XLA_FLAGS for 512 host devices before importing jax).
+"""
+
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

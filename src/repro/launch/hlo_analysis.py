@@ -1,0 +1,205 @@
+"""Compiled-HLO analysis: collective bytes, memory stats, roofline terms.
+
+The dry-run's "profiler": on CPU there is no wall-clock TPU trace, so the
+roofline terms are derived structurally from the compiled artifact —
+cost_analysis() for FLOPs/bytes, and the post-SPMD HLO text for the
+collective schedule (op kinds x operand bytes), per the assignment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+from repro.core.platform import HardwareSpec, TPU_V5E
+
+__all__ = [
+    "collective_stats",
+    "memory_stats",
+    "cost_stats",
+    "RooflineTerms",
+    "roofline_terms",
+]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "  %x = bf16[16,512]{1,0} all-reduce(%y), replica_groups=..." — in
+# post-optimization HLO the operands are bare refs, so operand bytes are
+# derived from the RESULT shape and the replica group size.
+_OP_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9_]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ARR_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_SET_RE.search(line)
+    if m:
+        ids = [t for t in m.group(1).split(",") if t.strip()]
+        return max(len(ids), 1)
+    return 1
+
+
+def collective_stats(hlo_text: str) -> dict[str, Any]:
+    """Per-device operand bytes of every collective in the compiled module.
+
+    operand bytes by kind (result shape -> operand):
+      all-reduce / all-to-all / collective-permute : operand == result
+      all-gather                                   : operand == result / g
+      reduce-scatter                               : operand == result * g
+    wire bytes per device use ring-schedule factors — the quantity the
+    roofline collective term is built from.
+    """
+    bytes_by_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    wire_by_kind: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    count_by_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        if m.group("start") and kind in ("all-gather",):
+            # -start result tuple carries (operand, result); take the last
+            shapes = _SHAPE_RE.findall(m.group("result"))
+            shapes = shapes[-1:]
+        else:
+            shapes = _SHAPE_RE.findall(m.group("result"))
+        result_bytes = sum(_shape_bytes(d, s) for d, s in shapes)
+        g = _group_size(line)
+        if kind == "all-gather":
+            operand = result_bytes // max(g, 1)
+            wire = operand * (g - 1)                    # receives (g-1) shards
+        elif kind == "reduce-scatter":
+            operand = result_bytes * g
+            wire = result_bytes * (g - 1)               # sends (g-1) shards
+        elif kind == "all-reduce":
+            operand = result_bytes
+            wire = 2.0 * result_bytes * (g - 1) / max(g, 1)   # RS + AG ring
+        else:  # all-to-all, collective-permute
+            operand = result_bytes
+            wire = result_bytes * (g - 1) / max(g, 1) if kind == "all-to-all" else result_bytes
+        bytes_by_kind[kind] += operand
+        wire_by_kind[kind] += wire
+        count_by_kind[kind] += 1
+    return {
+        "bytes_by_kind": bytes_by_kind,
+        "wire_by_kind": wire_by_kind,
+        "count_by_kind": count_by_kind,
+        "total_bytes": sum(bytes_by_kind.values()),
+        "total_wire_bytes": float(sum(wire_by_kind.values())),
+        "total_count": sum(count_by_kind.values()),
+    }
+
+
+def memory_stats(compiled) -> dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    fields = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    out = {f: int(getattr(ma, f, 0)) for f in fields}
+    out["peak_bytes_estimate"] = (
+        out["argument_size_in_bytes"]
+        + out["output_size_in_bytes"]
+        + out["temp_size_in_bytes"]
+        - out["alias_size_in_bytes"]
+    )
+    return out
+
+
+def cost_stats(compiled) -> dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict[str, Any]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.step_time_lower_bound_s,
+        }
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    chips: int,
+    hw: HardwareSpec = TPU_V5E,
+) -> RooflineTerms:
+    """Per-assignment formulae (all quantities per device / per chip):
+
+        compute    = FLOPs / peak_FLOP/s
+        memory     = HBM bytes / HBM bw
+        collective = collective bytes / ICI link bw
+    """
+    return RooflineTerms(
+        compute_s=flops_per_device / hw.peak_flops_bf16,
+        memory_s=bytes_per_device / hw.hbm_bandwidth,
+        collective_s=collective_bytes_per_device / hw.ici_bandwidth,
+        chips=chips,
+    )

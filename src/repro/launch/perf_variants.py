@@ -1,0 +1,34 @@
+"""Named sharding-rule variants for the §Perf hillclimb.
+
+Each variant is a hypothesis about the dominant roofline term; dryrun.py
+selects one with --rules and records the before/after in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from repro.distributed.sharding import BASELINE_RULES, ShardingRules
+
+__all__ = ["get_rules", "VARIANTS"]
+
+# baseline: TP on parallel dims, FSDP storage over (pod, data) for embed,
+# experts over data.
+VARIANTS: dict[str, ShardingRules] = {
+    "baseline": BASELINE_RULES,
+    # no FSDP: replicate dense weights across DP (memory-hungry; isolates the
+    # cost of per-layer FSDP all-gathers)
+    "no_fsdp": ShardingRules(
+        tuple(r for r in BASELINE_RULES.rules if r[0] not in ("embed",))
+    ),
+    # FSDP over data only (pod axis replicated — cheaper cross-pod traffic,
+    # more memory per chip)
+    "fsdp_data_only": BASELINE_RULES.with_override(("embed", ("data",))),
+    # experts sharded over (pod, data) too: halves expert storage per chip in
+    # multi-pod at the cost of cross-pod gathers
+    "experts_pod_data": BASELINE_RULES.with_override(("experts", ("pod", "data"))),
+}
+
+
+def get_rules(name: str) -> ShardingRules:
+    if name not in VARIANTS:
+        raise KeyError(f"unknown rules variant {name!r}; known: {sorted(VARIANTS)}")
+    return VARIANTS[name]

@@ -1,0 +1,113 @@
+"""Roofline report generator: experiments/dryrun/*.json -> markdown tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline_report [--dir experiments/dryrun]
+      [--label baseline] [--mesh single|multi|both]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+__all__ = ["load_cells", "render_table", "main"]
+
+
+def load_cells(directory: Path, label: str | None = None,
+               mesh: str | None = None) -> list[dict]:
+    cells = []
+    for f in sorted(Path(directory).glob("*.json")):
+        r = json.loads(f.read_text())
+        if label and r.get("label") != label:
+            continue
+        if mesh == "single" and r.get("mesh") != "16x16":
+            continue
+        if mesh == "multi" and r.get("mesh") != "2x16x16":
+            continue
+        cells.append(r)
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def render_table(cells: list[dict]) -> str:
+    head = ("| arch | shape | mesh | status | compute | memory | collective | "
+            "bound | useful | temp/dev | fits 16G |\n"
+            "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in sorted(cells, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        if r["status"] == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP "
+                f"| — | — | — | — | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR "
+                f"| — | — | — | — | — | — | — |"
+            )
+            continue
+        ro = r["roofline"]
+        mem = r["memory"]
+        temp = mem.get("temp_size_in_bytes", 0)
+        args = mem.get("argument_size_in_bytes", 0)
+        peak = temp + args
+        useful = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {_fmt_s(ro['compute_s'])} | {_fmt_s(ro['memory_s'])} "
+            f"| {_fmt_s(ro['collective_s'])} | {ro['dominant']} "
+            f"| {useful and round(useful, 3)} | {temp / 1e9:.1f}G "
+            f"| {'yes' if peak <= 16e9 else 'NO'} |"
+        )
+    return head + "\n".join(rows) + "\n"
+
+
+def summarize(cells: list[dict]) -> str:
+    ok = [c for c in cells if c["status"] == "ok"]
+    skip = [c for c in cells if c["status"] == "skipped"]
+    err = [c for c in cells if c["status"] not in ("ok", "skipped")]
+    lines = [
+        f"cells: {len(cells)} total, {len(ok)} ok, {len(skip)} skipped "
+        f"(assignment long_500k rule), {len(err)} errors",
+    ]
+    if ok:
+        by_bound: dict[str, int] = {}
+        for c in ok:
+            by_bound[c["roofline"]["dominant"]] = by_bound.get(
+                c["roofline"]["dominant"], 0) + 1
+        lines.append(f"dominant terms: {by_bound}")
+        worst = min(
+            (c for c in ok if c.get("useful_flops_ratio")),
+            key=lambda c: c["useful_flops_ratio"],
+        )
+        lines.append(
+            f"worst useful-flops ratio: {worst['arch']} x {worst['shape']} "
+            f"({worst['useful_flops_ratio']:.3f})"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--label", default="baseline")
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    args = ap.parse_args(argv)
+    mesh = None if args.mesh == "both" else args.mesh
+    cells = load_cells(Path(args.dir), label=args.label, mesh=mesh)
+    print(render_table(cells))
+    print(summarize(cells))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

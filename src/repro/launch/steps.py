@@ -1,0 +1,224 @@
+"""Step factories: jit-able train/prefill/decode with full shardings.
+
+This is the deployment glue between the portable Model (hardware-agnostic)
+and a concrete mesh: parameter/optimizer/cache/batch shardings all come
+from the injected rules — the Model itself never names a mesh axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (
+    BASELINE_RULES,
+    ShardingRules,
+    batch_spec,
+    cache_specs,
+    param_shardings,
+)
+from repro.models.layers import ParallelCtx
+from repro.models.model import Model, build_model
+from repro.optim import AdamWConfig, OptState, adamw_init, make_optimizer
+
+__all__ = ["DeployOptions", "Deployment", "make_deployment"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeployOptions:
+    remat: str | None = None          # override cfg.remat
+    seq_shard: bool = False           # SP: shard residual seq dim on model
+    rules: ShardingRules = BASELINE_RULES
+    donate: bool = True
+    moe_oracle: bool = False
+    scan_unroll: bool = False         # dry-run: unroll layer scan so
+                                      # cost_analysis sees every layer
+    moe_token_chunks: int = 1         # MoE peak-memory knob (see models/moe)
+    loss_seq_chunks: int = 1          # sequence-chunked cross-entropy
+    grad_accum: int = 1               # microbatches per step (activation
+                                      # peak ~1/M at the cost of an fp32
+                                      # grad accumulator, params x 4B)
+    head_padding: bool = True         # group-aligned TP head padding
+    cache_seq_shard: bool = True      # seq-sharded KV caches (vs head_dim)
+    adamw: AdamWConfig = AdamWConfig()
+
+
+@dataclasses.dataclass
+class Deployment:
+    model: Model
+    mesh: jax.sharding.Mesh
+    shape: ShapeConfig
+    options: DeployOptions
+    param_sharding: Any
+    opt_sharding: Any
+    batch_sharding: Any
+
+    # jitted entry points (built lazily per kind)
+    train_step: Any = None
+    prefill_step: Any = None
+    decode_step: Any = None
+
+    def abstract_state(self):
+        params = self.model.abstract_params()
+        opt = OptState(
+            m=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params),
+            v=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params),
+            count=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        return params, opt
+
+    def abstract_batch(self):
+        return self.model.input_specs(self.shape)
+
+
+def _batch_shardings(model: Model, shape: ShapeConfig, mesh, options) -> Any:
+    baxes = batch_spec(shape.global_batch, mesh)
+    b = baxes or None
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    specs = model.input_specs(shape)
+    out: dict[str, Any] = {}
+    for name, sds in specs.items():
+        if name == "cache":
+            ctree = cache_specs(sds, shape.global_batch, mesh,
+                                seq_shard=options.cache_seq_shard)
+            out["cache"] = jax.tree.map(
+                lambda s: ns(s), ctree, is_leaf=lambda x: isinstance(x, P)
+            )
+        elif name == "pos":
+            out["pos"] = ns(P())
+        else:
+            rank = len(sds.shape)
+            out[name] = ns(P(b, *([None] * (rank - 1))))
+    return out
+
+
+def make_deployment(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: jax.sharding.Mesh,
+    *,
+    options: DeployOptions = DeployOptions(),
+    binding=None,
+) -> Deployment:
+    if options.remat is not None:
+        cfg = dataclasses.replace(cfg, remat=options.remat)
+    axis_names = set(mesh.axis_names)
+    pctx = ParallelCtx(
+        mesh=mesh,
+        batch_axes=tuple(a for a in ("pod", "data") if a in axis_names),
+        model_axis="model" if "model" in axis_names else None,
+        seq_shard=options.seq_shard,
+    )
+    if binding is None and options.scan_unroll:
+        from repro.kernels.ops import measurement_binding
+
+        binding = measurement_binding()
+    model = build_model(
+        cfg, binding=binding, pctx=pctx,
+        moe_oracle=options.moe_oracle, scan_unroll=options.scan_unroll,
+        moe_token_chunks=options.moe_token_chunks,
+        loss_seq_chunks=options.loss_seq_chunks,
+        head_pad_multiple=None if options.head_padding else 1,
+    )
+
+    pspec = param_shardings(model.schema(), options.rules, mesh)
+    opt_sharding = OptState(
+        m=pspec, v=pspec, count=NamedSharding(mesh, P())
+    )
+    bshard = _batch_shardings(model, shape, mesh, options)
+
+    dep = Deployment(
+        model=model,
+        mesh=mesh,
+        shape=shape,
+        options=options,
+        param_sharding=pspec,
+        opt_sharding=opt_sharding,
+        batch_sharding=bshard,
+    )
+
+    scalar = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        init_fn, update_fn = make_optimizer(options.adamw)
+        accum = options.grad_accum
+
+        def train_step(params, opt_state, batch):
+            if accum <= 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    model.loss_fn, has_aux=True
+                )(params, batch)
+            else:
+                micro = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                    batch,
+                )
+
+                def mb(acc, b):
+                    (l, m), g = jax.value_and_grad(
+                        model.loss_fn, has_aux=True
+                    )(params, b)
+                    acc = jax.tree.map(
+                        lambda a, gi: a + gi.astype(jnp.float32), acc, g
+                    )
+                    return acc, (l, m)
+
+                acc0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                grads, (losses, metricss) = jax.lax.scan(
+                    mb, acc0, micro,
+                    unroll=accum if options.scan_unroll else 1,
+                )
+                grads = jax.tree.map(lambda a: a / accum, grads)
+                loss = losses.mean()
+                metrics = jax.tree.map(lambda m: m.mean(), metricss)
+            new_params, new_opt, stats = update_fn(grads, opt_state, params)
+            return new_params, new_opt, {**metrics, **stats}
+
+        dep.train_step = jax.jit(
+            train_step,
+            in_shardings=(pspec, opt_sharding, bshard),
+            out_shardings=(pspec, opt_sharding, None),
+            donate_argnums=(0, 1) if options.donate else (),
+        )
+    elif shape.kind == "prefill":
+        cache_tree = model.abstract_cache(shape.global_batch, shape.seq_len)
+        cshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            cache_specs(cache_tree, shape.global_batch, mesh,
+                        seq_shard=options.cache_seq_shard),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        dep.prefill_step = jax.jit(
+            model.prefill,
+            in_shardings=(pspec, bshard),
+            out_shardings=(scalar_logits(mesh, shape), cshard),
+        )
+    else:  # decode
+        dep.decode_step = jax.jit(
+            model.decode,
+            in_shardings=(
+                pspec,
+                bshard["token"],
+                bshard["cache"],
+                bshard["pos"],
+            ),
+            out_shardings=(scalar_logits(mesh, shape), bshard["cache"]),
+            donate_argnums=(2,) if options.donate else (),
+        )
+    return dep
+
+
+def scalar_logits(mesh, shape: ShapeConfig):
+    """(B, V) logits: batch over DP axes, vocab over model when divisible."""
+    baxes = batch_spec(shape.global_batch, mesh)
+    return NamedSharding(mesh, P(baxes or None, None))

@@ -1,0 +1,6 @@
+"""Composable model zoo (pure JAX; ops injected via the container binding)."""
+
+from repro.models.layers import ParallelCtx
+from repro.models.model import Model, build_model
+
+__all__ = ["Model", "build_model", "ParallelCtx"]

@@ -1,0 +1,278 @@
+"""Composable transformer layers (pure JAX; swappable ops via OpBinding).
+
+Every hardware-sensitive op goes through the container's op binding
+(`binding["attention"]`, `binding["rmsnorm"]`, ...) — the model never
+imports a kernel directly, which is the whole point of the paper's
+portability discipline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import LeafSpec
+
+__all__ = [
+    "ParallelCtx",
+    "rotary",
+    "norm_apply",
+    "norm_schema",
+    "attention_schema",
+    "attention_apply",
+    "attention_decode",
+    "mlp_schema",
+    "mlp_apply",
+    "sinusoidal_positions",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    """Deployment-injected parallel context (None mesh = laptop)."""
+
+    mesh: jax.sharding.Mesh | None = None
+    batch_axes: tuple[str, ...] = ()       # e.g. ("pod", "data")
+    model_axis: str | None = None          # e.g. "model"
+    seq_shard: bool = False                # SP: shard activations' seq dim
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    def constrain(self, x: jnp.ndarray, spec) -> jnp.ndarray:
+        if not self.active:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec)
+        )
+
+    def residual_spec(self, seq_len: int | None = None):
+        P = jax.sharding.PartitionSpec
+        seq = None
+        if self.seq_shard and self.model_axis and seq_len:
+            size = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[
+                self.model_axis
+            ]
+            if seq_len % size == 0:
+                seq = self.model_axis
+        return P(self.batch_axes or None, seq, None)
+
+    def constrain_residual(self, x: jnp.ndarray) -> jnp.ndarray:
+        """SP anchor on the (B, S, D) residual stream (no-op off-mesh or
+        when S doesn't divide, e.g. decode's S=1)."""
+        if not self.active:
+            return x
+        return self.constrain(x, self.residual_spec(x.shape[1]))
+
+    def heads_spec(self, n_heads: int, head_dim: int):
+        """Spec for (B, S, H, Dh) activations: heads on the model axis when
+        divisible, else head_dim — anchors XLA's propagation through the
+        GQA reshapes (without this the partitioner falls back to
+        'involuntary full rematerialization' copies)."""
+        P = jax.sharding.PartitionSpec
+        if not self.active or self.model_axis is None:
+            return None
+        size = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[self.model_axis]
+        if n_heads % size == 0:
+            return P(self.batch_axes or None, None, self.model_axis, None)
+        if head_dim % size == 0:
+            return P(self.batch_axes or None, None, None, self.model_axis)
+        return P(self.batch_axes or None, None, None, None)
+
+    def constrain_heads(self, x: jnp.ndarray) -> jnp.ndarray:
+        spec = self.heads_spec(x.shape[2], x.shape[3])
+        return self.constrain(x, spec) if spec is not None else x
+
+
+# --------------------------------------------------------------------------- #
+# rotary / positional
+# --------------------------------------------------------------------------- #
+def rotary(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[None, :, None] * freqs[None, None, :]
+        ang = ang[:, :, None, :]                    # (1, S, 1, half)
+    else:
+        ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]
+        ang = ang[:, :, None, :]                    # (B, S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, offset: jnp.ndarray | int = 0) -> jnp.ndarray:
+    """Whisper-style sinusoidal embeddings, computed (no parameters)."""
+    half = d // 2
+    pos = jnp.arange(seq, dtype=jnp.float32) + jnp.asarray(offset, jnp.float32)
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+def norm_schema(cfg: ModelConfig, d: int | None = None) -> dict[str, LeafSpec]:
+    d = d or cfg.d_model
+    leaves = {"scale": LeafSpec((d,), ("norm",), init="ones")}
+    if cfg.norm == "layernorm":
+        leaves["bias"] = LeafSpec((d,), ("norm",), init="zeros")
+    return leaves
+
+
+def norm_apply(params, x, cfg: ModelConfig, binding, eps: float = 1e-6):
+    if cfg.norm == "rmsnorm":
+        return binding["rmsnorm"](x, params["scale"], eps=eps)
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+def attention_schema(cfg: ModelConfig, n_heads: int | None = None) -> dict[str, LeafSpec]:
+    d, h, kv, dh = cfg.d_model, n_heads or cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    leaves = {
+        "wq": LeafSpec((d, h, dh), ("embed", "heads", "head_dim"), init="scaled"),
+        "wk": LeafSpec((d, kv, dh), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wv": LeafSpec((d, kv, dh), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wo": LeafSpec((h, dh, d), ("heads", "head_dim", "embed"), init="scaled"),
+    }
+    if cfg.qkv_bias:
+        leaves["bq"] = LeafSpec((h, dh), ("heads", "head_dim"), init="zeros")
+        leaves["bk"] = LeafSpec((kv, dh), ("kv_heads", "head_dim"), init="zeros")
+        leaves["bv"] = LeafSpec((kv, dh), ("kv_heads", "head_dim"), init="zeros")
+    return leaves
+
+
+def attention_apply(
+    params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    binding,
+    *,
+    positions: jnp.ndarray | None = None,
+    causal: bool = True,
+    kv_source: jnp.ndarray | None = None,       # cross-attention input
+    use_rope: bool = True,
+    pctx: "ParallelCtx | None" = None,
+    real_group: tuple[int, int] | None = None,   # (g, g') head padding
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Full-sequence attention (train / prefill).  Returns (out, kv)."""
+    src = x if kv_source is None else kv_source
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if use_rope and positions is not None:
+        q = rotary(q, positions, cfg.rope_theta)
+        k = rotary(k, positions, cfg.rope_theta)
+    if pctx is not None and pctx.active:
+        q = pctx.constrain_heads(q)
+        k = pctx.constrain_heads(k)
+        v = pctx.constrain_heads(v)
+    out = binding["attention"](q, k, v, causal=causal)
+    out = _mask_padded_heads(out, real_group)
+    if pctx is not None and pctx.active:
+        out = pctx.constrain_heads(out)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k, "v": v}
+
+
+def _mask_padded_heads(out: jnp.ndarray, real_group: tuple[int, int] | None):
+    """Zero the outputs of TP-alignment padding heads (slots g..g'-1 of
+    each GQA group), making the padded model numerically identical to the
+    unpadded one (padded slots get zero forward contribution AND zero
+    gradients through this mask)."""
+    if real_group is None:
+        return out
+    g, gp = real_group
+    if g == gp:
+        return out
+    h = out.shape[-2]
+    mask = (jnp.arange(h) % gp) < g
+    return out * mask[:, None].astype(out.dtype)
+
+
+def attention_decode(
+    params,
+    x: jnp.ndarray,                      # (B, 1, D)
+    cache: dict[str, jnp.ndarray],       # k/v: (B, Smax, KV, Dh)
+    pos: jnp.ndarray,                    # () int32 — index of the new token
+    cfg: ModelConfig,
+    binding,
+    *,
+    use_rope: bool = True,
+    cross: bool = False,
+    pctx: "ParallelCtx | None" = None,
+    real_group: tuple[int, int] | None = None,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """One-token attention against the cache; writes the new k/v (self only)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+    if use_rope:
+        q = rotary(q, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+    if pctx is not None and pctx.active:
+        q = pctx.constrain_heads(q)
+    if cross:
+        k_cache, v_cache = cache["k"], cache["v"]
+        cache_len = jnp.asarray(k_cache.shape[1] - 1, jnp.int32)
+        out = binding["decode_attention"](q, k_cache, v_cache, cache_len)
+        new_cache = cache
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if cfg.qkv_bias:
+            k, v = k + params["bk"], v + params["bv"]
+        if use_rope:
+            k = rotary(k, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        out = binding["decode_attention"](q, k_cache, v_cache, pos)
+        new_cache = {"k": k_cache, "v": v_cache}
+    out = _mask_padded_heads(out, real_group)
+    if pctx is not None and pctx.active:
+        out = pctx.constrain_heads(out)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# dense MLP
+# --------------------------------------------------------------------------- #
+def mlp_schema(cfg: ModelConfig, d_ff: int | None = None) -> dict[str, LeafSpec]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    leaves = {
+        "w_in": LeafSpec((d, f), ("embed", "ff"), init="scaled"),
+        "w_out": LeafSpec((f, d), ("ff", "embed"), init="scaled"),
+    }
+    if cfg.activation == "silu_glu":
+        leaves["w_gate"] = LeafSpec((d, f), ("embed", "ff"), init="scaled")
+    return leaves
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    if cfg.activation == "silu_glu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"])

@@ -1,0 +1,546 @@
+"""Model assembly: one composable decoder covers all ten architectures.
+
+The decoder stack is a `lax.scan` over *pattern blocks*: the layer pattern
+repeats with period p = lcm(attn_every, moe_every) (p=1 for homogeneous
+stacks, p=8 for Jamba's [attn, mamba x7] interleave with MoE every 2nd
+layer).  Each position j in the pattern has its own parameter group,
+stacked over num_layers/p — so a qwen2-72b traces ONE layer body, not 80.
+
+Modes:
+  train   — full-sequence forward, cross-entropy loss (labels shifted by
+            the data pipeline), remat per cfg.remat.
+  prefill — full-sequence forward, emits the KV/SSM caches + last logits.
+  decode  — one token against the caches (the decode_32k / long_500k cells).
+
+Modality stubs per assignment: vlm consumes precomputed patch embeddings
+(prepended to token embeddings), audio consumes precomputed frame
+embeddings through a bidirectional encoder (whisper enc-dec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.moe import moe_apply, moe_schema
+from repro.models.schema import LeafSpec, abstract_params, init_params, map_leaves
+from repro.models.ssm import ssm_apply, ssm_decode, ssm_init_cache_shapes, ssm_schema
+
+__all__ = ["Model", "build_model"]
+
+Tree = dict[str, Any]
+
+
+def _stack(tree: Tree, n: int) -> Tree:
+    return map_leaves(
+        lambda _, s: dataclasses.replace(s, shape=(n,) + s.shape, axes=("layers",) + s.axes),
+        tree,
+    )
+
+
+class Model:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        binding=None,
+        pctx: L.ParallelCtx | None = None,
+        *,
+        moe_oracle: bool = False,
+        scan_unroll: bool = False,
+        head_pad_multiple: int | None = None,
+        moe_token_chunks: int = 1,
+        loss_seq_chunks: int = 1,
+    ):
+        if binding is None:
+            from repro.kernels.ops import default_binding
+
+            binding = default_binding()
+        self.cfg = cfg
+        self.binding = binding
+        self.pctx = pctx or L.ParallelCtx()
+        self.moe_oracle = moe_oracle
+        # dry-run sets scan_unroll: XLA cost_analysis does not multiply
+        # while-loop bodies by trip count, so the roofline pass unrolls.
+        self.scan_unroll = scan_unroll
+        # Megatron-style vocab padding: embedding/head tables are padded to
+        # a multiple of 128 so the vocab dim shards evenly on any assigned
+        # mesh axis; padded logit columns are masked to -inf.  The model's
+        # *interface* vocab (token ids, labels) is the published size.
+        self.padded_vocab = -(-cfg.vocab_size // 128) * 128
+        # Group-aligned head padding: when num_heads doesn't divide the TP
+        # degree, XLA falls back to head_dim sharding and every score
+        # einsum contracts the sharded dim -> multi-GB all-reduces per
+        # attention (measured: 10.7 GB fp32 ARs on qwen2.5's 40 heads @
+        # TP16).  We pad the GQA *group* width g -> g' (smallest g' >= g
+        # with KV*g' % tp == 0), keeping the q-head -> kv-head mapping
+        # h // g' exact; padded slots are zero-init and output-masked, so
+        # the padded model is numerically identical to the unpadded one.
+        tp = head_pad_multiple
+        if tp is None and self.pctx.active and self.pctx.model_axis:
+            tp = dict(zip(self.pctx.mesh.axis_names,
+                          self.pctx.mesh.devices.shape))[self.pctx.model_axis]
+        tp = tp or 1
+        self.q_group = (cfg.num_heads // cfg.num_kv_heads) if cfg.num_kv_heads else 0
+        gp = self.q_group
+        if cfg.num_heads and cfg.num_heads % tp:
+            while gp * cfg.num_kv_heads % tp:
+                gp += 1
+        self.q_group_padded = gp
+        self.padded_heads = gp * cfg.num_kv_heads if cfg.num_kv_heads else 0
+        self.moe_token_chunks = moe_token_chunks
+        self.loss_seq_chunks = loss_seq_chunks
+        self.use_rope = cfg.family != "audio"
+        p = 1
+        if cfg.family == "hybrid":
+            p = cfg.attn_every
+        if cfg.num_experts and cfg.moe_every > 1:
+            import math
+
+            p = math.lcm(p, cfg.moe_every)
+        assert cfg.num_layers % p == 0, (cfg.num_layers, p)
+        self.period = p
+        self.num_blocks = cfg.num_layers // p
+
+    # ------------------------------------------------------------------ #
+    # schema
+    # ------------------------------------------------------------------ #
+    def _layer_schema(self, j: int) -> Tree:
+        cfg = self.cfg
+        sch: Tree = {"pre_norm": L.norm_schema(cfg)}
+        if cfg.is_attn_layer(j):
+            sch["attn"] = L.attention_schema(cfg, n_heads=self.padded_heads)
+        else:
+            sch["ssm"] = ssm_schema(cfg)
+        if cfg.is_enc_dec:
+            sch["cross_norm"] = L.norm_schema(cfg)
+            sch["cross_attn"] = L.attention_schema(cfg, n_heads=self.padded_heads)
+        if cfg.d_ff or cfg.num_experts:
+            sch["post_norm"] = L.norm_schema(cfg)
+            if cfg.is_moe_layer(j):
+                sch["moe"] = moe_schema(cfg)
+            elif cfg.d_ff:
+                sch["mlp"] = L.mlp_schema(cfg)
+        return sch
+
+    def schema(self) -> Tree:
+        cfg = self.cfg
+        sch: Tree = {
+            "embed": {
+                "tok": LeafSpec(
+                    (self.padded_vocab, cfg.d_model), ("vocab", "embed"), scale=0.01
+                )
+            },
+            "decoder": {
+                f"p{j}": _stack(self._layer_schema(j), self.num_blocks)
+                for j in range(self.period)
+            },
+            "final_norm": L.norm_schema(cfg),
+        }
+        if not cfg.tie_embeddings:
+            sch["lm_head"] = {
+                "w": LeafSpec((cfg.d_model, self.padded_vocab), ("embed", "vocab"),
+                              init="scaled")
+            }
+        if cfg.is_enc_dec:
+            enc_layer = {
+                "pre_norm": L.norm_schema(cfg),
+                "attn": L.attention_schema(cfg, n_heads=self.padded_heads),
+                "post_norm": L.norm_schema(cfg),
+                "mlp": L.mlp_schema(cfg),
+            }
+            sch["encoder"] = {
+                "layers": _stack(enc_layer, cfg.encoder_layers),
+                "final_norm": L.norm_schema(cfg),
+            }
+        return sch
+
+    def init(self, key: jax.Array) -> Tree:
+        return init_params(self.schema(), key, self.cfg.dtype)
+
+    def abstract_params(self) -> Tree:
+        return abstract_params(self.schema(), self.cfg.dtype)
+
+    # ------------------------------------------------------------------ #
+    # caches
+    # ------------------------------------------------------------------ #
+    def cache_shapes(self, batch: int, max_len: int) -> Tree:
+        """Per-pattern-position cache entry shapes, stacked over blocks."""
+        cfg = self.cfg
+        nb = self.num_blocks
+        out: Tree = {}
+        for j in range(self.period):
+            entry: Tree = {}
+            if cfg.is_attn_layer(j):
+                kv_shape = (nb, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+                entry["k"] = (kv_shape, cfg.dtype)
+                entry["v"] = (kv_shape, cfg.dtype)
+            else:
+                ss = ssm_init_cache_shapes(cfg, batch)
+                entry["state"] = ((nb,) + ss["state"][0], ss["state"][1])
+                entry["conv"] = ((nb,) + ss["conv"][0], ss["conv"][1])
+            if cfg.is_enc_dec:
+                ckv = (nb, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+                entry["ck"] = (ckv, cfg.dtype)
+                entry["cv"] = (ckv, cfg.dtype)
+            out[f"p{j}"] = entry
+        return out
+
+    def abstract_cache(self, batch: int, max_len: int) -> Tree:
+        def conv(t):
+            if isinstance(t, tuple) and len(t) == 2 and isinstance(t[0], tuple):
+                return jax.ShapeDtypeStruct(t[0], jnp.dtype(t[1]))
+            return {k: conv(v) for k, v in t.items()}
+
+        return conv(self.cache_shapes(batch, max_len))
+
+    def init_cache(self, batch: int, max_len: int) -> Tree:
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.abstract_cache(batch, max_len)
+        )
+
+    # ------------------------------------------------------------------ #
+    # layer application
+    # ------------------------------------------------------------------ #
+    def _layer(self, j, lp, x, mode, lc, pos, enc_out, positions, aux):
+        cfg, binding = self.cfg, self.binding
+        new_cache: Tree = {}
+        h = L.norm_apply(lp["pre_norm"], x, cfg, binding)
+        rg = (self.q_group, self.q_group_padded)
+        if cfg.is_attn_layer(j):
+            if mode == "decode":
+                y, kv = L.attention_decode(
+                    lp["attn"], h, {"k": lc["k"], "v": lc["v"]}, pos, cfg, binding,
+                    use_rope=self.use_rope, pctx=self.pctx, real_group=rg,
+                )
+                new_cache.update(kv)
+            else:
+                y, kv = L.attention_apply(
+                    lp["attn"], h, cfg, binding, positions=positions,
+                    causal=True, use_rope=self.use_rope, pctx=self.pctx,
+                    real_group=rg,
+                )
+                if mode == "prefill":
+                    new_cache["k"] = kv["k"].astype(jnp.dtype(cfg.dtype))
+                    new_cache["v"] = kv["v"].astype(jnp.dtype(cfg.dtype))
+        else:
+            if mode == "decode":
+                y, sc = ssm_decode(lp["ssm"], h, {"state": lc["state"], "conv": lc["conv"]}, cfg)
+                new_cache.update(sc)
+            elif mode == "prefill":
+                y, sc = ssm_apply(lp["ssm"], h, cfg, binding, return_state=True)
+                new_cache["state"] = sc["state"]
+                new_cache["conv"] = sc["conv"]
+            else:
+                y = ssm_apply(lp["ssm"], h, cfg, binding)
+        x = x + y
+
+        if cfg.is_enc_dec:
+            h = L.norm_apply(lp["cross_norm"], x, cfg, binding)
+            if mode == "decode":
+                y, _ = L.attention_decode(
+                    lp["cross_attn"], h, {"k": lc["ck"], "v": lc["cv"]}, pos, cfg,
+                    binding, use_rope=False, cross=True, pctx=self.pctx,
+                    real_group=rg,
+                )
+                new_cache["ck"] = lc["ck"]
+                new_cache["cv"] = lc["cv"]
+            else:
+                y, ckv = L.attention_apply(
+                    lp["cross_attn"], h, cfg, binding, causal=False,
+                    kv_source=enc_out, use_rope=False, pctx=self.pctx,
+                    real_group=rg,
+                )
+                if mode == "prefill":
+                    new_cache["ck"] = ckv["k"].astype(jnp.dtype(cfg.dtype))
+                    new_cache["cv"] = ckv["v"].astype(jnp.dtype(cfg.dtype))
+            x = x + y
+
+        if cfg.d_ff or cfg.num_experts:
+            if "moe" in lp or "mlp" in lp:
+                h = L.norm_apply(lp["post_norm"], x, cfg, binding)
+                if "moe" in lp:
+                    y, layer_aux = moe_apply(
+                        lp["moe"], h, cfg, self.pctx, binding,
+                        oracle=self.moe_oracle, with_aux=(mode == "train"),
+                        token_chunks=self.moe_token_chunks,
+                        unroll=self.scan_unroll,
+                    )
+                    aux = aux + layer_aux
+                else:
+                    y = L.mlp_apply(lp["mlp"], h, cfg)
+                x = x + y
+        x = self.pctx.constrain_residual(x)
+        return x, (new_cache if mode in ("prefill", "decode") else None), aux
+
+    # ------------------------------------------------------------------ #
+    # decoder stack
+    # ------------------------------------------------------------------ #
+    def _decoder(self, params, x, mode, cache=None, pos=None, enc_out=None,
+                 positions=None):
+        cfg = self.cfg
+        p = self.period
+        unroll = self.num_blocks if self.scan_unroll else 1
+        aux0 = jnp.zeros((), jnp.float32)
+
+        if mode == "decode" and self.scan_unroll:
+            # measurement mode: the xs->ys formulation — XLA cost analysis
+            # charges dynamic_update_slice ~2x the FULL buffer (measured),
+            # which would inflate the carry path's memory term ~30x; the
+            # slab-wise ys traffic is the honest per-step cost.
+            def dec_ys(carry, xs):
+                x, aux = carry
+                bp, bc = xs
+                ncs: Tree = {}
+                for j in range(p):
+                    x, nc, aux = self._layer(
+                        j, bp[f"p{j}"], x, mode, bc[f"p{j}"], pos, enc_out,
+                        positions, aux
+                    )
+                    ncs[f"p{j}"] = nc
+                return (x, aux), ncs
+
+            (x, aux), new_cache = jax.lax.scan(
+                dec_ys, (x, aux0), (params["decoder"], cache), unroll=unroll,
+            )
+            return x, new_cache, aux
+
+        if mode == "decode":
+            # deployment mode: cache rides in the CARRY and is updated in
+            # place with dynamic_update_slice — XLA keeps while-loop
+            # carries aliased, so decode never materializes a second full
+            # KV cache (the xs->ys formulation cannot alias across the
+            # loop boundary; measured +5.4 GB temp on qwen2-72b decode_32k).
+            def dec_block(carry, bp):
+                x, aux, cache_st, i = carry
+                new_cache = cache_st
+                for j in range(p):
+                    lc = jax.tree.map(
+                        lambda c: jax.lax.dynamic_index_in_dim(
+                            c, i, axis=0, keepdims=False
+                        ),
+                        new_cache[f"p{j}"],
+                    )
+                    x, nc, aux = self._layer(
+                        j, bp[f"p{j}"], x, mode, lc, pos, enc_out, positions, aux
+                    )
+                    new_cache = dict(new_cache)
+                    new_cache[f"p{j}"] = jax.tree.map(
+                        lambda buf, upd: jax.lax.dynamic_update_slice_in_dim(
+                            buf, upd[None].astype(buf.dtype), i, axis=0
+                        ),
+                        new_cache[f"p{j}"],
+                        nc,
+                    )
+                return (x, aux, new_cache, i + 1), None
+
+            (x, aux, new_cache, _), _ = jax.lax.scan(
+                dec_block, (x, aux0, cache, jnp.int32(0)), params["decoder"],
+                unroll=unroll,
+            )
+            return x, new_cache, aux
+
+        def block_fn(carry, xs):
+            x, aux = carry
+            bp = xs
+            ncs: Tree = {}
+            for j in range(p):
+                x, nc, aux = self._layer(
+                    j, bp[f"p{j}"], x, mode, None, pos, enc_out, positions, aux
+                )
+                if nc is not None:
+                    ncs[f"p{j}"] = nc
+            return (x, aux), (ncs if ncs else None)
+
+        if mode == "train" and cfg.remat != "none":
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if cfg.remat == "dots"
+                else jax.checkpoint_policies.nothing_saveable
+            )
+            block_fn = jax.checkpoint(block_fn, policy=policy)
+
+        (x, aux), new_cache = jax.lax.scan(
+            block_fn, (x, aux0), params["decoder"], unroll=unroll,
+        )
+        return x, new_cache, aux
+
+    def _encoder(self, params, frames):
+        cfg, binding = self.cfg, self.binding
+        x = frames + L.sinusoidal_positions(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+        def enc_fn(x, lp):
+            h = L.norm_apply(lp["pre_norm"], x, cfg, binding)
+            y, _ = L.attention_apply(
+                lp["attn"], h, cfg, binding, causal=False, use_rope=False,
+                pctx=self.pctx, real_group=(self.q_group, self.q_group_padded),
+            )
+            x = x + y
+            h = L.norm_apply(lp["post_norm"], x, cfg, binding)
+            x = x + L.mlp_apply(lp["mlp"], h, cfg)
+            return x, None
+
+        if cfg.remat != "none":
+            enc_fn = jax.checkpoint(enc_fn)
+        x, _ = jax.lax.scan(
+            enc_fn, x, params["encoder"]["layers"],
+            unroll=cfg.encoder_layers if self.scan_unroll else 1,
+        )
+        return L.norm_apply(params["encoder"]["final_norm"], x, cfg, binding)
+
+    # ------------------------------------------------------------------ #
+    # embeddings + logits
+    # ------------------------------------------------------------------ #
+    def _embed(self, params, tokens, offset: jnp.ndarray | int = 0):
+        x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+        if self.cfg.family == "audio":
+            x = x + L.sinusoidal_positions(
+                tokens.shape[1], self.cfg.d_model, offset
+            ).astype(x.dtype)
+        return x
+
+    def _logits(self, params, x):
+        w = (
+            params["embed"]["tok"].T
+            if self.cfg.tie_embeddings
+            else params["lm_head"]["w"]
+        )
+        logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+        if self.padded_vocab != self.cfg.vocab_size:
+            mask = jnp.arange(self.padded_vocab) < self.cfg.vocab_size
+            logits = jnp.where(mask, logits, -1e9)
+        if self.pctx.active and self.pctx.model_axis:
+            from jax.sharding import PartitionSpec as P
+
+            logits = self.pctx.constrain(
+                logits, P(self.pctx.batch_axes or None, None, self.pctx.model_axis)
+            )
+        return logits
+
+    def _assemble_inputs(self, params, batch):
+        """Token/modality fusion -> (x, enc_out, text_offset)."""
+        cfg = self.cfg
+        enc_out = None
+        if cfg.is_enc_dec:
+            enc_out = self._encoder(params, batch["frames"])
+            x = self._embed(params, batch["tokens"])
+            offset = 0
+        elif cfg.modality == "vision":
+            tok = self._embed(params, batch["tokens"])
+            x = jnp.concatenate([batch["patch_embeds"].astype(tok.dtype), tok], axis=1)
+            offset = batch["patch_embeds"].shape[1]
+        else:
+            x = self._embed(params, batch["tokens"])
+            offset = 0
+        return x, enc_out, offset
+
+    # ------------------------------------------------------------------ #
+    # public entry points
+    # ------------------------------------------------------------------ #
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        x, enc_out, offset = self._assemble_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])
+        x, _, aux = self._decoder(params, x, "train", enc_out=enc_out,
+                                  positions=positions)
+        x = L.norm_apply(params["final_norm"], x, cfg, self.binding)
+        if offset:
+            x = x[:, offset:, :]
+        labels = batch["labels"]
+        nll_sum = self._chunked_nll(params, x, labels)
+        loss = nll_sum / (labels.shape[0] * labels.shape[1])
+        if cfg.num_experts:
+            loss = loss + 0.01 * aux / max(cfg.num_layers, 1)
+        return loss, {"loss": loss, "aux": aux}
+
+    def _chunked_nll(self, params, x, labels):
+        """Cross-entropy with sequence-chunked logits.
+
+        Full fp32 logits are (B, S, V) — for moonshot's 163k vocab that is
+        ~8 GB of live softmax buffers per device.  Chunking the sequence
+        recomputes each chunk's logits in the backward (jax.checkpoint),
+        holding only (B, S/c, V) alive: the standard large-vocab loss."""
+        b, s, _ = x.shape
+        chunks = self.loss_seq_chunks
+        if chunks <= 1 or s % chunks:
+            logits = self._logits(params, x)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+            return nll.sum()
+
+        xs = x.reshape(b, chunks, s // chunks, -1).swapaxes(0, 1)
+        ls = labels.reshape(b, chunks, s // chunks).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk_nll(acc, inp):
+            xc, lc = inp
+            logits = self._logits(params, xc)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, lc[..., None], axis=-1)[..., 0]
+            return acc + nll.sum(), None
+
+        total, _ = jax.lax.scan(
+            chunk_nll, jnp.zeros((), jnp.float32), (xs, ls),
+            unroll=chunks if self.scan_unroll else 1,
+        )
+        return total
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        x, enc_out, _ = self._assemble_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])
+        x, cache, _ = self._decoder(params, x, "prefill", enc_out=enc_out,
+                                    positions=positions)
+        x = L.norm_apply(params["final_norm"], x, cfg, self.binding)
+        logits = self._logits(params, x[:, -1:, :])[:, 0]
+        return logits, cache
+
+    def decode(self, params, token, cache, pos):
+        """token: (B, 1) int32; pos: () int32; cache from prefill/init."""
+        cfg = self.cfg
+        x = self._embed(params, token, offset=pos)
+        x, new_cache, _ = self._decoder(params, x, "decode", cache=cache, pos=pos)
+        x = L.norm_apply(params["final_norm"], x, cfg, self.binding)
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_cache
+
+    # ------------------------------------------------------------------ #
+    # input specs (ShapeDtypeStruct stand-ins for the dry-run)
+    # ------------------------------------------------------------------ #
+    def input_specs(self, shape: ShapeConfig) -> Tree:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sd = jax.ShapeDtypeStruct
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind == "train":
+            if cfg.is_enc_dec:
+                return {"frames": sd((b, s, cfg.d_model), dt),
+                        "tokens": sd((b, s), i32), "labels": sd((b, s), i32)}
+            if cfg.modality == "vision":
+                p = cfg.n_patches
+                return {"patch_embeds": sd((b, p, cfg.d_model), dt),
+                        "tokens": sd((b, s - p), i32), "labels": sd((b, s - p), i32)}
+            return {"tokens": sd((b, s), i32), "labels": sd((b, s), i32)}
+        if shape.kind == "prefill":
+            if cfg.is_enc_dec:
+                return {"frames": sd((b, s, cfg.d_model), dt), "tokens": sd((b, s), i32)}
+            if cfg.modality == "vision":
+                p = cfg.n_patches
+                return {"patch_embeds": sd((b, p, cfg.d_model), dt),
+                        "tokens": sd((b, s - p), i32)}
+            return {"tokens": sd((b, s), i32)}
+        # decode: one new token against a cache of seq_len
+        return {
+            "token": sd((b, 1), i32),
+            "cache": self.abstract_cache(b, s),
+            "pos": sd((), i32),
+        }
+
+
+def build_model(cfg: ModelConfig, binding=None, pctx=None, **kw) -> Model:
+    return Model(cfg, binding=binding, pctx=pctx, **kw)

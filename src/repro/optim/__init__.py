@@ -1,0 +1,14 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    OptState,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    make_optimizer,
+)
+from repro.optim.schedule import constant, warmup_cosine
+
+__all__ = [
+    "AdamWConfig", "OptState", "adamw_init", "adamw_update", "global_norm",
+    "make_optimizer", "constant", "warmup_cosine",
+]

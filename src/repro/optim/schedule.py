@@ -1,0 +1,24 @@
+"""Learning-rate schedules (as step -> scale multipliers)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant"]
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+
+    return fn

@@ -1,0 +1,24 @@
+import os
+import sys
+
+# Tests run on the single real CPU device — the 512-device dry-run env var
+# is set ONLY inside repro.launch.dryrun subprocesses, never here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def subprocess_env(num_devices: int) -> dict:
+    """Env for multi-device subprocess tests."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={num_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    return env

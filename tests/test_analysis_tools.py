@@ -1,0 +1,96 @@
+"""Unit tests for the dry-run analysis tooling (HLO parsing, roofline)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, shape_applicable
+from repro.core.platform import TPU_V5E
+from repro.launch.hlo_analysis import (
+    collective_stats,
+    cost_stats,
+    memory_stats,
+    roofline_terms,
+)
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ar = f32[16,512]{1,0} all-reduce(%x), replica_groups=[4,4]<=[16], to_apply=%add
+  %ag = bf16[64,128]{1,0} all-gather(%y), replica_groups=[2,8]<=[16], dimensions={0}
+  %rs = f32[8,32]{1,0} reduce-scatter(%z), replica_groups=[4,4]<=[16], to_apply=%add
+  %a2a = f32[4,4]{1,0} all-to-all(%w), replica_groups={{0,1},{2,3}}
+  %cp = f32[100]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %done = f32[16,512]{1,0} all-reduce-done(%ar)
+}
+"""
+
+
+def test_collective_stats_parses_kinds_and_bytes():
+    s = collective_stats(HLO_SAMPLE)
+    c = s["count_by_kind"]
+    assert c["all-reduce"] == 1 and c["all-gather"] == 1
+    assert c["reduce-scatter"] == 1 and c["all-to-all"] == 1
+    assert c["collective-permute"] == 1
+    b = s["bytes_by_kind"]
+    assert b["all-reduce"] == 16 * 512 * 4                  # operand == result
+    assert b["all-gather"] == 64 * 128 * 2 // 8             # result / group
+    assert b["reduce-scatter"] == 8 * 32 * 4 * 4            # result * group
+    assert b["all-to-all"] == 4 * 4 * 4
+    assert b["collective-permute"] == 100 * 4
+    assert s["total_bytes"] == sum(b.values())
+    # -done lines are not double counted
+    assert s["total_count"] == 5
+
+
+def test_collective_wire_bytes_ring_factors():
+    s = collective_stats(HLO_SAMPLE)
+    w = s["wire_by_kind"]
+    # all-reduce ring: 2 * bytes * (g-1)/g with g=4
+    assert w["all-reduce"] == pytest.approx(2 * 16 * 512 * 4 * 3 / 4)
+    assert w["collective-permute"] == 100 * 4
+
+
+def test_roofline_terms_and_dominance():
+    t = roofline_terms(197e12, 819e9, 50e9, chips=256)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(1.0)
+    t2 = roofline_terms(1e12, 819e9 * 5, 0.0, chips=1)
+    assert t2.dominant == "memory"
+    assert t2.step_time_lower_bound_s == pytest.approx(5.0)
+
+
+def test_cost_and_memory_stats_on_real_compile():
+    f = jax.jit(lambda x: (x @ x).sum())
+    compiled = f.lower(jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    c = cost_stats(compiled)
+    assert c["flops"] >= 2 * 64 * 64 * 64 * 0.9
+    m = memory_stats(compiled)
+    assert m["argument_size_in_bytes"] == 64 * 64 * 4
+
+
+def test_shape_applicability_matrix():
+    """The assignment's long_500k rule: runs only for ssm/hybrid."""
+    runnable = {
+        a for a in ARCHS
+        if shape_applicable(ARCHS[a], SHAPES["long_500k"])[0]
+    }
+    assert runnable == {"mamba2-780m", "jamba-1.5-large-398b"}
+    for a in ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(ARCHS[a], SHAPES[s])[0]
+
+
+def test_total_cell_count_is_40():
+    assert len(ARCHS) * len(SHAPES) == 40
+
+
+def test_perf_variants_registry():
+    from repro.launch.perf_variants import VARIANTS, get_rules
+
+    assert "baseline" in VARIANTS
+    assert get_rules("baseline") is VARIANTS["baseline"]
+    with pytest.raises(KeyError):
+        get_rules("nope")
+    # no_fsdp drops the embed rule
+    assert all(r[0] != "embed" for r in get_rules("no_fsdp").rules)

@@ -1,0 +1,71 @@
+"""ABI string construction, compatibility semantics, parsing."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.abi import AbiError, AbiString, parse_abi, signature_digest
+
+
+def test_roundtrip():
+    a = AbiString.make("attention", {"args": ["q", "k", "v"]}, major=2, minor=3)
+    assert parse_abi(str(a)) == a
+
+
+def test_same_signature_same_digest():
+    s1 = signature_digest({"b": 2, "a": 1})
+    s2 = signature_digest({"a": 1, "b": 2})
+    assert s1 == s2  # dict order canonicalised
+
+
+def test_different_signature_different_digest():
+    assert signature_digest({"a": 1}) != signature_digest({"a": 2})
+
+
+def test_compat_rules():
+    base = AbiString.make("op", "sig", major=1, minor=1)
+    newer_minor = AbiString.make("op", "sig", major=1, minor=2)
+    older_minor = AbiString.make("op", "sig", major=1, minor=0)
+    other_major = AbiString.make("op", "sig", major=2, minor=0)
+    other_sig = AbiString.make("op", "sig2", major=1, minor=1)
+    other_name = AbiString.make("op2", "sig", major=1, minor=1)
+
+    assert base.compatible_with(base)
+    assert base.compatible_with(newer_minor)      # provider newer minor OK
+    assert not base.compatible_with(older_minor)  # provider too old
+    assert not base.compatible_with(other_major)
+    assert not base.compatible_with(other_sig)
+    assert not base.compatible_with(other_name)
+
+
+def test_why_incompatible_messages():
+    a = AbiString.make("op", "sig", major=1)
+    b = AbiString.make("op", "sig", major=2)
+    assert "major" in a.why_incompatible(b)
+    assert a.why_incompatible(a) is None
+
+
+def test_malformed_parse():
+    for bad in ["", "op", "op/1:2", "op/1:2/zzz", "Op/1:2/" + "0" * 12]:
+        with pytest.raises(AbiError):
+            parse_abi(bad)
+
+
+@given(
+    name=st.from_regex(r"[a-z][a-z0-9_.]{0,10}", fullmatch=True),
+    major=st.integers(0, 99),
+    minor=st.integers(0, 99),
+    sig=st.dictionaries(st.text(max_size=5), st.integers(), max_size=4),
+)
+def test_parse_roundtrip_property(name, major, minor, sig):
+    a = AbiString.make(name, sig, major=major, minor=minor)
+    assert parse_abi(str(a)) == a
+
+
+@given(
+    minor_req=st.integers(0, 20),
+    minor_prov=st.integers(0, 20),
+)
+def test_minor_version_monotonicity(minor_req, minor_prov):
+    req = AbiString.make("op", "s", minor=minor_req)
+    prov = AbiString.make("op", "s", minor=minor_prov)
+    assert req.compatible_with(prov) == (minor_prov >= minor_req)

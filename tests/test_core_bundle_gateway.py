@@ -1,0 +1,88 @@
+"""Bundle image format + Gateway pull/flatten/convert semantics."""
+
+import pytest
+
+from repro.core.bundle import Bundle, BundleError
+from repro.core.gateway import Gateway, GatewayError
+
+
+def _bundle(name="base", tag="latest", base=None, **over):
+    return Bundle(
+        name=name,
+        tag=tag,
+        base=base,
+        model_config=over.get("model_config", {"d_model": 64}),
+        recipe=over.get("recipe", {"lr": 1e-3}),
+        required_ops=over.get("required_ops", {}),
+        env=over.get("env", {"A": "1"}),
+    )
+
+
+def test_bundle_roundtrip(tmp_path):
+    b = _bundle()
+    p = b.save(tmp_path / "b.json")
+    assert Bundle.load(p) == b
+    assert Bundle.load(p).digest == b.digest
+
+
+def test_digest_changes_with_content():
+    assert _bundle().digest != _bundle(recipe={"lr": 2e-3}).digest
+
+
+def test_flatten_layering():
+    base = _bundle(name="base", env={"A": "1", "B": "base"})
+    child = _bundle(
+        name="child", base="base:latest",
+        model_config={"n_layers": 2}, env={"B": "child"},
+    )
+    flat = child.flatten_onto(base)
+    assert flat.base is None
+    assert flat.model_config == {"d_model": 64, "n_layers": 2}
+    assert flat.env == {"A": "1", "B": "child"}  # child layer wins
+
+
+def test_flatten_wrong_parent():
+    with pytest.raises(BundleError):
+        _bundle(name="child", base="other:latest").flatten_onto(_bundle())
+
+
+def test_gateway_pull_flatten_cache(tmp_path):
+    gw = Gateway(tmp_path / "registry", tmp_path / "cache")
+    gw.push(_bundle(name="base"))
+    gw.push(_bundle(name="app", base="base:latest", env={"B": "2"}))
+
+    flat = gw.pull("app:latest")
+    assert flat.base is None
+    assert flat.env == {"A": "1", "B": "2"}
+
+    # lookup hits the cache only; images lists it
+    assert gw.lookup("app:latest").digest == flat.digest
+    assert any(i["name"] == "app" for i in gw.images())
+
+
+def test_gateway_missing_image(tmp_path):
+    gw = Gateway(tmp_path / "registry", tmp_path / "cache")
+    with pytest.raises(GatewayError):
+        gw.pull("ghost:latest")
+    with pytest.raises(GatewayError):
+        gw.lookup("ghost:latest")
+
+
+def test_gateway_gc(tmp_path):
+    gw = Gateway(tmp_path / "registry", tmp_path / "cache")
+    gw.push(_bundle(name="a"))
+    old = gw.pull("a:latest")
+    gw.push(_bundle(name="a", recipe={"lr": 9.0}))   # retag with new content
+    new = gw.pull("a:latest")
+    assert old.digest != new.digest
+    removed = gw.gc()
+    assert removed == 1
+    assert gw.lookup("a:latest").digest == new.digest
+
+
+def test_pull_is_idempotent(tmp_path):
+    gw = Gateway(tmp_path / "registry", tmp_path / "cache")
+    gw.push(_bundle(name="a"))
+    d1 = gw.pull("a:latest").digest
+    d2 = gw.pull("a:latest").digest
+    assert d1 == d2

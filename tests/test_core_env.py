@@ -1,0 +1,71 @@
+"""CUDA_VISIBLE_DEVICES-analogue parsing + renumbering semantics."""
+
+import jax
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.env import (
+    ENV_PLATFORM,
+    native_ops_default,
+    parse_visible_devices,
+    resolve_platform,
+    select_devices,
+)
+
+
+@pytest.mark.parametrize(
+    "value,active,indices",
+    [
+        (None, False, None),
+        ("", False, None),
+        ("all", True, None),
+        ("ALL", True, None),
+        ("0", True, (0,)),
+        ("0,2", True, (0, 2)),
+        (" 1 , 3 ", True, (1, 3)),
+        ("0,0", False, None),        # duplicates invalid
+        ("-1", False, None),
+        ("junk", False, None),
+        ("0,junk", False, None),
+    ],
+)
+def test_parse_visible(value, active, indices):
+    v = parse_visible_devices(value)
+    assert v.active == active
+    assert v.indices == indices
+
+
+def test_renumbering_from_zero():
+    """§IV-A.3: visible devices are addressable from logical index 0."""
+    devs = list(jax.devices())
+    v = parse_visible_devices("0")
+    sel = select_devices(v, devs)
+    assert sel == [devs[0]]
+    # out-of-range physical ids are dropped, order preserved
+    v2 = parse_visible_devices("5,0")
+    sel2 = select_devices(v2, devs)
+    assert sel2 == [devs[0]]
+
+
+def test_invalid_value_keeps_all_devices():
+    devs = list(jax.devices())
+    assert select_devices(parse_visible_devices("junk"), devs) == devs
+
+
+def test_platform_override_and_detection():
+    assert resolve_platform({ENV_PLATFORM: "pod-v5e"}).name == "pod-v5e"
+    with pytest.raises(KeyError):
+        resolve_platform({ENV_PLATFORM: "nope"})
+    assert resolve_platform({}).name == "laptop"  # 1 CPU device
+
+
+def test_native_ops_default():
+    assert native_ops_default({"REPRO_NATIVE_OPS": "1"})
+    assert not native_ops_default({"REPRO_NATIVE_OPS": "0"})
+    assert not native_ops_default({})
+
+
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=8, unique=True))
+def test_valid_lists_always_activate(ids):
+    v = parse_visible_devices(",".join(map(str, ids)))
+    assert v.active and v.indices == tuple(ids)

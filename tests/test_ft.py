@@ -1,0 +1,106 @@
+"""Fault tolerance: straggler detection, supervisor decisions, rescaling."""
+
+import pytest
+
+from repro.ft import (
+    DecisionKind,
+    RescalePlan,
+    StragglerConfig,
+    StragglerDetector,
+    Supervisor,
+    SupervisorConfig,
+    rescale_plan,
+)
+
+
+# ------------------------------------------------------------- straggler --
+def test_straggler_flagged_after_patience():
+    det = StragglerDetector(4, StragglerConfig(threshold=2.0, patience=2, evict_after=5))
+    base = {0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0}
+    assert det.observe(base).clean
+    slow = {**base, 3: 5.0}
+    p1 = det.observe(slow)
+    assert 3 not in p1.skip_hosts          # patience not reached
+    p2 = det.observe(slow)
+    assert 3 in p2.skip_hosts
+    assert 3 not in p2.evict_hosts
+
+
+def test_straggler_eviction_after_persistent_slowness():
+    det = StragglerDetector(2, StragglerConfig(threshold=1.5, patience=1, evict_after=3))
+    for _ in range(3):
+        plan = det.observe({0: 1.0, 1: 10.0})
+    assert 1 in plan.evict_hosts
+
+
+def test_recovered_host_unflagged():
+    det = StragglerDetector(2, StragglerConfig(threshold=2.0, patience=1, ema=1.0))
+    det.observe({0: 1.0, 1: 9.0})
+    plan = det.observe({0: 1.0, 1: 1.0})
+    assert plan.clean
+
+
+# ------------------------------------------------------------ supervisor --
+def test_supervisor_heartbeat_failure_downscale():
+    sup = Supervisor(4, SupervisorConfig(heartbeat_timeout=10.0))
+    for h in range(4):
+        sup.heartbeat(h, 0.0)
+    sup.checkpoint_published(100)
+    for h in range(3):                      # host 3 goes silent
+        sup.heartbeat(h, 20.0)
+    d = sup.poll(25.0)
+    assert d.kind is DecisionKind.DOWNSCALE
+    assert d.world_size == 3
+    assert d.restore_step == 100
+
+
+def test_supervisor_restart_with_spares():
+    sup = Supervisor(4, SupervisorConfig(heartbeat_timeout=10.0, spare_hosts=1))
+    for h in range(4):
+        sup.heartbeat(h, 0.0)
+    sup.checkpoint_published(50)
+    for h in range(3):
+        sup.heartbeat(h, 20.0)
+    d = sup.poll(25.0)
+    assert d.kind is DecisionKind.RESTART
+    assert d.world_size == 4
+    # spare consumed: a second failure (host 2 silent since its t=25
+    # replacement beat) downscales
+    for h in (0, 1, 3):
+        sup.heartbeat(h, 40.0)
+    d2 = sup.poll(45.0)
+    assert d2.kind is DecisionKind.DOWNSCALE
+    assert d2.world_size == 3
+
+
+def test_supervisor_abort_below_min():
+    sup = Supervisor(2, SupervisorConfig(heartbeat_timeout=5.0, min_hosts=2))
+    sup.heartbeat(0, 0.0)
+    sup.heartbeat(1, 0.0)
+    sup.heartbeat(0, 10.0)
+    d = sup.poll(20.0)
+    assert d.kind is DecisionKind.ABORT
+
+
+def test_supervisor_healthy_noop():
+    sup = Supervisor(2)
+    sup.heartbeat(0, 0.0)
+    sup.heartbeat(1, 0.0)
+    assert sup.poll(1.0).kind is DecisionKind.NONE
+
+
+# --------------------------------------------------------------- elastic --
+def test_rescale_plans():
+    assert rescale_plan(512, model=16, pods=2).mesh_shape == (2, 16, 16)
+    assert rescale_plan(256, model=16).mesh_shape == (16, 16)
+    # lost a host: 248 devices, model degree halves until it divides
+    p = rescale_plan(248, model=16)
+    assert p.mesh_shape[-1] in (8, 4, 2, 1)
+    assert p.mesh_shape[0] * p.mesh_shape[-1] == 248
+    assert rescale_plan(1).mesh_shape == (1,)
+
+
+def test_rescale_plan_single_device_mesh():
+    plan = rescale_plan(1, model=1)
+    mesh = plan.build_mesh()
+    assert mesh.devices.size == 1

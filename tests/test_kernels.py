@@ -1,0 +1,156 @@
+"""Per-kernel allclose vs the jnp oracle (interpret=True), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention_ref import attention_ref, decode_attention_ref
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.moe_gmm_ref import moe_gmm_exact, moe_gmm_ref
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rmsnorm_ref import rmsnorm_ref
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan_ref import ssd_decode_step_ref, ssd_scan_ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOLS = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------- rmsnorm --
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 32), (2, 5, 64), (1, 3, 7, 128)])
+def test_rmsnorm_matches_ref(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = _rand(k1, shape, dtype)
+    w = _rand(k2, shape[-1:], dtype)
+    out = rmsnorm(x, w, interpret=True, block_rows=4)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOLS[dtype], rtol=TOLS[dtype],
+    )
+
+
+# ----------------------------------------------------------- flash attn --
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,kv,dh,causal",
+    [
+        (1, 16, 2, 2, 8, True),
+        (2, 32, 4, 2, 16, True),    # GQA
+        (2, 16, 4, 1, 8, False),    # MQA, bidirectional
+        (1, 24, 2, 2, 8, True),     # non-divisible by block
+    ],
+)
+def test_flash_attention_matches_ref(b, s, h, kv, dh, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (b, s, h, dh), dtype)
+    k = _rand(ks[1], (b, s, kv, dh), dtype)
+    v = _rand(ks[2], (b, s, kv, dh), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=8, block_k=8, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=5 * TOLS[dtype], rtol=5 * TOLS[dtype],
+    )
+
+
+def test_flash_decode_matches_decode_ref():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (2, 1, 4, 8), jnp.float32)
+    k = _rand(ks[1], (2, 32, 2, 8), jnp.float32)
+    v = _rand(ks[2], (2, 32, 2, 8), jnp.float32)
+    pos = jnp.int32(17)
+    out = flash_attention(q, k, v, kv_len=pos + 1, causal=False,
+                          block_q=8, block_k=8, interpret=True)
+    ref = decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_ref_matches_plain_ref():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (2, 64, 4, 8), jnp.float32)
+    k = _rand(ks[1], (2, 64, 2, 8), jnp.float32)
+    v = _rand(ks[2], (2, 64, 2, 8), jnp.float32)
+    a = attention_ref(q, k, v, causal=True)
+    b = attention_ref(q, k, v, causal=True, chunk_kv=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6, rtol=2e-6)
+
+
+# ---------------------------------------------------------------- ssd -----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (1, 16, 2, 4, 1, 8, 4),
+    (2, 32, 4, 8, 2, 16, 8),
+    (1, 24, 2, 4, 1, 8, 8),
+])
+def test_ssd_kernel_matches_ref(b, s, h, p, g, n, chunk, dtype):
+    if s % chunk:
+        pytest.skip("chunk must divide s")
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = _rand(ks[0], (b, s, h, p), dtype) * 0.5
+    dt = jax.nn.softplus(_rand(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(_rand(ks[2], (h,), jnp.float32) * 0.3)
+    Bm = _rand(ks[3], (b, s, g, n), dtype) * 0.3
+    Cm = _rand(ks[4], (b, s, g, n), dtype) * 0.3
+    yr, sr = ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    yk, sk = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(yk, np.float32), np.asarray(yr, np.float32),
+                               atol=10 * TOLS[dtype], rtol=10 * TOLS[dtype])
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_ref_matches_sequential_decode():
+    """Chunked SSD == step-by-step recurrence (the decode path)."""
+    b, s, h, p, g, n = 2, 16, 2, 4, 1, 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = _rand(ks[0], (b, s, h, p), jnp.float32) * 0.5
+    dt = jax.nn.softplus(_rand(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(_rand(ks[2], (h,), jnp.float32) * 0.3)
+    Bm = _rand(ks[3], (b, s, g, n), jnp.float32) * 0.3
+    Cm = _rand(ks[4], (b, s, g, n), jnp.float32) * 0.3
+    yr, sr = ssd_scan_ref(x, dt, A, Bm, Cm, chunk=4)
+    state = jnp.zeros((b, h, n, p))
+    ys = []
+    for t in range(s):
+        y, state = ssd_decode_step_ref(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)), np.asarray(yr),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(sr), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------- gmm -----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,e,f", [(16, 8, 2, 8), (24, 16, 3, 24), (8, 8, 8, 16)])
+def test_moe_gmm_kernel_matches_exact(t, d, e, f, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    x = _rand(ks[0], (t, d), dtype)
+    w = _rand(ks[1], (e, d, f), dtype)
+    splits = jnp.sort(jax.random.randint(ks[2], (e - 1,), 0, t + 1))
+    gs = jnp.diff(jnp.concatenate([jnp.zeros(1, jnp.int32), splits.astype(jnp.int32),
+                                   jnp.full(1, t, jnp.int32)]))
+    exact = moe_gmm_exact(x, w, gs)
+    out = moe_gmm(x, w, gs, block_m=8, block_n=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(exact, np.float32),
+                               atol=10 * TOLS[dtype], rtol=10 * TOLS[dtype])
+    # capacity ref with enough capacity equals the exact oracle too
+    ref = moe_gmm_ref(x, w, gs, capacity_factor=float(e))
+    np.testing.assert_allclose(np.asarray(ref, np.float32), np.asarray(exact, np.float32),
+                               atol=10 * TOLS[dtype], rtol=10 * TOLS[dtype])
+
+
+def test_moe_gmm_capacity_drops():
+    x = jnp.ones((12, 4))
+    w = jnp.ones((2, 4, 4))
+    gs = jnp.array([10, 2], jnp.int32)
+    y = moe_gmm_ref(x, w, gs, capacity_factor=1.0)   # cap = 6 per expert
+    dropped = int((jnp.abs(y).sum(axis=1) == 0).sum())
+    assert dropped == 4                              # 10 - 6 overflow rows

@@ -1,0 +1,74 @@
+"""Hypothesis property tests: kernels vs oracles across random shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention_ref import attention_ref
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.moe_gmm_ref import moe_gmm_exact
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rmsnorm_ref import rmsnorm_ref
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 9),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_property(rows, d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (rows, d))
+    w = jax.random.normal(k2, (d,))
+    out = rmsnorm(x, w, interpret=True, block_rows=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rmsnorm_ref(x, w)),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.sampled_from([8, 16, 24]),
+    kv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2]),
+    dh=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_property(s, kv, group, dh, causal, seed):
+    h = kv * group
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, s, h, dh))
+    k = jax.random.normal(ks[1], (1, s, kv, dh))
+    v = jax.random.normal(ks[2], (1, s, kv, dh))
+    out = flash_attention(q, k, v, causal=causal, block_q=8, block_k=8, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 24),
+    e=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_gmm_property(t, e, seed):
+    d, f = 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (t, d))
+    w = jax.random.normal(ks[1], (e, d, f))
+    # random partition of t rows into e groups
+    if e == 1:
+        gs = jnp.array([t], jnp.int32)
+    else:
+        splits = jnp.sort(jax.random.randint(ks[2], (e - 1,), 0, t + 1))
+        gs = jnp.diff(jnp.concatenate(
+            [jnp.zeros(1, jnp.int32), splits.astype(jnp.int32), jnp.full(1, t, jnp.int32)]
+        ))
+    out = moe_gmm(x, w, gs, block_m=8, block_n=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(moe_gmm_exact(x, w, gs)),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,96 @@
+"""Per-arch smoke tests (assignment): reduced config of the same family,
+one forward/train step on CPU, output shapes + no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.configs.base import ShapeConfig
+from repro.data import DataConfig, SyntheticStream
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+SMOKE_SHAPE = ShapeConfig("smoke", 32, 2, "train")
+
+
+def _batch(cfg, key):
+    stream = SyntheticStream(cfg, SMOKE_SHAPE, DataConfig(seed=0))
+    return {k: jnp.asarray(v) for k, v in stream.batch_at(0).items()}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_forward_and_train_step(arch):
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+
+    # one full train step (grad + adamw) stays finite and updates params
+    def step(p, b):
+        (l, m), g = jax.value_and_grad(model.loss_fn, has_aux=True)(p, b)
+        new_p, _, stats = adamw_update(g, adamw_init(p), p, AdamWConfig(lr=1e-3))
+        return l, new_p, stats
+
+    loss2, new_params, stats = jax.jit(step)(params, batch)
+    assert bool(jnp.isfinite(stats["grad_norm"]))
+    changed = jax.tree.reduce(
+        lambda a, b: a or b,
+        jax.tree.map(lambda a, b: bool(jnp.any(a != b)), params, new_params),
+    )
+    assert changed, f"{arch}: train step did not update parameters"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_prefill_logits_shape(arch):
+    cfg = ARCHS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 16
+    key = jax.random.PRNGKey(2)
+    if cfg.is_enc_dec:
+        batch = {"frames": jax.random.normal(key, (b, s, cfg.d_model)) * 0.1,
+                 "tokens": jnp.ones((b, s), jnp.int32)}
+    elif cfg.modality == "vision":
+        batch = {"patch_embeds": jax.random.normal(key, (b, cfg.n_patches, cfg.d_model)) * 0.1,
+                 "tokens": jnp.ones((b, s - cfg.n_patches), jnp.int32)}
+    else:
+        batch = {"tokens": jnp.ones((b, s), jnp.int32)}
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    assert logits.shape == (b, model.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[:, : cfg.vocab_size])))
+    assert cache, f"{arch}: prefill returned empty cache"
+
+
+def test_param_counts_match_published_scale():
+    """Full configs should land near their nameplate parameter counts."""
+    expect = {
+        "qwen2-72b": (69e9, 76e9),
+        "qwen2.5-14b": (13e9, 16e9),
+        "minitron-8b": (7.5e9, 10.5e9),
+        "granite-3-8b": (7.5e9, 9e9),
+        "mamba2-780m": (0.7e9, 0.9e9),
+        # assigned 48L config; hf Moonlight is 27L/15B — we follow the
+        # assignment's dims, which total ~28B
+        "moonshot-v1-16b-a3b": (26e9, 30e9),
+        "phi3.5-moe-42b-a6.6b": (40e9, 44e9),
+        "jamba-1.5-large-398b": (350e9, 420e9),
+        "llava-next-34b": (32e9, 38e9),
+        "whisper-base": (0.05e9, 0.12e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        total, active = ARCHS[arch].param_count()
+        assert lo <= total <= hi, f"{arch}: {total/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+        assert active <= total
+
+
+def test_moe_active_params():
+    total, active = ARCHS["moonshot-v1-16b-a3b"].param_count()
+    # assigned 48L config: ~4.8B active (routed top-6 + 2 shared + embeddings)
+    assert 3e9 <= active <= 5.5e9, f"active {active/1e9:.2f}B"
+    assert active < 0.25 * total

@@ -1,0 +1,114 @@
+"""Runtime deployment stages: swap, env export, freeze, numerics."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core.abi import AbiString
+from repro.core.bundle import Bundle
+from repro.core.platform import LAPTOP, Platform
+from repro.core.registry import ImplKind, OpImpl, OpRegistry
+from repro.core.runtime import DeploymentError, Runtime
+
+FAKE_TPU = Platform(
+    name="fake-tpu",
+    hardware=LAPTOP.hardware,
+    mesh_shape=(1,),
+    mesh_axes=("data",),
+    native_features=frozenset({"pallas_kernels"}),
+)
+
+
+def _registry(native_scale=2.0, *, bad_abi=False):
+    reg = OpRegistry()
+    abi = AbiString.make("scale", {"args": ["x"]})
+    reg.register(OpImpl(abi=abi, kind=ImplKind.REFERENCE,
+                        fn=lambda x: x * 1.0, provider="ref"))
+    nat_abi = AbiString.make("scale", {"args": ["x", "oops"]} if bad_abi else {"args": ["x"]},
+                             minor=1)
+    reg.register(
+        OpImpl(abi=nat_abi, kind=ImplKind.NATIVE, fn=lambda x: x * native_scale,
+               requires_feature="pallas_kernels", provider="fake-pallas"),
+        strict=False,
+    )
+    return reg, abi
+
+
+def _bundle(abi):
+    return Bundle(
+        name="m", tag="latest", model_config={}, recipe={},
+        required_ops={"scale": str(abi)}, env={"FOO": "bundle"},
+    )
+
+
+def test_deploy_swap_and_numerics():
+    reg, abi = _registry(native_scale=1.0)   # ABI-compatible, same numerics
+    rt = Runtime(registry=reg, host_env={})
+    c = rt.deploy(_bundle(abi), native_ops=True, platform=FAKE_TPU)
+    assert c.binding.reports[0].swapped
+    # the paper's Tables III-V claim: native == reference results
+    assert float(c.binding["scale"](jnp.float32(3.0))) == 3.0
+    rt.cleanup()
+    c2 = rt.deploy(_bundle(abi), native_ops=False, platform=FAKE_TPU)
+    assert not c2.binding.reports[0].swapped
+    rt.cleanup()
+
+
+def test_abi_refusal_falls_back_to_reference():
+    reg, abi = _registry(native_scale=99.0, bad_abi=True)
+    rt = Runtime(registry=reg, host_env={})
+    c = rt.deploy(_bundle(abi), native_ops=True, platform=FAKE_TPU)
+    assert not c.binding.reports[0].swapped           # refusal
+    assert float(c.binding["scale"](jnp.float32(2.0))) == 2.0
+    rt.cleanup()
+
+
+def test_missing_required_op_fails_deployment():
+    reg, _ = _registry()
+    rt = Runtime(registry=reg, host_env={})
+    other = AbiString.make("ghost_op", "nope")
+    bad = Bundle(name="m", tag="t", model_config={}, recipe={},
+                 required_ops={"ghost_op": str(other)}, env={})
+    with pytest.raises(DeploymentError):
+        rt.deploy(bad, native_ops=False, platform=LAPTOP)
+
+
+def test_required_abi_mismatch_fails_deployment():
+    reg, _ = _registry()
+    rt = Runtime(registry=reg, host_env={})
+    wrong = AbiString.make("scale", {"args": ["different"]})
+    bad = Bundle(name="m", tag="t", model_config={}, recipe={},
+                 required_ops={"scale": str(wrong)}, env={})
+    with pytest.raises(DeploymentError):
+        rt.deploy(bad, native_ops=False, platform=LAPTOP)
+
+
+def test_env_export_allowlist():
+    reg, abi = _registry()
+    rt = Runtime(registry=reg, host_env={
+        "REPRO_PLATFORM": "laptop", "SECRET": "x", "REPRO_CHECKPOINT_DIR": "/ckpt",
+    })
+    c = rt.deploy(_bundle(abi), native_ops=False)
+    assert c.env["FOO"] == "bundle"                 # bundle vars exported
+    assert c.env["REPRO_CHECKPOINT_DIR"] == "/ckpt"  # allowlisted host var
+    assert "SECRET" not in c.env                     # host junk filtered
+    rt.cleanup()
+
+
+def test_single_container_per_runtime():
+    reg, abi = _registry()
+    rt = Runtime(registry=reg, host_env={})
+    rt.deploy(_bundle(abi), native_ops=False, platform=LAPTOP)
+    with pytest.raises(DeploymentError):
+        rt.deploy(_bundle(abi), native_ops=False, platform=LAPTOP)
+    rt.cleanup()
+    rt.deploy(_bundle(abi), native_ops=False, platform=LAPTOP)
+    rt.cleanup()
+
+
+def test_freeze_during_execution():
+    reg, abi = _registry()
+    rt = Runtime(registry=reg, host_env={})
+    rt.deploy(_bundle(abi), native_ops=False, platform=LAPTOP)
+    assert reg.frozen
+    rt.cleanup()
+    assert not reg.frozen

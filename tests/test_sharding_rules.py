@@ -1,0 +1,144 @@
+"""Sharding-rule builder: divisibility, fallbacks, axis uniqueness."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.distributed.sharding import (
+    BASELINE_RULES,
+    batch_spec,
+    cache_specs,
+    param_specs,
+)
+from repro.models import build_model
+from repro.models.schema import LeafSpec, leaf_items
+
+
+class FakeMesh:
+    """Just enough mesh for the spec builders (no jax devices needed)."""
+
+    def __init__(self, shape, axes):
+        self.axis_names = axes
+        self.devices = np.zeros(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH_MP = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _flat_specs(arch, mesh):
+    model = build_model(ARCHS[arch])
+    schema = model.schema()
+    specs = param_specs(schema, BASELINE_RULES, mesh)
+    flat_schema = dict(leaf_items(schema))
+    out = []
+
+    def walk(tree, prefix=""):
+        for k, v in tree.items():
+            path = f"{prefix}/{k}" if prefix else k
+            if isinstance(v, P):
+                out.append((path, flat_schema[path], v))
+            else:
+                walk(v, path)
+
+    walk(specs)
+    return out
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mesh", [MESH, MESH_MP], ids=["single", "multi"])
+def test_all_assignments_divisible_and_unique(arch, mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for path, leaf, spec in _flat_specs(arch, mesh):
+        used = []
+        for dim, assignment in enumerate(spec):
+            if assignment is None:
+                continue
+            axes = assignment if isinstance(assignment, tuple) else (assignment,)
+            prod = int(np.prod([sizes[a] for a in axes]))
+            assert leaf.shape[dim] % prod == 0, (
+                f"{arch} {path}: dim {dim} ({leaf.shape[dim]}) not divisible by {prod}"
+            )
+            used.extend(axes)
+        assert len(used) == len(set(used)), f"{arch} {path}: mesh axis reused {spec}"
+
+
+def _norm(assignment):
+    """PartitionSpec normalizes 1-tuples to bare names."""
+    if isinstance(assignment, tuple) and len(assignment) == 1:
+        return assignment[0]
+    return assignment
+
+
+def test_whisper_heads_fall_back_to_head_dim():
+    specs = dict(
+        (p, s) for p, _, s in _flat_specs("whisper-base", MESH)
+    )
+    wq = specs["decoder/p0/attn/wq"]       # (layers, embed, heads, head_dim)
+    # 8 heads % 16 != 0 -> heads dim unsharded, head_dim (64) takes model
+    assert wq[2] is None and wq[3] == "model"
+
+
+def test_qwen_heads_on_model():
+    specs = dict((p, s) for p, _, s in _flat_specs("qwen2-72b", MESH))
+    assert specs["decoder/p0/attn/wq"][2] == "model"
+    assert specs["decoder/p0/mlp/w_in"][2] == "model"
+    # FSDP storage on the embed dim (pod absent -> data only)
+    assert _norm(specs["decoder/p0/mlp/w_in"][1]) == "data"
+
+
+def test_experts_fsdp_over_data():
+    specs = dict((p, s) for p, _, s in _flat_specs("moonshot-v1-16b-a3b", MESH))
+    w_in = specs["decoder/p0/moe/w_in"]      # (layers, E, D, F)
+    assert _norm(w_in[1]) == "data" and w_in[3] == "model"
+
+
+def test_batch_spec_divisibility():
+    assert batch_spec(256, MESH) == ("data",)
+    assert batch_spec(256, MESH_MP) == ("pod", "data")
+    assert batch_spec(2, MESH_MP) == ("pod",)      # 2 divides pod only
+    assert batch_spec(1, MESH) == ()
+
+
+def test_cache_specs_long_context_shards_sequence():
+    model = build_model(ARCHS["jamba-1.5-large-398b"])
+    cache = model.abstract_cache(1, 1 << 16)
+    specs = cache_specs(cache, 1, MESH)
+    kspec = specs["p0"]["k"]                 # (nb, B=1, S, KV=8, dh=128)
+    assert kspec[1] is None                  # B=1 unshardable
+    # kv=8 < 16: the sequence absorbs BOTH the free DP axis and the model
+    # axis (seq-sharded decode beats head_dim sharding: tiny logsumexp
+    # psum instead of multi-GB score all-reduces)
+    assert kspec[2] == ("data", "model")
+    assert kspec[3] is None and kspec[4] is None
+
+
+def test_cache_specs_batched_decode():
+    model = build_model(ARCHS["qwen2-72b"])
+    cache = model.abstract_cache(128, 1 << 15)
+    specs = cache_specs(cache, 128, MESH)
+    kspec = specs["p0"]["k"]
+    assert _norm(kspec[1]) == "data"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dims=st.lists(st.sampled_from([1, 2, 3, 8, 16, 64, 128, 100]), min_size=1, max_size=4),
+    axes=st.lists(
+        st.sampled_from(["embed", "heads", "ff", "vocab", "experts", None]),
+        min_size=1, max_size=4,
+    ),
+)
+def test_builder_never_breaks_divisibility(dims, axes):
+    n = min(len(dims), len(axes))
+    leaf = LeafSpec(tuple(dims[:n]), tuple(axes[:n]))
+    spec = param_specs({"x": leaf}, BASELINE_RULES, MESH)["x"]
+    sizes = {"data": 16, "model": 16}
+    for dim, assignment in enumerate(spec):
+        if assignment is None:
+            continue
+        ax = assignment if isinstance(assignment, tuple) else (assignment,)
+        prod = int(np.prod([sizes[a] for a in ax]))
+        assert leaf.shape[dim] % prod == 0

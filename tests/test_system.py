@@ -1,0 +1,116 @@
+"""End-to-end behaviour: the paper's Fig. 2 workflow + fault-tolerant
+training, on this host's devices."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core import Gateway, Runtime
+from repro.data import DataConfig, SyntheticStream
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import DeployOptions, make_deployment
+from repro.launch.train import make_bundle, train_loop
+from repro.optim import adamw_init
+
+ARCH = "qwen2.5-14b"
+
+
+@pytest.fixture()
+def deployed(tmp_path):
+    """Fig. 2 steps 1-5: build (laptop) -> push -> pull (gateway) -> run."""
+    bundle = make_bundle(ARCH, reduced=True)               # 1-2: build + test
+    gw = Gateway(tmp_path / "registry", tmp_path / "cache")
+    gw.push(bundle)                                        # 3: push
+    flat = gw.pull(f"{bundle.name}:latest")                # 4: shifterimg pull
+    rt = Runtime(host_env={})
+    container = rt.deploy(flat, mesh=make_host_mesh(data=1))   # 5: shifter run
+    yield container, flat
+    rt.cleanup()
+
+
+def _deployment(container, batch=4, seq=32):
+    from repro.configs.base import ModelConfig
+
+    cfg = ModelConfig.from_dict(container.bundle.model_config)
+    shape = ShapeConfig("sys", seq, batch, "train")
+    dep = make_deployment(cfg, shape, container.mesh,
+                          options=DeployOptions(donate=False),
+                          binding=container.binding)
+    stream = SyntheticStream(cfg, shape, DataConfig(seed=3))
+    return cfg, dep, stream
+
+
+def test_workflow_trains_and_loss_decreases(deployed):
+    container, _ = deployed
+    cfg, dep, stream = _deployment(container)
+    _, _, losses = train_loop(dep, stream, steps=12, ckpt_dir=None, log_every=100)
+    assert all(np.isfinite(losses))
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]), losses
+
+
+def test_checkpoint_restart_resumes_identically(deployed, tmp_path):
+    """Kill-and-restart: steps 0..8 == steps 0..4 + restore + 5..8 (the
+    deterministic pipeline + manifest checkpoint together give exact
+    resume)."""
+    container, _ = deployed
+    cfg, dep, stream = _deployment(container)
+    ckpt = tmp_path / "ckpt"
+
+    p_full, o_full, losses_full = train_loop(
+        dep, stream, steps=8, ckpt_dir=None, log_every=100
+    )
+
+    # run 0..4 with checkpointing, then "crash" and resume 4..8
+    train_loop(dep, stream, steps=4, ckpt_dir=ckpt, ckpt_every=100, log_every=100)
+    assert latest_step(ckpt) == 4
+    skeleton = {
+        "params": jax.tree.map(np.asarray, dep.model.init(jax.random.PRNGKey(0))),
+        "opt": jax.tree.map(np.asarray, adamw_init(dep.model.init(jax.random.PRNGKey(0)))),
+    }
+    restored, step = restore_checkpoint(ckpt, skeleton)
+    p2, o2, losses_resumed = train_loop(
+        dep, stream, steps=8, start_step=step, ckpt_dir=None,
+        params=jax.device_put(restored["params"], dep.param_sharding),
+        opt_state=jax.device_put(restored["opt"], dep.opt_sharding),
+        log_every=100,
+    )
+    np.testing.assert_allclose(losses_resumed, losses_full[4:], atol=1e-5, rtol=1e-5)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=2e-5, rtol=2e-5
+        ),
+        p_full, p2,
+    )
+
+
+def test_native_off_vs_on_same_results(deployed):
+    """Table III-V in numeric form: on a platform with no native features
+    the swap is a no-op; binding reports explain why."""
+    container, bundle = deployed
+    assert all(not r.swapped for r in container.binding.reports)
+    assert any("native" in r.reason for r in container.binding.reports)
+
+
+def test_container_describe_mentions_mesh_and_ops(deployed):
+    container, _ = deployed
+    text = container.describe()
+    assert "mesh" in text and "attention" in text
+
+
+def test_straggler_plan_feeds_data_pipeline(deployed):
+    from repro.ft import StragglerConfig, StragglerDetector
+
+    container, _ = deployed
+    cfg, dep, _ = _deployment(container)
+    stream = SyntheticStream(cfg, ShapeConfig("sys", 32, 4, "train"),
+                             DataConfig(seed=3, num_hosts=4))
+    det = StragglerDetector(4, StragglerConfig(threshold=2.0, patience=1))
+    plan = det.observe({0: 1.0, 1: 1.0, 2: 1.0, 3: 8.0})
+    plan = det.observe({0: 1.0, 1: 1.0, 2: 1.0, 3: 8.0})
+    assert 3 in plan.skip_hosts
+    batch = stream.global_batch_at(0, skip_hosts=plan.skip_hosts)
+    assert batch["tokens"].shape[0] == 4   # shape stable under mitigation
