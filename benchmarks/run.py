@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows, as required.
   table2_scaling      Table II  (same container, 1..8 devices)
   table34_collectives Tables III/IV (native vs container collectives)
   table5_kernels      Table V   (kernel GFLOP/s, reference vs native bound)
+  table6_autotune     Table VI  (default vs site-tuned kernel block configs)
   fig3_startup        Fig. 3    (startup metadata storm vs single manifest)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table5_kernels,fig3_startup]
@@ -22,6 +23,7 @@ _MODULES = [
     "table2_scaling",
     "table34_collectives",
     "table5_kernels",
+    "table6_autotune",
     "fig3_startup",
 ]
 

@@ -1,0 +1,10 @@
+"""repro — portable, high-performance program containers for JAX.
+
+Reproduction of "Portable, high-performance containers for HPC"
+(Benedicic et al., 2017) with the container/runtime split rebuilt around
+JAX: ABI-verified op substitution (core), Pallas TPU kernels (kernels),
+site autotuning with a persistent cache (tuning), and the paper's
+deployment/benchmark workflow (launch, benchmarks/).
+"""
+
+__version__ = "0.1.0"

@@ -16,6 +16,11 @@ ids, so single-GPU images run unmodified on multi-GPU hosts.
   REPRO_PLATFORM          explicit site selection (overrides detection),
                           the analogue of the sysadmin's shifter config.
   REPRO_NATIVE_OPS        "1"/"0": default for the --native-ops flag (--mpi).
+  REPRO_AUTOTUNE          "1"/"0": default for the deploy(autotune=) flag —
+                          resolve kernel block configs from the site's
+                          tuning cache (searching on first miss).
+  REPRO_TUNING_CACHE      path of the site-local tuning cache JSON
+                          (consumed by repro.tuning.resolve_cache_path).
 """
 
 from __future__ import annotations
@@ -35,14 +40,17 @@ __all__ = [
     "select_devices",
     "resolve_platform",
     "native_ops_default",
+    "autotune_default",
     "ENV_VISIBLE",
     "ENV_PLATFORM",
     "ENV_NATIVE_OPS",
+    "ENV_AUTOTUNE",
 ]
 
 ENV_VISIBLE = "REPRO_VISIBLE_DEVICES"
 ENV_PLATFORM = "REPRO_PLATFORM"
 ENV_NATIVE_OPS = "REPRO_NATIVE_OPS"
+ENV_AUTOTUNE = "REPRO_AUTOTUNE"
 
 _INT_LIST_RE = re.compile(r"^\s*\d+\s*(,\s*\d+\s*)*$")
 
@@ -117,3 +125,8 @@ def resolve_platform(
 def native_ops_default(env: dict[str, str] | None = None) -> bool:
     env = os.environ if env is None else env
     return env.get(ENV_NATIVE_OPS, "0").strip() == "1"
+
+
+def autotune_default(env: dict[str, str] | None = None) -> bool:
+    env = os.environ if env is None else env
+    return env.get(ENV_AUTOTUNE, "0").strip() == "1"

@@ -55,6 +55,12 @@ class OpImpl:
     # "the nvidia-uvm driver has to be loaded" precondition — the platform
     # may *declare* the feature, but the device must actually be present.
     provider: str = ""                    # human label ("pallas", "jnp", ...)
+    tuner: Any = None                     # optional tuning.OpTuner: lets the
+    # bind-time TuningContext specialize this impl to the site (the impl's
+    # fn must then accept a ``config=`` keyword).  The registry only
+    # carries the hook; it never interprets it.
+    config: Any = None                    # tuning.BlockConfig resolved at bind
+    # time (set by TuningContext.apply); None when untuned.
 
     def available_on(self, platform: Platform) -> bool:
         if self.requires_feature is not None and not platform.has(self.requires_feature):
@@ -94,6 +100,10 @@ class SwapReport:
     kind: ImplKind
     swapped: bool       # True if a native impl replaced the reference
     reason: str         # why this impl (or why the swap was refused)
+    tuning: str = ""    # autotune outcome: "cache-hit", "cache-miss-searched",
+    #                     "cache-miss-default", "search-failed-default";
+    #                     empty when tuning was off or the impl is untunable
+    config: str = ""    # the resolved BlockConfig, printable form
 
 
 class OpBinding(Mapping[str, Callable[..., Any]]):
@@ -109,6 +119,16 @@ class OpBinding(Mapping[str, Callable[..., Any]]):
     def impl(self, name: str) -> OpImpl:
         return self._table[name]
 
+    def tuned_config(self, name: str) -> Any:
+        """The BlockConfig the autotuner bound for this op, or None.
+
+        Lets call sites that historically pass their own tile kwargs (the
+        explicit kwarg always wins inside the kernel) defer to the site's
+        tuned value when one exists.
+        """
+        impl = self._table.get(name)
+        return getattr(impl, "config", None) if impl is not None else None
+
     def __iter__(self):
         return iter(self._table)
 
@@ -119,7 +139,10 @@ class OpBinding(Mapping[str, Callable[..., Any]]):
         lines = []
         for r in self.reports:
             mark = "->" if r.swapped else "=="
-            lines.append(f"  {r.op:<18} {mark} {r.bound:<12} [{r.kind.value}] {r.reason}")
+            line = f"  {r.op:<18} {mark} {r.bound:<12} [{r.kind.value}] {r.reason}"
+            if r.tuning:
+                line += f" | tune: {r.tuning} ({r.config})"
+            lines.append(line)
         return "\n".join(lines)
 
 
@@ -174,6 +197,7 @@ class OpRegistry:
         *,
         native: bool,
         freeze: bool = True,
+        tuning: Any = None,
     ) -> OpBinding:
         """Produce the frozen op table for this deployment.
 
@@ -182,6 +206,11 @@ class OpRegistry:
         whose platform-available native impl is ABI-compatible; refusals
         fall back to the reference, mirroring the paper's behaviour of
         "leave the container's MPI in place".
+
+        ``tuning`` is an optional tuning.TuningContext: after the swap
+        decision, each chosen impl that registered a tuner hook is
+        specialized to the site (cached config injected, or searched on
+        a miss) and the outcome lands in the SwapReport.
         """
         table: dict[str, OpImpl] = {}
         reports: list[SwapReport] = []
@@ -213,10 +242,14 @@ class OpRegistry:
                     chosen, swapped = cand, True
                     reason = f"native swap ({cand.provider}, abi {cand.abi})"
                     break
+            tune_status, config_str = "", ""
+            if tuning is not None:
+                chosen, tune_status, config_str = tuning.apply(name, chosen)
             table[name] = chosen
             reports.append(
                 SwapReport(op=name, bound=chosen.provider or chosen.kind.value,
-                           kind=chosen.kind, swapped=swapped, reason=reason)
+                           kind=chosen.kind, swapped=swapped, reason=reason,
+                           tuning=tune_status, config=config_str)
             )
         if freeze:
             self._frozen = True

@@ -30,6 +30,7 @@ import jax
 from repro.core.bundle import Bundle
 from repro.core.env import (
     ENV_VISIBLE,
+    autotune_default,
     native_ops_default,
     parse_visible_devices,
     resolve_platform,
@@ -45,7 +46,8 @@ log = logging.getLogger("repro.runtime")
 # Host variables a container inherits (Shifter: "selected variables from the
 # host system are also added", per site configuration).
 _HOST_ENV_ALLOWLIST = (ENV_VISIBLE, "REPRO_PLATFORM", "REPRO_CHECKPOINT_DIR",
-                       "REPRO_COMPILE_CACHE")
+                       "REPRO_COMPILE_CACHE", "REPRO_AUTOTUNE",
+                       "REPRO_TUNING_CACHE")
 
 
 class DeploymentError(RuntimeError):
@@ -67,6 +69,7 @@ class Container:
     binding: OpBinding
     env: Mapping[str, str]
     native_ops: bool
+    autotune: bool = False
 
     @property
     def devices(self) -> tuple[jax.Device, ...]:
@@ -78,7 +81,8 @@ class Container:
             f"  platform: {self.platform.name} ({self.platform.description})\n"
             f"  mesh: shape={dict(zip(self.mesh.axis_names, self.mesh.devices.shape))} "
             f"devices={self.mesh.devices.size}\n"
-            f"  native ops: {'enabled' if self.native_ops else 'disabled'}\n"
+            f"  native ops: {'enabled' if self.native_ops else 'disabled'}"
+            f" | autotune: {'on' if self.autotune else 'off'}\n"
         )
         return head + self.binding.describe()
 
@@ -106,6 +110,8 @@ class Runtime:
         devices: Sequence[jax.Device] | None = None,
         extra_ops: Iterable[str] = (),
         freeze: bool = True,
+        autotune: bool | None = None,
+        autotune_ops: Iterable[str] | None = None,
     ) -> Container:
         """Run the preparation stages and hand back the executable Container.
 
@@ -113,6 +119,14 @@ class Runtime:
         default); ``mesh`` may be injected by launchers that already built
         the production mesh (dryrun/train), otherwise one is derived from
         the platform topology and the visible devices.
+
+        ``autotune`` (None -> REPRO_AUTOTUNE env default) opts this
+        deployment into the site tuning cache: bound native kernels get
+        their block configs from REPRO_TUNING_CACHE, searching (and
+        persisting the winner) on a miss.  ``autotune_ops`` restricts
+        which ops may pay the search cost; cache hits and default
+        fallbacks always apply and are recorded per-op in the binding's
+        SwapReports.
         """
         if self._active is not None:
             raise DeploymentError(
@@ -143,8 +157,26 @@ class Runtime:
                     f"bundle requires {want} but site declares {decl.abi}: {why}"
                 )
 
+        # -- stage: site specialization (deferred kernel tuning) -------------
+        if autotune is None:
+            autotune = autotune_default(self.host_env)
+        tuning_ctx = None
+        if autotune:
+            from repro.tuning import TuningCache, TuningContext, resolve_cache_path
+
+            cache_path = resolve_cache_path(self.host_env)
+            tuning_ctx = TuningContext(
+                TuningCache.load(cache_path), platform,
+                ops=autotune_ops if autotune_ops is None else set(autotune_ops),
+            )
+            log.info("autotune on: cache %s (%d entries)",
+                     cache_path, len(tuning_ctx.cache))
+
         ops = list(required) + [o for o in extra_ops if o not in required]
-        binding = self.registry.bind(ops, platform, native=native_ops, freeze=freeze)
+        binding = self.registry.bind(ops, platform, native=native_ops,
+                                     freeze=freeze, tuning=tuning_ctx)
+        if tuning_ctx is not None:
+            tuning_ctx.flush()   # persist freshly searched winners atomically
         for r in binding.reports:
             log.info("bind %-18s %s", r.op, r.reason)
 
@@ -161,6 +193,7 @@ class Runtime:
             binding=binding,
             env=env,
             native_ops=native_ops,
+            autotune=autotune,
         )
         self._active = container
         return container

@@ -22,7 +22,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.tuning.config import BlockConfig, default_config
+
 __all__ = ["flash_attention"]
+
+_DEFAULTS = default_config("attention")   # single source of truth for fallbacks
 
 _NEG_INF = -1e30
 
@@ -92,7 +96,8 @@ def _flash_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+    static_argnames=("causal", "scale", "block_q", "block_k", "config",
+                     "interpret"),
 )
 def flash_attention(
     q: jnp.ndarray,                  # (B, Sq, H, Dh)
@@ -102,10 +107,16 @@ def flash_attention(
     *,
     causal: bool = True,
     scale: float | None = None,
-    block_q: int = 128,
-    block_k: int = 128,
+    block_q: int | None = None,
+    block_k: int | None = None,
+    config: BlockConfig | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    cfg = config if config is not None else _DEFAULTS
+    if block_q is None:
+        block_q = cfg.get("block_q", _DEFAULTS["block_q"])
+    if block_k is None:
+        block_k = cfg.get("block_k", _DEFAULTS["block_k"])
     b, sq, h, dh = q.shape
     sk, kv = k.shape[1], k.shape[2]
     assert h % kv == 0, f"GQA requires H % KV == 0, got {h} % {kv}"

@@ -21,7 +21,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.tuning.config import BlockConfig, default_config
+
 __all__ = ["moe_gmm", "padded_layout"]
+
+_DEFAULTS = default_config("moe_gmm")   # single source of truth for fallbacks
 
 
 def _gmm_kernel(te_ref, x_ref, w_ref, o_ref):
@@ -70,16 +74,24 @@ def padded_layout(group_sizes: jnp.ndarray, total: int, block_m: int):
     return row_dest, tile_expert, padded_rows
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "config", "interpret")
+)
 def moe_gmm(
     x: jnp.ndarray,              # (T, D) sorted by expert
     w: jnp.ndarray,              # (E, D, F)
     group_sizes: jnp.ndarray,    # (E,) int32, sum == T
     *,
-    block_m: int = 128,
-    block_n: int = 128,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    config: BlockConfig | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    cfg = config if config is not None else _DEFAULTS
+    if block_m is None:
+        block_m = cfg.get("block_m", _DEFAULTS["block_m"])
+    if block_n is None:
+        block_n = cfg.get("block_n", _DEFAULTS["block_n"])
     t, d = x.shape
     e, _, f = w.shape
     block_n = min(block_n, f)

@@ -12,6 +12,9 @@ from __future__ import annotations
 
 import functools
 
+import jax
+import jax.numpy as jnp
+
 from repro.core.abi import AbiString
 from repro.core.registry import ImplKind, OpImpl, OpRegistry, global_registry
 from repro.kernels.flash_attention import flash_attention
@@ -22,8 +25,9 @@ from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.rmsnorm_ref import rmsnorm_ref
 from repro.kernels.ssd_scan import ssd_scan
 from repro.kernels.ssd_scan_ref import ssd_scan_ref
+from repro.tuning import OpTuner
 
-__all__ = ["ABIS", "OP_NAMES", "register_all", "default_binding"]
+__all__ = ["ABIS", "OP_NAMES", "register_all", "default_binding", "tuners"]
 
 # Canonical signatures: the structural part of the ABI string.  Changing a
 # signature (or the semantic major version) makes old native kernels
@@ -65,17 +69,18 @@ OP_NAMES: tuple[str, ...] = tuple(sorted(ABIS))
 
 
 # -- native call-convention adapters ----------------------------------------
-def _native_attention(q, k, v, *, causal=True, scale=None, interpret=False):
-    return flash_attention(q, k, v, causal=causal, scale=scale,
+def _native_attention(q, k, v, *, causal=True, scale=None, config=None,
+                      interpret=False):
+    return flash_attention(q, k, v, causal=causal, scale=scale, config=config,
                            interpret=interpret)
 
 
 def _native_decode_attention(q, k_cache, v_cache, pos, *, scale=None,
-                             interpret=False):
+                             config=None, interpret=False):
     # decode = flash with Sq=1 over the written prefix of the cache
     return flash_attention(
         q, k_cache, v_cache, kv_len=pos + 1, causal=False, scale=scale,
-        interpret=interpret,
+        config=config, interpret=interpret,
     )
 
 
@@ -117,6 +122,183 @@ _NATIVES_INTERPRET = {
     "moe_gmm": functools.partial(moe_gmm, interpret=True),
 }
 
+# -- autotuner hooks ---------------------------------------------------------
+# Per-op config spaces + canonical workloads the TuningContext measures at
+# bind time.  Example shapes are platform-scaled: small on cpu-host
+# hardware (interpret mode runs the kernel body through the HLO
+# interpreter — correctness-exact, orders of magnitude slower), full-size
+# on real accelerators.  Feasibility pruning rejects candidates whose
+# VMEM working set overflows or whose blocks don't fit the workload
+# before anything is compiled.
+
+_VMEM_BUDGET = 12 * 2**20   # bytes/core usable for kernel tiles (16M - headroom)
+
+
+def _is_cpu(platform) -> bool:
+    return platform.hardware.name == "cpu-host"
+
+
+# Abstract workloads (ShapeDtypeStructs) are the single source of the
+# example geometry: cache keys are derived from them without allocating
+# anything; the _example_* materializers fill them in only when a search
+# actually runs.
+
+def _spec_rmsnorm(platform):
+    rows, d = (128, 256) if _is_cpu(platform) else (8192, 4096)
+    return (jax.ShapeDtypeStruct((rows, d), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32))
+
+
+def _example_rmsnorm(platform):
+    sx, sw = _spec_rmsnorm(platform)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    return (jax.random.normal(k1, sx.shape, sx.dtype),
+            jax.random.normal(k2, sw.shape, sw.dtype))
+
+
+def _feasible_rmsnorm(cfg, platform, args):
+    rows, d = args[0].shape
+    br = cfg["block_rows"]
+    return br <= rows and (3 * br * d + d) * 4 <= _VMEM_BUDGET
+
+
+def _spec_attention(platform):
+    b, s, h, kv, dh = (1, 64, 2, 2, 64) if _is_cpu(platform) else (4, 2048, 16, 4, 128)
+    return (jax.ShapeDtypeStruct((b, s, h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, s, kv, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, s, kv, dh), jnp.float32))
+
+
+def _example_attention(platform):
+    specs = _spec_attention(platform)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    return tuple(jax.random.normal(k, s.shape, s.dtype)
+                 for k, s in zip(ks, specs))
+
+
+def _feasible_attention(cfg, platform, args):
+    sq, dh = args[0].shape[1], args[0].shape[3]
+    sk = args[1].shape[1]
+    bq, bk = cfg["block_q"], cfg["block_k"]
+    vmem = (2 * bq * dh + 2 * bk * dh + bq * bk + 2 * bq) * 4
+    return bq <= sq and bk <= sk and vmem <= _VMEM_BUDGET
+
+
+def _spec_decode(platform):
+    b, smax, h, kv, dh = (1, 64, 2, 2, 64) if _is_cpu(platform) else (8, 4096, 16, 4, 128)
+    return (jax.ShapeDtypeStruct((b, 1, h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, smax, kv, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, smax, kv, dh), jnp.float32),
+            smax // 2)
+
+
+def _example_decode(platform):
+    sq, sk, sv, pos = _spec_decode(platform)
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    return (jax.random.normal(ks[0], sq.shape, sq.dtype),
+            jax.random.normal(ks[1], sk.shape, sk.dtype),
+            jax.random.normal(ks[2], sv.shape, sv.dtype),
+            pos)
+
+
+def _feasible_decode(cfg, platform, args):
+    smax, dh = args[1].shape[1], args[1].shape[3]
+    bk = cfg["block_k"]
+    return bk <= smax and (2 * dh + 2 * bk * dh + bk + 2) * 4 <= _VMEM_BUDGET
+
+
+def _spec_ssd(platform):
+    b, s, h, p, g, n = (1, 64, 2, 16, 1, 16) if _is_cpu(platform) else (2, 2048, 8, 64, 1, 64)
+    return (jax.ShapeDtypeStruct((b, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, s, h), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+            jax.ShapeDtypeStruct((b, s, g, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, s, g, n), jnp.float32))
+
+
+def _example_ssd(platform):
+    sx, sdt, sa, sb, sc = _spec_ssd(platform)
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    return (jax.random.normal(ks[0], sx.shape, sx.dtype) * 0.3,
+            jax.nn.softplus(jax.random.normal(ks[1], sdt.shape, sdt.dtype)),
+            -jnp.exp(jax.random.normal(ks[2], sa.shape, sa.dtype) * 0.3),
+            jax.random.normal(ks[3], sb.shape, sb.dtype) * 0.3,
+            jax.random.normal(ks[4], sc.shape, sc.dtype) * 0.3)
+
+
+def _feasible_ssd(cfg, platform, args):
+    s, p = args[0].shape[1], args[0].shape[3]
+    n = args[3].shape[3]
+    q = cfg["chunk"]
+    vmem = (q * p + 2 * q * n + q * q + n * p) * 4
+    return q <= s and s % q == 0 and vmem <= _VMEM_BUDGET
+
+
+def _spec_moe(platform):
+    t, d, e, f = (128, 64, 4, 64) if _is_cpu(platform) else (8192, 2048, 8, 2048)
+    return (jax.ShapeDtypeStruct((t, d), jnp.float32),
+            jax.ShapeDtypeStruct((e, d, f), jnp.float32),
+            jax.ShapeDtypeStruct((e,), jnp.int32))
+
+
+def _example_moe(platform):
+    sx, sw, sg = _spec_moe(platform)
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    t, e = sx.shape[0], sg.shape[0]
+    return (jax.random.normal(ks[0], sx.shape, sx.dtype),
+            jax.random.normal(ks[1], sw.shape, sw.dtype),
+            jnp.full((e,), t // e, sg.dtype))
+
+
+def _feasible_moe(cfg, platform, args):
+    t, d = args[0].shape
+    f = args[1].shape[2]
+    bm, bn = cfg["block_m"], cfg["block_n"]
+    vmem = (bm * d + d * bn + bm * bn) * 4
+    return bm <= t and bn <= f and vmem <= _VMEM_BUDGET
+
+
+_TUNERS: dict[str, OpTuner] = {
+    "rmsnorm": OpTuner(
+        op="rmsnorm",
+        space={"block_rows": (8, 16, 32, 64, 128, 256, 512)},
+        example_args=_example_rmsnorm, feasible=_feasible_rmsnorm,
+        example_specs=_spec_rmsnorm,
+    ),
+    "attention": OpTuner(
+        op="attention",
+        space={"block_q": (16, 32, 64, 128, 256),
+               "block_k": (16, 32, 64, 128, 256)},
+        example_args=_example_attention, feasible=_feasible_attention,
+        example_specs=_spec_attention,
+    ),
+    "decode_attention": OpTuner(
+        op="decode_attention",
+        space={"block_k": (16, 32, 64, 128, 256, 512)},
+        example_args=_example_decode, feasible=_feasible_decode,
+        example_specs=_spec_decode,
+    ),
+    "ssd_scan": OpTuner(
+        op="ssd_scan",
+        space={"chunk": (8, 16, 32, 64, 128, 256)},
+        example_args=_example_ssd, feasible=_feasible_ssd,
+        example_specs=_spec_ssd,
+    ),
+    "moe_gmm": OpTuner(
+        op="moe_gmm",
+        space={"block_m": (8, 16, 32, 64, 128, 256),
+               "block_n": (8, 16, 32, 64, 128, 256)},
+        example_args=_example_moe, feasible=_feasible_moe,
+        example_specs=_spec_moe,
+    ),
+}
+
+
+def tuners() -> dict[str, OpTuner]:
+    """The per-op tuner hooks (shared by the TPU and interpret impls)."""
+    return dict(_TUNERS)
+
+
 _registered: set[int] = set()
 
 
@@ -134,13 +316,14 @@ def register_all(registry: OpRegistry | None = None) -> OpRegistry:
         reg.register(
             OpImpl(abi=ABIS[name], kind=ImplKind.NATIVE, fn=_NATIVES[name],
                    requires_feature="pallas_kernels",
-                   requires_device_kind="tpu", provider="pallas-tpu")
+                   requires_device_kind="tpu", provider="pallas-tpu",
+                   tuner=_TUNERS.get(name))
         )
         reg.register(
             OpImpl(abi=ABIS[name], kind=ImplKind.NATIVE,
                    fn=_NATIVES_INTERPRET[name],
                    requires_feature="pallas_interpret",
-                   provider="pallas-interpret")
+                   provider="pallas-interpret", tuner=_TUNERS.get(name))
         )
     _registered.add(id(reg))
     return reg

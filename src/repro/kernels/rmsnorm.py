@@ -4,6 +4,10 @@ Tiling: rows are blocked into (block_rows, D) VMEM tiles; the full feature
 dimension stays resident so the reduction never leaves VMEM.  fp32 math,
 input-dtype store.  D should be a multiple of 128 (lane width); the
 assigned archs all satisfy this (smallest is whisper's 512).
+
+block_rows comes from (in order) the explicit kwarg, the injected
+``config`` (a tuning.BlockConfig, normally bound by the autotuner at
+deployment), or the built-in default.
 """
 
 from __future__ import annotations
@@ -14,7 +18,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.tuning.config import BlockConfig, default_config
+
 __all__ = ["rmsnorm"]
+
+_DEFAULTS = default_config("rmsnorm")   # single source of truth for fallbacks
 
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
@@ -24,15 +32,21 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
     o_ref[...] = (y * w_ref[...].astype(jnp.float32)[None, :]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("eps", "block_rows", "config", "interpret")
+)
 def rmsnorm(
     x: jnp.ndarray,
     weight: jnp.ndarray,
     *,
     eps: float = 1e-6,
-    block_rows: int = 256,
+    block_rows: int | None = None,
+    config: BlockConfig | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    if block_rows is None:
+        cfg = config if config is not None else _DEFAULTS
+        block_rows = cfg.get("block_rows", _DEFAULTS["block_rows"])
     orig_shape = x.shape
     d = orig_shape[-1]
     x2 = x.reshape(-1, d)

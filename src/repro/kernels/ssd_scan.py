@@ -14,13 +14,18 @@ O(Q*P + Q*N + Q*Q + N*P) fp32 — ~0.5 MB for Q=128, P=64, N=128.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.tuning.config import BlockConfig, default_config
+
 __all__ = ["ssd_scan"]
+
+_DEFAULTS = default_config("ssd_scan")   # single source of truth for fallbacks
 
 
 def _ssd_kernel(
@@ -82,7 +87,7 @@ def _ssd_kernel(
     st_ref[0, 0] = new_state                        # last chunk's write survives
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("chunk", "config", "interpret"))
 def ssd_scan(
     x: jnp.ndarray,     # (B, S, H, P)
     dt: jnp.ndarray,    # (B, S, H)
@@ -90,10 +95,18 @@ def ssd_scan(
     Bm: jnp.ndarray,    # (B, S, G, N)
     Cm: jnp.ndarray,    # (B, S, G, N)
     *,
-    chunk: int = 128,
+    chunk: int | None = None,
+    config: BlockConfig | None = None,
     interpret: bool = False,
 ):
     b, s, h, p = x.shape
+    if chunk is None:
+        cfg = config if config is not None else _DEFAULTS
+        chunk = min(cfg.get("chunk", _DEFAULTS["chunk"]), s)
+        if s % chunk:
+            # a tuned/default tile that doesn't divide this sequence degrades
+            # to the largest common divisor instead of tripping the assert
+            chunk = math.gcd(chunk, s)
     g, n = Bm.shape[2], Bm.shape[3]
     assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
     nc = s // chunk

@@ -12,6 +12,8 @@ length, which is what makes the `long_500k` cell runnable.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -91,7 +93,14 @@ def ssm_apply(
     bmg = bm.reshape(b, s, _NGROUPS, n)
     cmg = cm.reshape(b, s, _NGROUPS, n)
 
-    chunk = min(cfg.ssm_chunk, s)
+    # The chunk is a pure implementation tile: a site-tuned binding knows a
+    # better value than the model config's static ssm_chunk, so defer to it
+    # (falling back to the largest divisor when it doesn't divide this seq).
+    tuned = getattr(binding, "tuned_config", lambda name: None)("ssd_scan")
+    chunk = tuned["chunk"] if tuned is not None and "chunk" in tuned else cfg.ssm_chunk
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = math.gcd(chunk, s)
     y, state = binding["ssd_scan"](xh, dt, a, bmg, cmg, chunk=chunk)
     y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(b, s, h * p)

@@ -1,0 +1,30 @@
+"""repro.tuning — per-platform kernel autotuning with a persistent site cache.
+
+The deferred-specialization layer: Pallas kernels declare a tunable
+`BlockConfig`, native registrations carry an `OpTuner` hook, and at
+deployment the Runtime's `TuningContext` resolves each op's config from
+the site-local `TuningCache` (searching and persisting on first miss).
+The bundle stays portable; the site contributes its tuned parameters —
+the analogue of Shifter's site-specific bind mount.
+"""
+
+from repro.tuning.cache import (
+    ENV_TUNING_CACHE,
+    SCHEMA_VERSION,
+    CacheKey,
+    TuningCache,
+    bucket_shapes,
+    platform_fingerprint,
+    resolve_cache_path,
+)
+from repro.tuning.config import BlockConfig, default_config
+from repro.tuning.search import Measurement, SearchResult, enumerate_space, measure, search
+from repro.tuning.tuner import OpTuner, TuneEvent, TuningContext
+
+__all__ = [
+    "ENV_TUNING_CACHE", "SCHEMA_VERSION", "CacheKey", "TuningCache",
+    "bucket_shapes", "platform_fingerprint", "resolve_cache_path",
+    "BlockConfig", "default_config",
+    "Measurement", "SearchResult", "enumerate_space", "measure", "search",
+    "OpTuner", "TuneEvent", "TuningContext",
+]

@@ -1,0 +1,222 @@
+"""Site-local tuning cache — the bind-mount of tuned kernel parameters.
+
+The bundle stays portable; the *site* contributes its tuned block
+configurations, exactly like Shifter's site-specific volume: a JSON file
+keyed by (ABI string, platform fingerprint, input-shape bucket, dtype)
+that survives process restarts, so the search cost is paid once per site
+and amortized over every later deployment.
+
+Properties:
+
+  * atomic writes — a concurrent reader never sees a torn file (write to
+    a temp file in the same directory, then os.replace);
+  * versioned schema — a cache written by an incompatible version is
+    ignored wholesale, falling back to the built-in defaults;
+  * corruption-safe — unparseable files degrade to an empty cache with a
+    warning, never an exception (a bad cache must not kill a deployment);
+  * relocatable — REPRO_TUNING_CACHE overrides the default location.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import logging
+import math
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Mapping, Sequence
+
+from repro.tuning.config import BlockConfig
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "ENV_TUNING_CACHE",
+    "CacheKey",
+    "TuningCache",
+    "resolve_cache_path",
+    "platform_fingerprint",
+    "bucket_shapes",
+]
+
+log = logging.getLogger("repro.tuning")
+
+SCHEMA_VERSION = 1
+ENV_TUNING_CACHE = "REPRO_TUNING_CACHE"
+_DEFAULT_CACHE = Path("~/.cache/repro/tuning.json")
+
+
+def resolve_cache_path(env: Mapping[str, str] | None = None) -> Path:
+    """REPRO_TUNING_CACHE override, else the per-user default location."""
+    env = os.environ if env is None else env
+    override = str(env.get(ENV_TUNING_CACHE, "")).strip()
+    if override:
+        return Path(override).expanduser()
+    return _DEFAULT_CACHE.expanduser()
+
+
+def platform_fingerprint(platform: Any) -> str:
+    """Identity of the site a tuned config is valid for.
+
+    Platform name + hardware name + the actually-present JAX backend:
+    the same pod-sim cache entry must not be replayed on a real TPU.
+    """
+    import jax
+
+    return f"{platform.name}/{platform.hardware.name}/{jax.default_backend()}"
+
+
+def _bucket(n: int) -> int:
+    """Round a dimension up to the next power of two (1 stays 1)."""
+    return 1 if n <= 1 else 1 << math.ceil(math.log2(n))
+
+
+def bucket_shapes(args: Sequence[Any]) -> tuple[str, str]:
+    """(shape-bucket string, dtype) of a workload's array arguments.
+
+    Bucketing to powers of two lets nearby geometries share one tuned
+    entry instead of re-searching per exact shape; scalars and Python
+    ints (step counters etc.) carry no geometry and are skipped.
+    """
+    shapes = []
+    dtype = "none"
+    for a in args:
+        shape = getattr(a, "shape", None)
+        if shape is None or not hasattr(a, "dtype"):
+            continue
+        if dtype == "none":
+            dtype = str(a.dtype)
+        shapes.append("x".join(str(_bucket(int(d))) for d in shape) or "scalar")
+    return ",".join(shapes), dtype
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class CacheKey:
+    """(ABI, platform fingerprint, shape bucket, dtype) — the lookup key."""
+
+    abi: str
+    platform: str
+    shapes: str
+    dtype: str
+
+    def encode(self) -> str:
+        return "|".join((self.abi, self.platform, self.shapes, self.dtype))
+
+    @classmethod
+    def from_args(cls, abi: str, platform: Any, args: Sequence[Any]) -> "CacheKey":
+        shapes, dtype = bucket_shapes(args)
+        fp = platform if isinstance(platform, str) else platform_fingerprint(platform)
+        return cls(abi=abi, platform=fp, shapes=shapes, dtype=dtype)
+
+
+class TuningCache:
+    """JSON-backed persistent map: CacheKey -> (BlockConfig, metrics)."""
+
+    def __init__(self, path: str | os.PathLike,
+                 entries: Mapping[str, dict] | None = None) -> None:
+        self.path = Path(path)
+        self._entries: dict[str, dict] = dict(entries or {})
+        self.dirty = False
+
+    # -- loading -----------------------------------------------------------
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> "TuningCache":
+        """Read a cache file; any defect degrades to an empty cache."""
+        p = Path(path)
+        try:
+            raw = json.loads(p.read_text())
+        except FileNotFoundError:
+            return cls(p)
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+            log.warning("tuning cache %s unreadable (%s); starting empty", p, e)
+            return cls(p)
+        if not isinstance(raw, dict) or raw.get("schema") != SCHEMA_VERSION:
+            log.warning(
+                "tuning cache %s has schema %r (want %d); ignoring it",
+                p, raw.get("schema") if isinstance(raw, dict) else None,
+                SCHEMA_VERSION,
+            )
+            return cls(p)
+        entries: dict[str, dict] = {}
+        for key, entry in (raw.get("entries") or {}).items():
+            try:
+                BlockConfig.from_dict(entry["config"])
+            except Exception:
+                log.warning("tuning cache %s: dropping malformed entry %r", p, key)
+                continue
+            entries[key] = entry
+        return cls(p, entries)
+
+    # -- access ------------------------------------------------------------
+    def get(self, key: CacheKey) -> BlockConfig | None:
+        entry = self._entries.get(key.encode())
+        if entry is None:
+            return None
+        return BlockConfig.from_dict(entry["config"])
+
+    def metrics(self, key: CacheKey) -> dict:
+        entry = self._entries.get(key.encode())
+        return dict(entry.get("metrics", {})) if entry else {}
+
+    def put(self, key: CacheKey, config: BlockConfig,
+            metrics: Mapping[str, Any] | None = None) -> None:
+        self._entries[key.encode()] = {
+            "config": config.to_dict(),
+            "metrics": dict(metrics or {}),
+        }
+        self.dirty = True
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        return key.encode() in self._entries
+
+    # -- persistence ---------------------------------------------------------
+    @staticmethod
+    @contextlib.contextmanager
+    def _locked(lock_path: Path):
+        """Exclusive advisory lock held across load-merge-replace (POSIX);
+        on platforms without fcntl the merge still narrows the race."""
+        try:
+            import fcntl
+        except ImportError:
+            yield
+            return
+        with open(lock_path, "w") as lf:
+            fcntl.flock(lf, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lf, fcntl.LOCK_UN)
+
+    def save(self) -> Path:
+        """Atomically write the cache (temp file + rename, same filesystem).
+
+        The whole load-merge-replace runs under an exclusive sidecar lock:
+        two deployments that tuned *different* ops concurrently both keep
+        their winners.  On a same-key conflict this process's entry wins —
+        last writer's measurement, both valid.
+        """
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with self._locked(self.path.with_name(self.path.name + ".lock")):
+            on_disk = TuningCache.load(self.path)
+            if on_disk._entries:
+                self._entries = {**on_disk._entries, **self._entries}
+            payload = {"schema": SCHEMA_VERSION, "entries": self._entries}
+            fd, tmp = tempfile.mkstemp(dir=self.path.parent,
+                                       prefix=self.path.name, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+        self.dirty = False
+        return self.path

@@ -1,0 +1,112 @@
+"""BlockConfig — the tunable tile geometry of a Pallas kernel.
+
+The kernels used to hard-code their block sizes; that made "native"
+performance native only on the geometry the author tuned for.  A
+`BlockConfig` lifts those constants into a hashable value object the
+autotuner can search over and the tuning cache can persist — the knob
+the deployment site turns, not the bundle author.
+
+Resolution order inside a kernel wrapper is always:
+
+  explicit kwarg (caller knows best)  >  config=BlockConfig  >  default
+
+so the pre-tuning call sites keep working unchanged and the registry can
+inject a tuned config without touching the model code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+__all__ = ["BlockConfig", "default_config"]
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class BlockConfig:
+    """Immutable, hashable name->int parameter set (jit-static friendly)."""
+
+    items: tuple[tuple[str, int], ...] = ()
+
+    def __post_init__(self) -> None:
+        for name, value in self.items:
+            if not isinstance(name, str) or not name:
+                raise ValueError(f"bad parameter name {name!r}")
+            if not isinstance(value, int) or isinstance(value, bool) or value <= 0:
+                raise ValueError(f"parameter {name!r} must be a positive int, got {value!r}")
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def make(cls, **params: int) -> "BlockConfig":
+        return cls(items=tuple(sorted(params.items())))
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "BlockConfig":
+        return cls(items=tuple(sorted((str(k), int(v)) for k, v in d.items())))
+
+    # -- access -----------------------------------------------------------
+    def get(self, name: str, default: int | None = None) -> int | None:
+        for k, v in self.items:
+            if k == name:
+                return v
+        return default
+
+    def __getitem__(self, name: str) -> int:
+        v = self.get(name)
+        if v is None:
+            raise KeyError(name)
+        return v
+
+    def __contains__(self, name: str) -> bool:
+        return self.get(name) is not None
+
+    def override(self, **params: int) -> "BlockConfig":
+        merged = dict(self.items)
+        merged.update(params)
+        return BlockConfig.make(**merged)
+
+    def to_dict(self) -> dict[str, int]:
+        return dict(self.items)
+
+    def __str__(self) -> str:
+        if not self.items:
+            return "<empty>"
+        return ",".join(f"{k}={v}" for k, v in self.items)
+
+
+# The pre-autotuner hard-coded constants, preserved verbatim as the
+# untuned fallback: a site that never runs the tuner behaves exactly like
+# the seed repo did.
+_OP_DEFAULTS: dict[str, BlockConfig] = {
+    "rmsnorm": BlockConfig.make(block_rows=256),
+    "attention": BlockConfig.make(block_q=128, block_k=128),
+    "decode_attention": BlockConfig.make(block_q=128, block_k=128),
+    "ssd_scan": BlockConfig.make(chunk=128),
+    "moe_gmm": BlockConfig.make(block_m=128, block_n=128),
+}
+
+# Per-platform refinements of the fallback (still not *tuned* — just a
+# better guess than the TPU constants where the hardware is known to be
+# different).  Keyed by (platform name, op name).
+_PLATFORM_DEFAULTS: dict[tuple[str, str], BlockConfig] = {
+    # interpret-mode simulation host: small tiles keep per-call latency sane
+    ("pod-sim", "rmsnorm"): BlockConfig.make(block_rows=64),
+    ("pod-sim", "attention"): BlockConfig.make(block_q=32, block_k=32),
+    ("pod-sim", "decode_attention"): BlockConfig.make(block_q=32, block_k=32),
+    ("pod-sim", "ssd_scan"): BlockConfig.make(chunk=32),
+    ("pod-sim", "moe_gmm"): BlockConfig.make(block_m=32, block_n=32),
+}
+
+
+def default_config(op: str, platform: Any | None = None) -> BlockConfig:
+    """Fallback config for `op` — platform-specific if one is registered.
+
+    `platform` may be a Platform object or its name; None means the
+    generic (TPU-tuned) constants the kernels shipped with.
+    """
+    if platform is not None:
+        name = platform if isinstance(platform, str) else platform.name
+        hit = _PLATFORM_DEFAULTS.get((name, op))
+        if hit is not None:
+            return hit
+    return _OP_DEFAULTS.get(op, BlockConfig())

@@ -1,0 +1,125 @@
+"""Config-space search: enumerate, prune, measure, pick the winner.
+
+The search is deliberately boring — exhaustive enumeration of a small
+per-op space with feasibility pruning (VMEM working set, shape
+divisibility) before anything is compiled, then timed best-of-k runs of
+the survivors.  Exhaustive-over-pruned beats clever-over-huge at kernel
+granularity: spaces are tens of points, a measurement is milliseconds,
+and the result is cached per site anyway.
+
+Everything here is interpret-mode safe: a "measurement" is whatever the
+candidate callable does, so CPU CI tunes the interpreted kernel bodies
+with the exact same machinery a TPU site uses on the real ones.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import logging
+import time
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+
+from repro.tuning.config import BlockConfig
+
+__all__ = ["Measurement", "SearchResult", "enumerate_space", "measure", "search"]
+
+log = logging.getLogger("repro.tuning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    config: BlockConfig
+    seconds: float          # best-of-k wall clock per call
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    best: BlockConfig | None            # None if nothing survived
+    best_seconds: float
+    measurements: tuple[Measurement, ...]
+    pruned: int                          # candidates rejected pre-measurement
+    failed: int                          # candidates that raised while running
+
+    def speedup_over(self, config: BlockConfig) -> float | None:
+        """Measured best-time ratio vs `config`, if it was measured."""
+        for m in self.measurements:
+            if m.config == config and self.best_seconds > 0:
+                return m.seconds / self.best_seconds
+        return None
+
+
+def enumerate_space(space: Mapping[str, Sequence[int]]) -> list[BlockConfig]:
+    """Cartesian product of the per-parameter value lists."""
+    names = sorted(space)
+    configs = []
+    for values in itertools.product(*(space[n] for n in names)):
+        configs.append(BlockConfig.make(**dict(zip(names, values))))
+    return configs
+
+
+def measure(run: Callable[[], Any], *, iters: int = 2, warmup: int = 1) -> float:
+    """Best-of-k seconds per call; `run` must block until the result is ready.
+
+    Best-of (not median) because tuning wants the noise floor: scheduling
+    jitter only ever adds time, so the minimum is the cleanest estimate of
+    what the config can do.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(run())
+    best = float("inf")
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def search(
+    run_with: Callable[[BlockConfig], Any],
+    space: Mapping[str, Sequence[int]],
+    *,
+    feasible: Callable[[BlockConfig], bool] | None = None,
+    iters: int = 2,
+    warmup: int = 1,
+) -> SearchResult:
+    """Measure every feasible config; return the fastest.
+
+    `run_with(config)` executes the op once with that config (compiling on
+    first use — compile time is excluded by the warmup run).  A candidate
+    that raises is recorded as failed and skipped, so an over-eager space
+    never aborts the search.
+    """
+    candidates = enumerate_space(space)
+    pruned = 0
+    if feasible is not None:
+        kept = []
+        for c in candidates:
+            try:
+                ok = feasible(c)
+            except Exception:
+                ok = False
+            if ok:
+                kept.append(c)
+            else:
+                pruned += 1
+        candidates = kept
+    measurements: list[Measurement] = []
+    failed = 0
+    for cfg in candidates:
+        try:
+            secs = measure(lambda: run_with(cfg), iters=iters, warmup=warmup)
+        except Exception as e:
+            failed += 1
+            log.debug("candidate %s failed: %s", cfg, e)
+            continue
+        measurements.append(Measurement(config=cfg, seconds=secs))
+    if not measurements:
+        return SearchResult(best=None, best_seconds=float("inf"),
+                            measurements=(), pruned=pruned, failed=failed)
+    winner = min(measurements, key=lambda m: m.seconds)
+    return SearchResult(best=winner.config, best_seconds=winner.seconds,
+                        measurements=tuple(measurements), pruned=pruned,
+                        failed=failed)

@@ -1,0 +1,85 @@
+"""Autotune smoke — the end-to-end proof the CI job runs on CPU.
+
+Deploys a minimal bundle twice on the ``pod-sim`` platform (Pallas
+kernels in interpret mode, so this needs no TPU):
+
+  1st deploy  autotune=on, empty cache  -> rmsnorm is searched, the
+              winner is persisted to REPRO_TUNING_CACHE
+              (SwapReport.tuning == "cache-miss-searched")
+  2nd deploy  fresh Runtime, same cache -> rmsnorm binds straight from
+              the cache (SwapReport.tuning == "cache-hit")
+
+Exits non-zero if any stage does not behave exactly as claimed.
+
+Usage:  python -m repro.tuning.smoke [--cache PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+from pathlib import Path
+
+from repro.core.bundle import Bundle
+from repro.core.registry import OpRegistry
+from repro.core.runtime import Runtime
+from repro.kernels.ops import ABIS, register_all
+
+
+def _bundle() -> Bundle:
+    return Bundle(
+        name="autotune-smoke", tag="latest", model_config={}, recipe={},
+        required_ops={"rmsnorm": str(ABIS["rmsnorm"])}, env={},
+    )
+
+
+def _deploy_once(cache_path: Path) -> str:
+    """One full deploy on pod-sim; returns rmsnorm's tuning status."""
+    host_env = {
+        "REPRO_PLATFORM": "pod-sim",
+        "REPRO_TUNING_CACHE": str(cache_path),
+    }
+    rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    container = rt.deploy(_bundle(), native_ops=True, autotune=True,
+                          autotune_ops=["rmsnorm"])
+    print(container.describe())
+    report = next(r for r in container.binding.reports if r.op == "rmsnorm")
+    if not report.swapped or report.bound != "pallas-interpret":
+        raise AssertionError(
+            f"expected the interpret kernel to be swapped in, got: {report}"
+        )
+    rt.cleanup()
+    return report.tuning
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--cache", default=None,
+                    help="tuning cache path (default: a fresh temp file)")
+    args = ap.parse_args(argv)
+    cache_path = Path(
+        args.cache
+        if args.cache
+        else Path(tempfile.mkdtemp(prefix="repro-tune-")) / "tuning.json"
+    )
+
+    first = _deploy_once(cache_path)
+    if first != "cache-miss-searched":
+        print(f"FAIL: first deploy expected cache-miss-searched, got {first!r}")
+        return 1
+    if not cache_path.is_file() or cache_path.stat().st_size == 0:
+        print(f"FAIL: no tuning cache written at {cache_path}")
+        return 1
+
+    second = _deploy_once(cache_path)
+    if second != "cache-hit":
+        print(f"FAIL: second deploy expected cache-hit, got {second!r}")
+        return 1
+
+    print(f"OK: tuned rmsnorm persisted to {cache_path} and replayed on redeploy")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

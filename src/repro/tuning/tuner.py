@@ -1,0 +1,172 @@
+"""OpTuner + TuningContext — deferred specialization at bind time.
+
+An `OpTuner` is the hook a NATIVE implementation registers alongside its
+callable: the config space, a canonical per-platform example workload,
+and a feasibility predicate (VMEM working set, shape divisibility).  The
+registry never imports this module; it just carries the hook and hands
+it to whatever `TuningContext` the Runtime passes into `bind()` — the
+same inversion the paper uses for site resources: the bundle declares
+*what* can be specialized, the site decides *whether and when*.
+
+`TuningContext.apply` resolves one bound impl:
+
+  cache hit            -> inject the cached config        ("cache-hit")
+  miss, op selected    -> search now, persist the winner  ("cache-miss-searched")
+  miss, not selected   -> platform-default config         ("cache-miss-default")
+  search found nothing -> platform-default config         ("search-failed-default")
+
+Every outcome is surfaced in the binding's SwapReport so EXPERIMENTS
+logs show exactly which deployments ran tuned and from where.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+from repro.tuning.cache import CacheKey, TuningCache, platform_fingerprint
+from repro.tuning.config import BlockConfig, default_config
+from repro.tuning.search import SearchResult, search
+
+__all__ = ["OpTuner", "TuningContext", "TuneEvent"]
+
+log = logging.getLogger("repro.tuning")
+
+
+@dataclasses.dataclass(frozen=True)
+class OpTuner:
+    """Registered next to a native impl: how to specialize it to a site.
+
+    The impl's callable must accept a ``config=BlockConfig`` keyword; the
+    context injects the resolved config via functools.partial, so model
+    code keeps calling the op with its ordinary arguments.
+    """
+
+    op: str
+    space: Mapping[str, tuple[int, ...]]
+    example_args: Callable[[Any], tuple]          # platform -> workload args
+    feasible: Callable[[BlockConfig, Any, tuple], bool] | None = None
+    iters: int = 2
+    warmup: int = 1
+    # platform -> abstract workload (ShapeDtypeStructs): lets the cache key
+    # be derived without materializing the (possibly hundreds of MB) example
+    # arrays — a warm-cache deploy then allocates nothing.
+    example_specs: Callable[[Any], tuple] | None = None
+
+    def workload_spec(self, platform: Any) -> tuple:
+        if self.example_specs is not None:
+            return self.example_specs(platform)
+        return self.example_args(platform)
+
+    def cache_key(self, abi: str, platform: Any, args: Sequence[Any]) -> CacheKey:
+        return CacheKey.from_args(abi, platform_fingerprint(platform), args)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneEvent:
+    """One op's tuning outcome during a bind (hit/miss/fallback record)."""
+
+    op: str
+    status: str
+    key: str
+    config: BlockConfig
+
+
+class TuningContext:
+    """Carries the site cache through one binding pass.
+
+    ``ops`` restricts which ops may *search* on a miss (searching is the
+    expensive part); cache lookups and default fallbacks always apply.
+    ``search_on_miss=False`` makes the context read-only — deploys never
+    pay search cost, they only replay what the site has already tuned.
+    """
+
+    def __init__(
+        self,
+        cache: TuningCache,
+        platform: Any,
+        *,
+        ops: Iterable[str] | None = None,
+        search_on_miss: bool = True,
+    ) -> None:
+        self.cache = cache
+        self.platform = platform
+        self.ops = None if ops is None else frozenset(ops)
+        self.search_on_miss = search_on_miss
+        self.events: list[TuneEvent] = []
+
+    # ------------------------------------------------------------------ #
+    def apply(self, name: str, impl: Any) -> tuple[Any, str, str]:
+        """Resolve one chosen impl; returns (impl', status, config string).
+
+        Impls without a tuner hook (references, untunable natives) pass
+        through untouched with empty annotations.
+        """
+        tuner: OpTuner | None = getattr(impl, "tuner", None)
+        if tuner is None:
+            return impl, "", ""
+        key = tuner.cache_key(str(impl.abi), self.platform,
+                              tuner.workload_spec(self.platform))
+        config = self.cache.get(key)
+        if config is not None:
+            status = "cache-hit"
+        elif self.search_on_miss and (self.ops is None or name in self.ops):
+            result = self._search(tuner, impl.fn, tuner.example_args(self.platform))
+            if result.best is None:
+                config = default_config(name, self.platform)
+                status = "search-failed-default"
+                # persist the fallback too: a site where every candidate
+                # fails must not re-pay the failed search on every deploy
+                self.cache.put(key, config, metrics={"search_failed": True})
+            else:
+                config = result.best
+                status = "cache-miss-searched"
+                self.cache.put(key, config, metrics={
+                    "best_us": result.best_seconds * 1e6,
+                    "measured": len(result.measurements),
+                    "pruned": result.pruned,
+                    "failed": result.failed,
+                })
+        else:
+            config = default_config(name, self.platform)
+            status = "cache-miss-default"
+        self.events.append(TuneEvent(op=name, status=status, key=key.encode(),
+                                     config=config))
+        log.info("tune %-18s %s (%s)", name, status, config)
+        tuned = dataclasses.replace(
+            impl, fn=functools.partial(impl.fn, config=config), config=config
+        )
+        return tuned, status, str(config)
+
+    # ------------------------------------------------------------------ #
+    def _search(self, tuner: OpTuner, fn: Callable[..., Any],
+                args: tuple) -> SearchResult:
+        feasible = None
+        if tuner.feasible is not None:
+            feasible = lambda cfg: tuner.feasible(cfg, self.platform, args)  # noqa: E731
+        return search(
+            lambda cfg: fn(*args, config=cfg),
+            tuner.space,
+            feasible=feasible,
+            iters=tuner.iters,
+            warmup=tuner.warmup,
+        )
+
+    # ------------------------------------------------------------------ #
+    def flush(self) -> None:
+        """Persist any new winners (atomic; no-op when nothing changed).
+
+        Persistence failure must not kill a deployment that already holds
+        a perfectly good binding — the site just pays the search again
+        next time.  Mirrors the read side's corruption tolerance.
+        """
+        if not self.cache.dirty:
+            return
+        try:
+            self.cache.save()
+        except OSError as e:
+            log.warning("could not persist tuning cache %s: %s (continuing; "
+                        "this deployment is tuned, the next will re-search)",
+                        self.cache.path, e)

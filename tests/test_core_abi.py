@@ -1,7 +1,9 @@
 """ABI string construction, compatibility semantics, parsing."""
 
 import pytest
-from hypothesis import given, strategies as st
+
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
+from hypothesis import given, strategies as st  # noqa: E402
 
 from repro.core.abi import AbiError, AbiString, parse_abi, signature_digest
 

@@ -2,7 +2,9 @@
 
 import jax
 import pytest
-from hypothesis import given, strategies as st
+
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
+from hypothesis import given, strategies as st  # noqa: E402
 
 from repro.core.env import (
     ENV_PLATFORM,
