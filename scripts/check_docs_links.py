@@ -1,0 +1,76 @@
+"""Fail on broken intra-repo links in README.md and docs/*.md.
+
+Checks every markdown link whose target is a relative path: the target
+file must exist, and a `#fragment` (if any) must match a heading in the
+target file under GitHub's slugification rules.  External links
+(http/https/mailto) are not fetched — CI must not flake on the network.
+
+Usage:  python scripts/check_docs_links.py [files...]
+        (no args: README.md + docs/*.md relative to the repo root)
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub anchor slug: lowercase, drop punctuation, spaces -> dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    return {slugify(h) for h in _HEADING_RE.findall(path.read_text())}
+
+
+def _label(path: Path) -> str:
+    try:
+        return str(path.relative_to(REPO))
+    except ValueError:
+        return str(path)
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = _CODE_FENCE_RE.sub("", path.read_text())
+    for target in _LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, fragment = target.partition("#")
+        dest = path if not ref else (path.parent / ref).resolve()
+        if not dest.exists():
+            errors.append(f"{_label(path)}: broken link -> {target}")
+            continue
+        if fragment and dest.suffix == ".md" and slugify(fragment) not in anchors_of(dest):
+            errors.append(f"{_label(path)}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = ([Path(a).resolve() for a in argv]
+             if argv else [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))])
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(f"BROKEN: {e}")
+    checked = ", ".join(_label(f) for f in files)
+    if errors:
+        print(f"{len(errors)} broken link(s) across {checked}")
+        return 1
+    print(f"all intra-repo links OK in {checked}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -21,6 +21,12 @@ ids, so single-GPU images run unmodified on multi-GPU hosts.
                           tuning cache (searching on first miss).
   REPRO_TUNING_CACHE      path of the site-local tuning cache JSON
                           (consumed by repro.tuning.resolve_cache_path).
+  REPRO_PROFILE           "1"/"0": default for the deploy(profile=) flag —
+                          capture every op invocation's shape bucket/dtype
+                          into the site workload profile (live geometry
+                          capture for tune-on-real-traffic).
+  REPRO_WORKLOAD_PROFILE  path of the workload profile JSON (consumed by
+                          repro.tuning.resolve_profile_path).
 """
 
 from __future__ import annotations
@@ -41,16 +47,19 @@ __all__ = [
     "resolve_platform",
     "native_ops_default",
     "autotune_default",
+    "profile_default",
     "ENV_VISIBLE",
     "ENV_PLATFORM",
     "ENV_NATIVE_OPS",
     "ENV_AUTOTUNE",
+    "ENV_PROFILE",
 ]
 
 ENV_VISIBLE = "REPRO_VISIBLE_DEVICES"
 ENV_PLATFORM = "REPRO_PLATFORM"
 ENV_NATIVE_OPS = "REPRO_NATIVE_OPS"
 ENV_AUTOTUNE = "REPRO_AUTOTUNE"
+ENV_PROFILE = "REPRO_PROFILE"
 
 _INT_LIST_RE = re.compile(r"^\s*\d+\s*(,\s*\d+\s*)*$")
 
@@ -130,3 +139,8 @@ def native_ops_default(env: dict[str, str] | None = None) -> bool:
 def autotune_default(env: dict[str, str] | None = None) -> bool:
     env = os.environ if env is None else env
     return env.get(ENV_AUTOTUNE, "0").strip() == "1"
+
+
+def profile_default(env: dict[str, str] | None = None) -> bool:
+    env = os.environ if env is None else env
+    return env.get(ENV_PROFILE, "0").strip() == "1"

@@ -90,6 +90,17 @@ class OpDecl:
     def natives(self) -> tuple[OpImpl, ...]:
         return tuple(i for i in self.impls if i.kind is ImplKind.NATIVE)
 
+    def tunable_native(self, platform: Platform) -> OpImpl | None:
+        """The native impl whose tuning-cache entries apply on `platform`:
+        first available native carrying a tuner hook.  Cache keys embed
+        *this* impl's ABI (which may be a newer minor than the
+        declaration), so expiry sweeps and warm runs must both derive the
+        current ABI from here, never from the declaration."""
+        for impl in self.natives():
+            if impl.available_on(platform) and impl.tuner is not None:
+                return impl
+        return None
+
 
 @dataclasses.dataclass(frozen=True)
 class SwapReport:

@@ -2,7 +2,10 @@
 
     pull/reformat        -> Gateway (separate component, as in Fig. 1)
     prepare environment  -> resolve platform, select+renumber devices,
-                            build the mesh, swap ops (native support)
+                            build the mesh, swap ops (native support),
+                            specialize kernels from the site tuning
+                            cache (autotune) and/or wrap the binding
+                            for live workload capture (profile)
     chroot jail          -> Container object: the program sees ONLY the
                             frozen OpBinding and merged env — never the
                             registry or host environment directly
@@ -33,6 +36,7 @@ from repro.core.env import (
     autotune_default,
     native_ops_default,
     parse_visible_devices,
+    profile_default,
     resolve_platform,
     select_devices,
 )
@@ -47,7 +51,8 @@ log = logging.getLogger("repro.runtime")
 # host system are also added", per site configuration).
 _HOST_ENV_ALLOWLIST = (ENV_VISIBLE, "REPRO_PLATFORM", "REPRO_CHECKPOINT_DIR",
                        "REPRO_COMPILE_CACHE", "REPRO_AUTOTUNE",
-                       "REPRO_TUNING_CACHE")
+                       "REPRO_TUNING_CACHE", "REPRO_PROFILE",
+                       "REPRO_WORKLOAD_PROFILE")
 
 
 class DeploymentError(RuntimeError):
@@ -70,6 +75,10 @@ class Container:
     env: Mapping[str, str]
     native_ops: bool
     autotune: bool = False
+    profile: bool = False
+    workload: Any = None   # tuning.WorkloadProfile capturing this
+    # container's op geometries; None unless profiling is on.  Persisted
+    # by Runtime.cleanup().
 
     @property
     def devices(self) -> tuple[jax.Device, ...]:
@@ -82,13 +91,26 @@ class Container:
             f"  mesh: shape={dict(zip(self.mesh.axis_names, self.mesh.devices.shape))} "
             f"devices={self.mesh.devices.size}\n"
             f"  native ops: {'enabled' if self.native_ops else 'disabled'}"
-            f" | autotune: {'on' if self.autotune else 'off'}\n"
+            f" | autotune: {'on' if self.autotune else 'off'}"
+            f" | profile: {'on' if self.profile else 'off'}\n"
         )
         return head + self.binding.describe()
 
 
 class Runtime:
-    """Deploys bundles onto a site.  One Runtime per process, like `shifter`."""
+    """Deploys bundles onto a site.  One Runtime per process, like `shifter`.
+
+    Args:
+      registry: the op registry to bind from; defaults to the process
+        global one (populated by ``repro.kernels.ops.register_all``).
+      host_env: the site environment consulted for every ``REPRO_*``
+        trigger variable (see core/env.py) and forwarded to the
+        container through the allowlist; defaults to ``os.environ``.
+        Tests pass an explicit dict for hermeticity.
+
+    One container may be active at a time; ``deploy`` raises
+    DeploymentError if called again before ``cleanup``.
+    """
 
     def __init__(
         self,
@@ -112,21 +134,38 @@ class Runtime:
         freeze: bool = True,
         autotune: bool | None = None,
         autotune_ops: Iterable[str] | None = None,
+        profile: bool | None = None,
     ) -> Container:
         """Run the preparation stages and hand back the executable Container.
 
-        ``native_ops`` is the ``--mpi`` flag (None -> REPRO_NATIVE_OPS env
-        default); ``mesh`` may be injected by launchers that already built
-        the production mesh (dryrun/train), otherwise one is derived from
-        the platform topology and the visible devices.
+        Args:
+          native_ops: the ``--mpi`` flag (None -> REPRO_NATIVE_OPS env
+            default); ``mesh`` may be injected by launchers that already
+            built the production mesh (dryrun/train), otherwise one is
+            derived from the platform topology and the visible devices.
+          autotune: (None -> REPRO_AUTOTUNE env default) opts this
+            deployment into the site tuning cache: bound native kernels
+            get their block configs from REPRO_TUNING_CACHE, searching
+            (and persisting the winner) on a miss.  When the site also
+            has a workload profile (REPRO_WORKLOAD_PROFILE) with recorded
+            traffic, cache keys resolve against the hottest *observed*
+            geometry per op, so a ``repro.tuning.warm``-ed cache replays
+            with zero misses.  Entries tuned against an older kernel ABI
+            revision are expired and re-searched, with the eviction noted
+            in the SwapReport ("cache-expired-searched").
+          autotune_ops: restricts which ops may pay the search cost;
+            cache hits and default fallbacks always apply and are
+            recorded per-op in the binding's SwapReports.
+          profile: (None -> REPRO_PROFILE env default) captures every op
+            invocation's shape bucket + dtype into the site workload
+            profile (under jit: once per compiled geometry, at trace
+            time).  The profile is persisted by ``cleanup()``; an
+            unwritable profile path degrades to a warning, never an
+            error.
 
-        ``autotune`` (None -> REPRO_AUTOTUNE env default) opts this
-        deployment into the site tuning cache: bound native kernels get
-        their block configs from REPRO_TUNING_CACHE, searching (and
-        persisting the winner) on a miss.  ``autotune_ops`` restricts
-        which ops may pay the search cost; cache hits and default
-        fallbacks always apply and are recorded per-op in the binding's
-        SwapReports.
+        Raises DeploymentError when the site cannot satisfy a bundle-
+        required ABI at all, no devices are visible, or a container is
+        already active in this Runtime.
         """
         if self._active is not None:
             raise DeploymentError(
@@ -157,26 +196,66 @@ class Runtime:
                     f"bundle requires {want} but site declares {decl.abi}: {why}"
                 )
 
+        ops = list(required) + [o for o in extra_ops if o not in required]
+
+        # -- stage: workload capture (live geometry profiling) ---------------
+        if profile is None:
+            profile = profile_default(self.host_env)
+        workload = None
+        if profile:
+            from repro.tuning import WorkloadProfile, resolve_profile_path
+
+            profile_path = resolve_profile_path(self.host_env)
+            workload = WorkloadProfile.load(profile_path)
+            log.info("profiling on: workload profile %s (%d geometries)",
+                     profile_path, len(workload))
+
         # -- stage: site specialization (deferred kernel tuning) -------------
         if autotune is None:
             autotune = autotune_default(self.host_env)
         tuning_ctx = None
         if autotune:
-            from repro.tuning import TuningCache, TuningContext, resolve_cache_path
+            from repro.tuning import (
+                TuningCache,
+                TuningContext,
+                WorkloadProfile,
+                resolve_cache_path,
+                resolve_profile_path,
+            )
 
             cache_path = resolve_cache_path(self.host_env)
+            # key tuning on observed traffic whenever the site has a
+            # profile — captured by this deployment or a previous one
+            tune_profile = workload
+            if tune_profile is None:
+                recorded = WorkloadProfile.load(resolve_profile_path(self.host_env))
+                tune_profile = recorded if len(recorded) else None
+            # expiry must compare against the ABI cache keys are written
+            # under — the bound tunable native's, which may carry a newer
+            # minor than the declaration
+            current_abis = {}
+            for op in ops:
+                native = self.registry.decl(op).tunable_native(platform)
+                if native is not None:
+                    current_abis[op] = native.abi
             tuning_ctx = TuningContext(
                 TuningCache.load(cache_path), platform,
                 ops=autotune_ops if autotune_ops is None else set(autotune_ops),
+                profile=tune_profile,
+                current_abis=current_abis,
             )
-            log.info("autotune on: cache %s (%d entries)",
-                     cache_path, len(tuning_ctx.cache))
+            log.info("autotune on: cache %s (%d entries%s)",
+                     cache_path, len(tuning_ctx.cache),
+                     ", profile-keyed" if tune_profile is not None else "")
 
-        ops = list(required) + [o for o in extra_ops if o not in required]
         binding = self.registry.bind(ops, platform, native=native_ops,
                                      freeze=freeze, tuning=tuning_ctx)
         if tuning_ctx is not None:
-            tuning_ctx.flush()   # persist freshly searched winners atomically
+            tuning_ctx.flush()   # persist winners + expirations atomically
+        if workload is not None:
+            from repro.tuning import profiled_binding
+
+            binding = profiled_binding(binding, workload)
         for r in binding.reports:
             log.info("bind %-18s %s", r.op, r.reason)
 
@@ -194,13 +273,30 @@ class Runtime:
             env=env,
             native_ops=native_ops,
             autotune=autotune,
+            profile=profile,
+            workload=workload,
         )
         self._active = container
         return container
 
     # ------------------------------------------------------------------ #
     def cleanup(self) -> None:
-        """Release the container: thaw the registry, clear the jit caches."""
+        """Release the container: persist the workload profile (if this
+        deployment was capturing), thaw the registry, clear the jit caches.
+
+        A profile that cannot be written is logged and dropped — losing
+        observability data must never fail the workload that produced it.
+        """
+        if self._active is not None and self._active.workload is not None:
+            workload = self._active.workload
+            if workload.dirty:
+                try:
+                    path = workload.save()
+                    log.info("workload profile persisted: %s (%d geometries)",
+                             path, len(workload))
+                except OSError as e:
+                    log.warning("could not persist workload profile %s: %s",
+                                workload.path, e)
         self._active = None
         self.registry.thaw()
         jax.clear_caches()

@@ -10,7 +10,9 @@ vendor stack).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -62,8 +64,16 @@ _SIGS = {
     },
 }
 
+# Minor revisions: compatible extensions of a kernel (libtool "revision").
+# A bump here leaves old bundles deployable (provider minor >= required
+# minor) but expires the op's tuning-cache entries — they were measured
+# on the previous kernel revision (see tuning/expiry.py).
+#   moe_gmm 1: grew the k-loop contraction (block_k knob, D > 8k feasible)
+_ABI_MINORS = {"moe_gmm": 1}
+
 ABIS: dict[str, AbiString] = {
-    name: AbiString.make(name, sig, major=1, minor=0) for name, sig in _SIGS.items()
+    name: AbiString.make(name, sig, major=1, minor=_ABI_MINORS.get(name, 0))
+    for name, sig in _SIGS.items()
 }
 OP_NAMES: tuple[str, ...] = tuple(sorted(ABIS))
 
@@ -157,9 +167,14 @@ def _example_rmsnorm(platform):
 
 
 def _feasible_rmsnorm(cfg, platform, args):
-    rows, d = args[0].shape
+    # the kernel flattens leading dims to rows and clamps block_rows, so
+    # profiled rank-3 activations (B, S, D) are tunable too; keep at least
+    # the smallest space value alive for sub-tile row counts
+    shape = args[0].shape
+    rows, d = math.prod(shape[:-1]), shape[-1]
     br = cfg["block_rows"]
-    return br <= rows and (3 * br * d + d) * 4 <= _VMEM_BUDGET
+    return (br <= max(rows, 8)
+            and (3 * min(br, rows) * d + d) * 4 <= _VMEM_BUDGET)
 
 
 def _spec_attention(platform):
@@ -253,9 +268,18 @@ def _example_moe(platform):
 def _feasible_moe(cfg, platform, args):
     t, d = args[0].shape
     f = args[1].shape[2]
-    bm, bn = cfg["block_m"], cfg["block_n"]
-    vmem = (bm * d + d * bn + bm * bn) * 4
-    return bm <= t and bn <= f and vmem <= _VMEM_BUDGET
+    bm, bn, bk = cfg["block_m"], cfg["block_n"], cfg["block_k"]
+    # the kernel degrades block_k to gcd(block_k, d), so narrow experts
+    # (d below the space minimum of 64) stay searchable — keep at least
+    # the smallest bk value alive and budget VMEM at the effective size
+    bk_eff = math.gcd(min(bk, d), d)
+    # x tile + w tile + fp32 accumulator scratch + out tile; D itself no
+    # longer appears — the k-loop makes VMEM independent of expert width.
+    # bm mirrors the kernel's clamp to max(t, 8): tiny-token geometries
+    # keep the smallest tile searchable instead of pruning everything
+    vmem = (bm * bk_eff + bk_eff * bn + 2 * bm * bn) * 4
+    return (bm <= max(t, 8) and bn <= f and bk <= max(d, 64)
+            and vmem <= _VMEM_BUDGET)
 
 
 _TUNERS: dict[str, OpTuner] = {
@@ -287,11 +311,110 @@ _TUNERS: dict[str, OpTuner] = {
     "moe_gmm": OpTuner(
         op="moe_gmm",
         space={"block_m": (8, 16, 32, 64, 128, 256),
-               "block_n": (8, 16, 32, 64, 128, 256)},
+               "block_n": (8, 16, 32, 64, 128, 256),
+               "block_k": (64, 128, 256, 512, 1024, 2048)},
         example_args=_example_moe, feasible=_feasible_moe,
         example_specs=_spec_moe,
     ),
 }
+
+
+# -- profile-geometry synthesizers -------------------------------------------
+# repro.tuning.warm (and a profile-aware TuningContext) replays *recorded*
+# shape buckets, not the canonical examples above.  Each synthesizer turns
+# one recorded (shapes, dtype) bucket back into concrete workload args; a
+# bucket whose structure does not match the op's signature returns None
+# and the caller skips it (a foreign or corrupted profile entry must not
+# abort warming).
+
+def _parse_bucket(shapes: str) -> list[tuple[int, ...]] | None:
+    try:
+        return [
+            () if part == "scalar" else tuple(int(n) for n in part.split("x"))
+            for part in shapes.split(",") if part
+        ]
+    except ValueError:
+        return None
+
+
+def _normal(key, shape, dtype):
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        return jax.random.randint(key, shape, 0, 8, jnp.dtype(dtype))
+    return jax.random.normal(key, shape, jnp.dtype(dtype))
+
+
+def _synth_rmsnorm(platform, shapes, dtype):
+    parts = _parse_bucket(shapes)
+    if not parts or len(parts) != 2 or len(parts[0]) < 1 or len(parts[1]) != 1:
+        return None
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    return (_normal(k1, parts[0], dtype), _normal(k2, parts[1], dtype))
+
+
+def _synth_attention(platform, shapes, dtype):
+    parts = _parse_bucket(shapes)
+    if not parts or len(parts) != 3 or any(len(p) != 4 for p in parts):
+        return None
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    return tuple(_normal(k, p, dtype) for k, p in zip(ks, parts))
+
+
+def _synth_decode(platform, shapes, dtype):
+    # pos carries no geometry: recorded as a trailing "scalar" part when
+    # traffic ran under jit (traced 0-d array), absent when it was a
+    # python int (the canonical example) — accept both and resynthesize
+    # it mid-cache
+    parts = _parse_bucket(shapes)
+    if parts and len(parts) == 4 and parts[3] == ():
+        parts = parts[:3]
+    if not parts or len(parts) != 3 or any(len(p) != 4 for p in parts):
+        return None
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (_normal(kk, p, dtype) for kk, p in zip(ks, parts))
+    return (q, k, v, parts[1][1] // 2)
+
+
+def _synth_ssd(platform, shapes, dtype):
+    parts = _parse_bucket(shapes)
+    if (not parts or len(parts) != 5 or len(parts[0]) != 4
+            or len(parts[1]) != 3 or len(parts[2]) != 1
+            or len(parts[3]) != 4 or len(parts[4]) != 4):
+        return None
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    dt = jnp.dtype(dtype)
+    return (jax.random.normal(ks[0], parts[0], dt) * 0.3,
+            jax.nn.softplus(jax.random.normal(ks[1], parts[1], dt)),
+            -jnp.exp(jax.random.normal(ks[2], parts[2], dt) * 0.3),
+            jax.random.normal(ks[3], parts[3], dt) * 0.3,
+            jax.random.normal(ks[4], parts[4], dt) * 0.3)
+
+
+def _synth_moe(platform, shapes, dtype):
+    parts = _parse_bucket(shapes)
+    if (not parts or len(parts) != 3 or len(parts[0]) != 2
+            or len(parts[1]) != 3 or len(parts[2]) != 1):
+        return None
+    (t, _), (e, d, f), _ = parts
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    # distribute all t rows (t//e per expert would be all-zeros when
+    # e > t, measuring an empty workload)
+    base, rem = divmod(t, max(e, 1))
+    gs = jnp.array([base + (i < rem) for i in range(e)], jnp.int32)
+    return (_normal(ks[0], (t, d), dtype),
+            _normal(ks[1], (e, d, f), dtype),
+            gs)
+
+
+_SYNTHS = {
+    "rmsnorm": _synth_rmsnorm,
+    "attention": _synth_attention,
+    "decode_attention": _synth_decode,
+    "ssd_scan": _synth_ssd,
+    "moe_gmm": _synth_moe,
+}
+
+for _name, _synth in _SYNTHS.items():
+    _TUNERS[_name] = dataclasses.replace(_TUNERS[_name], args_from_shapes=_synth)
 
 
 def tuners() -> dict[str, OpTuner]:

@@ -112,11 +112,24 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--native-ops", action="store_true",
+                    help="swap in native kernels where the platform has them "
+                         "(or set REPRO_NATIVE_OPS=1; references have no "
+                         "tuner, so autotune needs this)")
+    ap.add_argument("--profile", action="store_true",
+                    help="capture op geometries into REPRO_WORKLOAD_PROFILE "
+                         "(feed repro.tuning.warm; or set REPRO_PROFILE=1)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="resolve kernel configs from the site tuning cache "
+                         "(or set REPRO_AUTOTUNE=1)")
     args = ap.parse_args(argv)
 
     bundle = make_bundle(args.arch, reduced=True)
     runtime = Runtime()
-    container = runtime.deploy(bundle, mesh=make_host_mesh(data=1))
+    container = runtime.deploy(bundle, mesh=make_host_mesh(data=1),
+                               native_ops=True if args.native_ops else None,
+                               profile=True if args.profile else None,
+                               autotune=True if args.autotune else None)
     cfg = get_config(args.arch).reduced()
 
     server = Server(cfg, container, slots=args.slots, max_len=args.max_len)
@@ -130,6 +143,9 @@ def main(argv=None) -> int:
     total_tokens = args.requests * args.max_new
     print(f"served {args.requests} requests / {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)")
+    if container.workload is not None:
+        print(f"captured {len(container.workload)} op geometries -> "
+              f"{container.workload.path} (warm with: python -m repro.tuning.warm)")
     runtime.cleanup()
     return 0
 

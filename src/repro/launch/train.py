@@ -105,12 +105,20 @@ def main(argv=None) -> int:
     ap.add_argument("--native-ops", action="store_true")
     ap.add_argument("--data-mesh", type=int, default=0,
                     help="data-parallel ways (0 = all local devices)")
+    ap.add_argument("--profile", action="store_true",
+                    help="capture op geometries into REPRO_WORKLOAD_PROFILE "
+                         "(feed repro.tuning.warm; or set REPRO_PROFILE=1)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="resolve kernel configs from the site tuning cache "
+                         "(or set REPRO_AUTOTUNE=1)")
     args = ap.parse_args(argv)
 
     bundle = make_bundle(args.arch, reduced=args.reduced)
     runtime = Runtime()
     mesh = make_host_mesh(data=args.data_mesh or None)
-    container = runtime.deploy(bundle, native_ops=args.native_ops, mesh=mesh)
+    container = runtime.deploy(bundle, native_ops=args.native_ops, mesh=mesh,
+                               profile=True if args.profile else None,
+                               autotune=True if args.autotune else None)
     print(container.describe())
 
     from repro.configs.base import ModelConfig
@@ -159,6 +167,9 @@ def main(argv=None) -> int:
         params=params,
         opt_state=opt_state,
     )
+    if container.workload is not None:
+        print(f"captured {len(container.workload)} op geometries -> "
+              f"{container.workload.path} (warm with: python -m repro.tuning.warm)")
     runtime.cleanup()
     return 0
 

@@ -6,6 +6,15 @@ deployment the Runtime's `TuningContext` resolves each op's config from
 the site-local `TuningCache` (searching and persisting on first miss).
 The bundle stays portable; the site contributes its tuned parameters —
 the analogue of Shifter's site-specific bind mount.
+
+PR 2 closes the tune-on-real-traffic loop (see docs/tuning.md):
+
+  * `WorkloadProfile` (profile.py) captures live op geometries when a
+    deployment runs with ``REPRO_PROFILE=1``;
+  * ``python -m repro.tuning.warm`` replays the profile's hottest
+    geometries through the tuner, pre-warming the cache offline;
+  * `expire_stale` (expiry.py) evicts cache entries tuned against an
+    older kernel ABI revision, forcing a clean re-search after a bump.
 """
 
 from repro.tuning.cache import (
@@ -18,6 +27,15 @@ from repro.tuning.cache import (
     resolve_cache_path,
 )
 from repro.tuning.config import BlockConfig, default_config
+from repro.tuning.expiry import ExpiryReport, expire_stale
+from repro.tuning.profile import (
+    ENV_WORKLOAD_PROFILE,
+    PROFILE_SCHEMA_VERSION,
+    GeometryKey,
+    WorkloadProfile,
+    profiled_binding,
+    resolve_profile_path,
+)
 from repro.tuning.search import Measurement, SearchResult, enumerate_space, measure, search
 from repro.tuning.tuner import OpTuner, TuneEvent, TuningContext
 
@@ -25,6 +43,9 @@ __all__ = [
     "ENV_TUNING_CACHE", "SCHEMA_VERSION", "CacheKey", "TuningCache",
     "bucket_shapes", "platform_fingerprint", "resolve_cache_path",
     "BlockConfig", "default_config",
+    "ExpiryReport", "expire_stale",
+    "ENV_WORKLOAD_PROFILE", "PROFILE_SCHEMA_VERSION", "GeometryKey",
+    "WorkloadProfile", "profiled_binding", "resolve_profile_path",
     "Measurement", "SearchResult", "enumerate_space", "measure", "search",
     "OpTuner", "TuneEvent", "TuningContext",
 ]

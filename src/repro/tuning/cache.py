@@ -39,7 +39,30 @@ __all__ = [
     "resolve_cache_path",
     "platform_fingerprint",
     "bucket_shapes",
+    "file_lock",
 ]
+
+
+@contextlib.contextmanager
+def file_lock(lock_path: Path):
+    """Exclusive advisory lock for a load-merge-replace sequence (POSIX);
+    on platforms without fcntl the merge still narrows the race.
+
+    Shared by TuningCache.save and WorkloadProfile.save — any writer that
+    re-reads, merges, and atomically replaces a site file must hold this
+    across the whole sequence or a concurrent writer's merge is lost.
+    """
+    try:
+        import fcntl
+    except ImportError:
+        yield
+        return
+    with open(lock_path, "w") as lf:
+        fcntl.flock(lf, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lf, fcntl.LOCK_UN)
 
 log = logging.getLogger("repro.tuning")
 
@@ -118,6 +141,8 @@ class TuningCache:
                  entries: Mapping[str, dict] | None = None) -> None:
         self.path = Path(path)
         self._entries: dict[str, dict] = dict(entries or {})
+        self._evicted: set[str] = set()   # tombstones: keep save() from
+        # resurrecting expired entries out of the on-disk copy
         self.dirty = False
 
     # -- loading -----------------------------------------------------------
@@ -166,7 +191,22 @@ class TuningCache:
             "config": config.to_dict(),
             "metrics": dict(metrics or {}),
         }
+        self._evicted.discard(key.encode())
         self.dirty = True
+
+    def raw_keys(self) -> tuple[str, ...]:
+        """Encoded keys of every live entry (see CacheKey.encode)."""
+        return tuple(self._entries)
+
+    def evict(self, key: "CacheKey | str") -> bool:
+        """Remove an entry and tombstone it so save() cannot resurrect it
+        from the on-disk copy.  Returns True if the entry existed."""
+        encoded = key if isinstance(key, str) else key.encode()
+        existed = self._entries.pop(encoded, None) is not None
+        self._evicted.add(encoded)
+        if existed:
+            self.dirty = True
+        return existed
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -175,36 +215,27 @@ class TuningCache:
         return key.encode() in self._entries
 
     # -- persistence ---------------------------------------------------------
-    @staticmethod
-    @contextlib.contextmanager
-    def _locked(lock_path: Path):
-        """Exclusive advisory lock held across load-merge-replace (POSIX);
-        on platforms without fcntl the merge still narrows the race."""
-        try:
-            import fcntl
-        except ImportError:
-            yield
-            return
-        with open(lock_path, "w") as lf:
-            fcntl.flock(lf, fcntl.LOCK_EX)
-            try:
-                yield
-            finally:
-                fcntl.flock(lf, fcntl.LOCK_UN)
-
     def save(self) -> Path:
         """Atomically write the cache (temp file + rename, same filesystem).
 
         The whole load-merge-replace runs under an exclusive sidecar lock:
         two deployments that tuned *different* ops concurrently both keep
         their winners.  On a same-key conflict this process's entry wins —
-        last writer's measurement, both valid.
+        last writer's measurement, both valid.  Entries evicted in this
+        process (ABI expiry, see expiry.py) are tombstoned and stay gone
+        even if the on-disk copy still holds them.
+
+        Raises OSError on unwritable paths; TuningContext.flush downgrades
+        that to a warning because a failed persist must not kill a
+        deployment that already holds a good binding.
         """
         self.path.parent.mkdir(parents=True, exist_ok=True)
-        with self._locked(self.path.with_name(self.path.name + ".lock")):
+        with file_lock(self.path.with_name(self.path.name + ".lock")):
             on_disk = TuningCache.load(self.path)
             if on_disk._entries:
-                self._entries = {**on_disk._entries, **self._entries}
+                kept = {k: v for k, v in on_disk._entries.items()
+                        if k not in self._evicted}
+                self._entries = {**kept, **self._entries}
             payload = {"schema": SCHEMA_VERSION, "entries": self._entries}
             fd, tmp = tempfile.mkstemp(dir=self.path.parent,
                                        prefix=self.path.name, suffix=".tmp")

@@ -74,15 +74,18 @@ class BlockConfig:
         return ",".join(f"{k}={v}" for k, v in self.items)
 
 
-# The pre-autotuner hard-coded constants, preserved verbatim as the
-# untuned fallback: a site that never runs the tuner behaves exactly like
-# the seed repo did.
+# The pre-autotuner hard-coded constants, preserved as the untuned
+# fallback: a site that never runs the tuner behaves exactly like the
+# seed repo did.  (moe_gmm's block_k is the one post-seed addition: at
+# D <= 2048 it degrades to a single k step — bit-identical to the old
+# no-k-loop kernel — and only chunks the contraction for wider experts,
+# which the seed kernel could not run at all without overflowing VMEM.)
 _OP_DEFAULTS: dict[str, BlockConfig] = {
     "rmsnorm": BlockConfig.make(block_rows=256),
     "attention": BlockConfig.make(block_q=128, block_k=128),
     "decode_attention": BlockConfig.make(block_q=128, block_k=128),
     "ssd_scan": BlockConfig.make(chunk=128),
-    "moe_gmm": BlockConfig.make(block_m=128, block_n=128),
+    "moe_gmm": BlockConfig.make(block_m=128, block_n=128, block_k=2048),
 }
 
 # Per-platform refinements of the fallback (still not *tuned* — just a
@@ -94,7 +97,7 @@ _PLATFORM_DEFAULTS: dict[tuple[str, str], BlockConfig] = {
     ("pod-sim", "attention"): BlockConfig.make(block_q=32, block_k=32),
     ("pod-sim", "decode_attention"): BlockConfig.make(block_q=32, block_k=32),
     ("pod-sim", "ssd_scan"): BlockConfig.make(chunk=32),
-    ("pod-sim", "moe_gmm"): BlockConfig.make(block_m=32, block_n=32),
+    ("pod-sim", "moe_gmm"): BlockConfig.make(block_m=32, block_n=32, block_k=64),
 }
 
 

@@ -1,0 +1,96 @@
+"""Versioned cache expiry — evict tuned entries for kernels that changed.
+
+Every `TuningCache` entry is keyed by the full ABI string of the kernel
+it was measured against (``op/major:minor/digest``).  When a kernel's
+ABI bumps — a minor bump for a compatible extension (e.g. `moe_gmm`
+growing a k-loop and a ``block_k`` knob), or a major/digest change for
+an incompatible one — the cached winner describes a kernel that no
+longer exists at that version: its config may name knobs the new kernel
+tunes differently, and its measurement says nothing about the new code.
+A plain lookup would simply miss (the new key embeds the new ABI) and
+the stale entry would sit in the file forever.
+
+`expire_stale` sweeps the cache: any entry whose key names an op the
+site currently declares, under an ABI string that differs from the
+current declaration, is evicted.  The eviction is surfaced through the
+binding's SwapReport (`tuning == "cache-expired-searched"`) so EXPERIMENTS
+logs show which deployments re-paid search because a kernel changed,
+and tombstoned in the cache so a concurrent save cannot resurrect it.
+
+Entries for ops the site does not declare (other bundles, other kernel
+sets sharing one cache file) are left alone — absence of a declaration
+is not evidence of staleness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Mapping
+
+from repro.core.abi import AbiError, parse_abi
+from repro.tuning.cache import TuningCache
+
+__all__ = ["ExpiryReport", "expire_stale"]
+
+log = logging.getLogger("repro.tuning")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpiryReport:
+    """Outcome of one expiry sweep: which entries were evicted and why."""
+
+    evicted: tuple[tuple[str, str], ...]   # (op name, encoded cache key)
+    reasons: tuple[str, ...]               # parallel human-readable notes
+
+    @property
+    def ops(self) -> frozenset[str]:
+        """Ops that lost at least one entry (their next bind re-searches)."""
+        return frozenset(op for op, _ in self.evicted)
+
+    def __len__(self) -> int:
+        return len(self.evicted)
+
+    def describe(self) -> str:
+        if not self.evicted:
+            return "expiry: cache clean (no stale ABI entries)"
+        lines = [f"expiry: evicted {len(self.evicted)} stale entr"
+                 f"{'y' if len(self.evicted) == 1 else 'ies'}"]
+        for (op, key), why in zip(self.evicted, self.reasons):
+            lines.append(f"  {op:<18} {why}   [{key}]")
+        return "\n".join(lines)
+
+
+def expire_stale(cache: TuningCache,
+                 current_abis: Mapping[str, Any]) -> ExpiryReport:
+    """Evict cache entries tuned against an ABI the site no longer declares.
+
+    ``current_abis`` maps op name -> the ABI currently declared for it
+    (AbiString or its string form) — typically
+    ``{op: registry.decl(op).abi for op in ops_to_bind}``.  An entry is
+    stale iff its key's ABI names one of those ops but differs from the
+    current string in any component (minor bump included: the entry was
+    measured on the older kernel revision).
+
+    Mutates `cache` in place (evictions are tombstoned so `save` persists
+    them); returns the report.  Keys that do not parse as ABI strings are
+    skipped — a foreign or hand-edited entry is not this sweep's business.
+    """
+    current = {name: str(abi) for name, abi in current_abis.items()}
+    evicted: list[tuple[str, str]] = []
+    reasons: list[str] = []
+    for encoded in list(cache.raw_keys()):
+        abi_text = encoded.split("|", 1)[0]
+        try:
+            abi = parse_abi(abi_text)
+        except AbiError:
+            continue
+        want = current.get(abi.name)
+        if want is None or abi_text == want:
+            continue
+        cache.evict(encoded)
+        evicted.append((abi.name, encoded))
+        reasons.append(f"tuned for {abi_text}, site now declares {want}")
+        log.info("tuning cache: expiring %s (tuned for %s, now %s)",
+                 abi.name, abi_text, want)
+    return ExpiryReport(evicted=tuple(evicted), reasons=tuple(reasons))

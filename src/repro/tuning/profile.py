@@ -1,0 +1,245 @@
+"""WorkloadProfile — live geometry capture for tune-on-real-traffic.
+
+PR 1's cache tunes against *canonical* example shapes; real deployments
+see whatever geometry real traffic produces.  This module records that
+traffic: every invocation of a profiled op contributes its shape bucket
+and dtype (the same bucketing scheme `CacheKey` uses, so a recorded
+geometry and the cache key a later deploy computes for it are identical
+strings) to a persistent JSON profile.  `repro.tuning.warm` then replays
+the profile's hottest geometries through the tuner, so a site cache is
+pre-warmed from observed workloads instead of the shipped examples.
+
+Counting semantics under jit: a profiled op callable records at *trace*
+time, so each distinct compiled geometry is counted once per trace, not
+once per executed step — exactly the granularity the tuner needs (the
+tuner specializes per geometry, not per call).  Eager invocations count
+individually.  Counts therefore rank geometries by how often they are
+(re)compiled/observed across deployments, and merge additively across
+concurrent writers.
+
+File properties mirror `TuningCache` (see cache.py): atomic writes,
+versioned schema, corruption degrades to an empty profile with a warning,
+`REPRO_WORKLOAD_PROFILE` overrides the default location.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Iterable, Mapping, Sequence
+
+from repro.tuning.cache import bucket_shapes, file_lock
+
+__all__ = [
+    "PROFILE_SCHEMA_VERSION",
+    "ENV_WORKLOAD_PROFILE",
+    "GeometryKey",
+    "WorkloadProfile",
+    "resolve_profile_path",
+    "profiled_binding",
+]
+
+log = logging.getLogger("repro.tuning")
+
+PROFILE_SCHEMA_VERSION = 1
+ENV_WORKLOAD_PROFILE = "REPRO_WORKLOAD_PROFILE"
+_DEFAULT_PROFILE = Path("~/.cache/repro/workload.json")
+
+
+def resolve_profile_path(env: Mapping[str, str] | None = None) -> Path:
+    """Profile file location: REPRO_WORKLOAD_PROFILE override, else the
+    per-user default (`~/.cache/repro/workload.json`)."""
+    env = os.environ if env is None else env
+    override = str(env.get(ENV_WORKLOAD_PROFILE, "")).strip()
+    if override:
+        return Path(override).expanduser()
+    return _DEFAULT_PROFILE.expanduser()
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class GeometryKey:
+    """(op, shape bucket, dtype) — one observed workload geometry.
+
+    ``shapes`` and ``dtype`` use the exact encoding of
+    `repro.tuning.cache.bucket_shapes`, so a GeometryKey plugs straight
+    into a `CacheKey` without re-derivation.
+    """
+
+    op: str
+    shapes: str
+    dtype: str
+
+    def encode(self) -> str:
+        return "|".join((self.op, self.shapes, self.dtype))
+
+    @classmethod
+    def decode(cls, text: str) -> "GeometryKey":
+        op, shapes, dtype = text.split("|", 2)
+        return cls(op=op, shapes=shapes, dtype=dtype)
+
+    @classmethod
+    def from_args(cls, op: str, args: Sequence[Any]) -> "GeometryKey":
+        shapes, dtype = bucket_shapes(args)
+        return cls(op=op, shapes=shapes, dtype=dtype)
+
+
+class WorkloadProfile:
+    """Persistent map: GeometryKey -> hit count.
+
+    Load with :meth:`load` (any file defect degrades to an empty profile),
+    record geometries with :meth:`record`, rank them with :meth:`top`, and
+    persist with :meth:`save`.  Saving merges *deltas* — only the counts
+    accumulated since load are added to whatever is on disk — so several
+    concurrently profiling processes sum instead of clobbering each other.
+    """
+
+    def __init__(self, path: str | os.PathLike,
+                 counts: Mapping[str, int] | None = None) -> None:
+        self.path = Path(path)
+        self._counts: dict[str, int] = dict(counts or {})
+        self._loaded: dict[str, int] = dict(self._counts)
+
+    # -- loading -----------------------------------------------------------
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> "WorkloadProfile":
+        """Read a profile file; any defect degrades to an empty profile.
+
+        A bad profile must never kill a deployment — profiling is an
+        observability feature, so corruption costs history, not uptime.
+        """
+        p = Path(path)
+        try:
+            raw = json.loads(p.read_text())
+        except FileNotFoundError:
+            return cls(p)
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+            log.warning("workload profile %s unreadable (%s); starting empty", p, e)
+            return cls(p)
+        if not isinstance(raw, dict) or raw.get("schema") != PROFILE_SCHEMA_VERSION:
+            log.warning(
+                "workload profile %s has schema %r (want %d); ignoring it",
+                p, raw.get("schema") if isinstance(raw, dict) else None,
+                PROFILE_SCHEMA_VERSION,
+            )
+            return cls(p)
+        counts: dict[str, int] = {}
+        for key, n in (raw.get("counts") or {}).items():
+            try:
+                GeometryKey.decode(key)
+                n = int(n)
+            except (ValueError, TypeError):
+                log.warning("workload profile %s: dropping malformed entry %r", p, key)
+                continue
+            if n > 0:
+                counts[key] = n
+        return cls(p, counts)
+
+    # -- recording ---------------------------------------------------------
+    def record(self, op: str, args: Sequence[Any], *, weight: int = 1) -> GeometryKey:
+        """Count one observation of `op` invoked with `args`.
+
+        `args` may be concrete arrays, ShapeDtypeStructs, or jit tracers —
+        anything with .shape/.dtype contributes to the bucket; scalars are
+        skipped (see `bucket_shapes`).  Returns the recorded key.
+        """
+        key = GeometryKey.from_args(op, args)
+        self._counts[key.encode()] = self._counts.get(key.encode(), 0) + weight
+        return key
+
+    # -- access ------------------------------------------------------------
+    def count(self, key: GeometryKey) -> int:
+        return self._counts.get(key.encode(), 0)
+
+    def ops(self) -> tuple[str, ...]:
+        return tuple(sorted({GeometryKey.decode(k).op for k in self._counts}))
+
+    def top(self, op: str | None = None, k: int | None = None
+            ) -> list[tuple[GeometryKey, int]]:
+        """Hottest geometries, most-counted first (ties broken by key for
+        determinism).  `op` filters to one op; `k` truncates."""
+        items = [(GeometryKey.decode(enc), n) for enc, n in self._counts.items()]
+        if op is not None:
+            items = [(g, n) for g, n in items if g.op == op]
+        items.sort(key=lambda it: (-it[1], it[0]))
+        return items if k is None else items[:k]
+
+    @property
+    def dirty(self) -> bool:
+        return self._counts != self._loaded
+
+    def __len__(self) -> int:
+        return len(self._counts)
+
+    # -- persistence -------------------------------------------------------
+    def save(self) -> Path:
+        """Atomically merge this process's new counts into the file.
+
+        Re-reads the on-disk profile, adds only the counts recorded since
+        load (delta merge — two profiling processes that both loaded the
+        same baseline do not double-count it), then temp-file + os.replace
+        like `TuningCache.save`.  The whole load-merge-replace runs under
+        the same exclusive sidecar lock the cache uses, so concurrent
+        profilers sum instead of losing a writer's delta.  Raises OSError
+        on unwritable paths; the Runtime wraps this in a warning because
+        losing a profile flush must not kill the workload that produced it.
+        """
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with file_lock(self.path.with_name(self.path.name + ".lock")):
+            on_disk = WorkloadProfile.load(self.path)._counts
+            merged = dict(on_disk)
+            for key, n in self._counts.items():
+                delta = n - self._loaded.get(key, 0)
+                if delta > 0:
+                    merged[key] = merged.get(key, 0) + delta
+            payload = {"schema": PROFILE_SCHEMA_VERSION, "counts": merged}
+            fd, tmp = tempfile.mkstemp(dir=self.path.parent,
+                                       prefix=self.path.name, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+        self._counts = merged
+        self._loaded = dict(merged)
+        return self.path
+
+
+def profiled_binding(binding: Any, profile: WorkloadProfile,
+                     ops: Iterable[str] | None = None) -> Any:
+    """Wrap an OpBinding so every op invocation records into `profile`.
+
+    Returns a new binding with each callable replaced by a recording
+    shim; reports and impl metadata are preserved.  Under jit the shim
+    fires at trace time (see module docstring for why that is the right
+    counting granularity).  `ops` restricts which ops are profiled;
+    None profiles everything in the binding.
+    """
+    import dataclasses as _dc
+
+    from repro.core.registry import OpBinding
+
+    selected = None if ops is None else frozenset(ops)
+    table = {}
+    for name in binding:
+        impl = binding.impl(name)
+        if selected is not None and name not in selected:
+            table[name] = impl
+            continue
+
+        def _wrap(fn, op):
+            def recorded(*args, **kwargs):
+                profile.record(op, args)
+                return fn(*args, **kwargs)
+            return recorded
+
+        table[name] = _dc.replace(impl, fn=_wrap(impl.fn, name))
+    return OpBinding(table, list(binding.reports))

@@ -12,11 +12,24 @@ same inversion the paper uses for site resources: the bundle declares
 
   cache hit            -> inject the cached config        ("cache-hit")
   miss, op selected    -> search now, persist the winner  ("cache-miss-searched")
+  miss after ABI expiry-> search now, persist the winner  ("cache-expired-searched")
   miss, not selected   -> platform-default config         ("cache-miss-default")
   search found nothing -> platform-default config         ("search-failed-default")
 
 Every outcome is surfaced in the binding's SwapReport so EXPERIMENTS
 logs show exactly which deployments ran tuned and from where.
+
+Two optional inputs close the tune-on-real-traffic loop (PR 2):
+
+  * ``profile`` — a `WorkloadProfile` of captured live geometries.  When
+    the profile has observations for an op, the cache key (and, on a
+    miss, the searched workload) comes from the *hottest recorded
+    geometry* instead of the canonical example, so a cache pre-warmed by
+    ``repro.tuning.warm`` from the same profile hits on the next deploy.
+  * ``current_abis`` — the site's currently declared ABI per op.  Stale
+    cache entries (tuned against an older kernel revision) are expired
+    up front (see expiry.py) and the re-search is labelled
+    "cache-expired-searched" in the SwapReport.
 """
 
 from __future__ import annotations
@@ -26,13 +39,59 @@ import functools
 import logging
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
-from repro.tuning.cache import CacheKey, TuningCache, platform_fingerprint
+from repro.tuning.cache import CacheKey, TuningCache, bucket_shapes, platform_fingerprint
 from repro.tuning.config import BlockConfig, default_config
-from repro.tuning.search import SearchResult, search
+from repro.tuning.search import search
 
-__all__ = ["OpTuner", "TuningContext", "TuneEvent"]
+__all__ = ["OpTuner", "TuningContext", "TuneEvent", "search_into_cache"]
 
 log = logging.getLogger("repro.tuning")
+
+
+def search_into_cache(
+    cache: TuningCache,
+    platform: Any,
+    tuner: "OpTuner",
+    fn: Callable[..., Any],
+    args: tuple,
+    key: CacheKey,
+    *,
+    extra_metrics: Mapping[str, Any] | None = None,
+) -> tuple[BlockConfig, bool]:
+    """Search the op's config space for `args`; persist the outcome at `key`.
+
+    The single search-and-persist path shared by bind-time tuning
+    (TuningContext.apply) and offline warming (repro.tuning.warm), so the
+    two can never diverge in feasibility handling or persisted metrics.
+    Returns (config, searched_ok); a search where nothing survives
+    persists the platform default — the failed search is paid once, not
+    per deploy — and returns searched_ok=False.
+    """
+    feasible = None
+    if tuner.feasible is not None:
+        feasible = lambda cfg: tuner.feasible(cfg, platform, args)  # noqa: E731
+    result = search(
+        lambda cfg: fn(*args, config=cfg),
+        tuner.space,
+        feasible=feasible,
+        iters=tuner.iters,
+        warmup=tuner.warmup,
+    )
+    if result.best is None:
+        config = default_config(tuner.op, platform)
+        metrics = {"search_failed": True}
+        metrics.update(extra_metrics or {})
+        cache.put(key, config, metrics=metrics)
+        return config, False
+    metrics = {
+        "best_us": result.best_seconds * 1e6,
+        "measured": len(result.measurements),
+        "pruned": result.pruned,
+        "failed": result.failed,
+    }
+    metrics.update(extra_metrics or {})
+    cache.put(key, result.best, metrics)
+    return result.best, True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +101,26 @@ class OpTuner:
     The impl's callable must accept a ``config=BlockConfig`` keyword; the
     context injects the resolved config via functools.partial, so model
     code keeps calling the op with its ordinary arguments.
+
+    Fields:
+      op             logical op name (matches the registry declaration).
+      space          name -> candidate values; the search enumerates the
+                     cartesian product (see search.enumerate_space).
+      example_args   platform -> concrete canonical workload, used when no
+                     recorded geometry is available.
+      feasible       (config, platform, args) -> bool pre-measurement
+                     filter (VMEM budget, divisibility); exceptions count
+                     as infeasible.
+      iters/warmup   measurement repetitions (best-of-iters after warmup).
+      example_specs  platform -> abstract workload (ShapeDtypeStructs):
+                     lets the cache key be derived without materializing
+                     the (possibly hundreds of MB) example arrays — a
+                     warm-cache deploy then allocates nothing.
+      args_from_shapes  (platform, shapes, dtype) -> args | None: rebuild
+                     a concrete workload from a *recorded* shape bucket
+                     (repro.tuning.profile encoding).  Returning None
+                     means the bucket doesn't match this op's signature
+                     and the caller falls back to the canonical example.
     """
 
     op: str
@@ -50,10 +129,8 @@ class OpTuner:
     feasible: Callable[[BlockConfig, Any, tuple], bool] | None = None
     iters: int = 2
     warmup: int = 1
-    # platform -> abstract workload (ShapeDtypeStructs): lets the cache key
-    # be derived without materializing the (possibly hundreds of MB) example
-    # arrays — a warm-cache deploy then allocates nothing.
     example_specs: Callable[[Any], tuple] | None = None
+    args_from_shapes: Callable[[Any, str, str], tuple | None] | None = None
 
     def workload_spec(self, platform: Any) -> tuple:
         if self.example_specs is not None:
@@ -75,12 +152,28 @@ class TuneEvent:
 
 
 class TuningContext:
-    """Carries the site cache through one binding pass.
+    """Carries the site cache (and optionally a workload profile) through
+    one binding pass.
 
-    ``ops`` restricts which ops may *search* on a miss (searching is the
-    expensive part); cache lookups and default fallbacks always apply.
-    ``search_on_miss=False`` makes the context read-only — deploys never
-    pay search cost, they only replay what the site has already tuned.
+    Args:
+      cache           the site's TuningCache (loaded by the caller).
+      platform        the Platform being deployed onto (keys embed its
+                      fingerprint, so caches never leak across hardware).
+      ops             restricts which ops may *search* on a miss
+                      (searching is the expensive part); cache lookups and
+                      default fallbacks always apply.
+      search_on_miss  False makes the context read-only — deploys never
+                      pay search cost, they only replay what the site has
+                      already tuned.
+      profile         optional WorkloadProfile: ops with recorded traffic
+                      are keyed (and searched) on their hottest observed
+                      geometry instead of the canonical example.
+      current_abis    optional op -> AbiString of the site's current
+                      declarations; triggers an ABI-expiry sweep of the
+                      cache at construction (see expiry.expire_stale).
+
+    After construction, ``expiry`` holds the sweep's ExpiryReport (or
+    None) and ``events`` accumulates one TuneEvent per applied op.
     """
 
     def __init__(
@@ -90,48 +183,96 @@ class TuningContext:
         *,
         ops: Iterable[str] | None = None,
         search_on_miss: bool = True,
+        profile: Any = None,
+        current_abis: Mapping[str, Any] | None = None,
     ) -> None:
         self.cache = cache
         self.platform = platform
         self.ops = None if ops is None else frozenset(ops)
         self.search_on_miss = search_on_miss
+        self.profile = profile
         self.events: list[TuneEvent] = []
+        self.expiry = None
+        # (op, platform, shapes, dtype) of each evicted entry: a miss is
+        # attributed to expiry only when THIS geometry lost its entry, so
+        # first-time searches are never mislabelled as revision churn
+        self._expired_geoms: set[tuple[str, str, str, str]] = set()
+        if current_abis:
+            from repro.tuning.expiry import expire_stale
+
+            self.expiry = expire_stale(cache, current_abis)
+            if len(self.expiry):
+                log.info(self.expiry.describe())
+                for op, encoded in self.expiry.evicted:
+                    parts = encoded.split("|")
+                    if len(parts) == 4:
+                        self._expired_geoms.add((op, parts[1], parts[2], parts[3]))
 
     # ------------------------------------------------------------------ #
+    def _key(self, impl: Any, shapes: str, dtype: str) -> CacheKey:
+        return CacheKey(abi=str(impl.abi),
+                        platform=platform_fingerprint(self.platform),
+                        shapes=shapes, dtype=dtype)
+
     def apply(self, name: str, impl: Any) -> tuple[Any, str, str]:
         """Resolve one chosen impl; returns (impl', status, config string).
 
         Impls without a tuner hook (references, untunable natives) pass
-        through untouched with empty annotations.
+        through untouched with empty annotations.  Key derivation is
+        string-only — a cache-hit deploy allocates no workload arrays;
+        synthesis of a profiled geometry happens only when a miss
+        actually triggers a search.
         """
         tuner: OpTuner | None = getattr(impl, "tuner", None)
         if tuner is None:
             return impl, "", ""
-        key = tuner.cache_key(str(impl.abi), self.platform,
-                              tuner.workload_spec(self.platform))
+        profiled = None
+        if self.profile is not None and tuner.args_from_shapes is not None:
+            top = self.profile.top(op=name, k=1)
+            if top:
+                profiled = top[0][0]
+        if profiled is not None:
+            key = self._key(impl, profiled.shapes, profiled.dtype)
+        else:
+            shapes, dtype = bucket_shapes(tuner.workload_spec(self.platform))
+            key = self._key(impl, shapes, dtype)
+        expired = (name, key.platform, key.shapes, key.dtype) in self._expired_geoms
         config = self.cache.get(key)
         if config is not None:
             status = "cache-hit"
         elif self.search_on_miss and (self.ops is None or name in self.ops):
-            result = self._search(tuner, impl.fn, tuner.example_args(self.platform))
-            if result.best is None:
-                config = default_config(name, self.platform)
-                status = "search-failed-default"
-                # persist the fallback too: a site where every candidate
-                # fails must not re-pay the failed search on every deploy
-                self.cache.put(key, config, metrics={"search_failed": True})
+            args = None
+            if profiled is not None:
+                args = tuner.args_from_shapes(self.platform, profiled.shapes,
+                                              profiled.dtype)
+                if args is None:
+                    # recorded bucket doesn't match the op signature: fall
+                    # back wholly to the canonical geometry — key and
+                    # measurement must describe the same workload
+                    log.warning(
+                        "profiled geometry %r for op %s does not match its "
+                        "signature; falling back to the canonical example",
+                        profiled.shapes, name,
+                    )
+                    shapes, dtype = bucket_shapes(
+                        tuner.workload_spec(self.platform))
+                    key = self._key(impl, shapes, dtype)
+                    config = self.cache.get(key)
+            if config is not None:
+                status = "cache-hit"
             else:
-                config = result.best
-                status = "cache-miss-searched"
-                self.cache.put(key, config, metrics={
-                    "best_us": result.best_seconds * 1e6,
-                    "measured": len(result.measurements),
-                    "pruned": result.pruned,
-                    "failed": result.failed,
-                })
+                if args is None:
+                    args = tuner.example_args(self.platform)
+                config, ok = search_into_cache(
+                    self.cache, self.platform, tuner, impl.fn, args, key)
+                if not ok:
+                    status = "search-failed-default"
+                else:
+                    status = ("cache-expired-searched" if expired
+                              else "cache-miss-searched")
         else:
             config = default_config(name, self.platform)
-            status = "cache-miss-default"
+            status = "cache-expired-default" if expired else "cache-miss-default"
         self.events.append(TuneEvent(op=name, status=status, key=key.encode(),
                                      config=config))
         log.info("tune %-18s %s (%s)", name, status, config)
@@ -139,20 +280,6 @@ class TuningContext:
             impl, fn=functools.partial(impl.fn, config=config), config=config
         )
         return tuned, status, str(config)
-
-    # ------------------------------------------------------------------ #
-    def _search(self, tuner: OpTuner, fn: Callable[..., Any],
-                args: tuple) -> SearchResult:
-        feasible = None
-        if tuner.feasible is not None:
-            feasible = lambda cfg: tuner.feasible(cfg, self.platform, args)  # noqa: E731
-        return search(
-            lambda cfg: fn(*args, config=cfg),
-            tuner.space,
-            feasible=feasible,
-            iters=tuner.iters,
-            warmup=tuner.warmup,
-        )
 
     # ------------------------------------------------------------------ #
     def flush(self) -> None:

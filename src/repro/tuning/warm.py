@@ -1,0 +1,274 @@
+"""repro.tuning.warm — pre-warm the site tuning cache from live traffic.
+
+Closes the loop the profile subsystem opens: a deployment that ran with
+``REPRO_PROFILE=1`` left a `WorkloadProfile` of the geometries real
+traffic produced; this entry point replays the profile's hottest
+geometries through the autotuner so the *next* deployment binds every
+profiled op with a cache hit — the search cost is paid offline, against
+observed workloads, instead of at deploy time against canonical examples.
+
+    python -m repro.tuning.warm [--profile PATH] [--cache PATH]
+                                [--platform NAME] [--top K] [--ops a,b]
+
+Environment:
+  REPRO_WORKLOAD_PROFILE  profile location (same default as capture).
+  REPRO_TUNING_CACHE      cache location (same default as deploy).
+  REPRO_PLATFORM          platform override; else device detection.
+
+Per (op, geometry) outcome, printed and returned by `warm_cache`:
+  warmed            searched and persisted a winner
+  already-cached    an entry for this exact key exists; nothing to do
+  search-failed     every candidate infeasible/raised; the platform
+                    default was persisted so deploys don't re-pay this
+  no-native-impl    the platform binds no tunable native for this op
+  unsynthesizable   the recorded bucket doesn't match the op signature
+
+Stale-ABI entries are expired before warming (see expiry.py), so a
+kernel revision bump followed by a warm run yields a fully re-tuned
+cache in one pass.
+
+``--selftest`` runs the whole capture -> warm -> redeploy loop against
+temp files on the ``pod-sim`` platform (interpret-mode kernels, no TPU
+needed) and exits non-zero unless the final deploy reports zero misses.
+This is what the CI docs job executes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import sys
+from pathlib import Path
+from typing import Any, Iterable
+
+from repro.tuning.cache import (
+    CacheKey,
+    TuningCache,
+    platform_fingerprint,
+    resolve_cache_path,
+)
+from repro.tuning.expiry import expire_stale
+from repro.tuning.profile import WorkloadProfile, resolve_profile_path
+from repro.tuning.tuner import search_into_cache
+
+log = logging.getLogger("repro.tuning")
+
+__all__ = ["WarmResult", "warm_cache", "main"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmResult:
+    """Outcome of warming one (op, recorded geometry) pair."""
+
+    op: str
+    shapes: str
+    dtype: str
+    count: int          # profile hit count for this geometry
+    status: str         # warmed / already-cached / search-failed / ...
+    config: str = ""    # winner (or persisted fallback), printable form
+
+
+def _native_impl(registry: Any, op: str, platform: Any):
+    """The tunable native bind() would choose for `op` on `platform`, or
+    None — the single ABI source shared with deploy-time expiry (see
+    OpDecl.tunable_native)."""
+    try:
+        decl = registry.decl(op)
+    except KeyError:
+        return None
+    return decl.tunable_native(platform)
+
+
+def warm_cache(
+    profile: WorkloadProfile,
+    cache: TuningCache,
+    platform: Any,
+    *,
+    registry: Any = None,
+    top_k: int = 3,
+    ops: Iterable[str] | None = None,
+) -> list[WarmResult]:
+    """Search the top-`top_k` recorded geometries of every profiled op.
+
+    Winners land in `cache` (caller saves); existing entries are left
+    alone, so repeated warm runs are idempotent and cheap.  Stale-ABI
+    entries are expired first.  Returns one WarmResult per considered
+    (op, geometry), hottest first.
+    """
+    from repro.core.registry import global_registry
+    from repro.kernels.ops import register_all
+
+    reg = registry if registry is not None else register_all(global_registry)
+    selected = None if ops is None else frozenset(ops)
+    fingerprint = platform_fingerprint(platform)
+
+    current_abis = {}
+    for op in profile.ops():
+        impl = _native_impl(reg, op, platform)
+        if impl is not None:
+            current_abis[op] = impl.abi
+    report = expire_stale(cache, current_abis)
+    if len(report):
+        log.info(report.describe())
+
+    results: list[WarmResult] = []
+    for op in profile.ops():
+        if selected is not None and op not in selected:
+            continue
+        impl = _native_impl(reg, op, platform)
+        for geo, count in profile.top(op=op, k=top_k):
+            if impl is None:
+                results.append(WarmResult(op, geo.shapes, geo.dtype, count,
+                                          "no-native-impl"))
+                continue
+            tuner = impl.tuner
+            key = CacheKey(abi=str(impl.abi), platform=fingerprint,
+                           shapes=geo.shapes, dtype=geo.dtype)
+            cached = cache.get(key)
+            if cached is not None:
+                results.append(WarmResult(op, geo.shapes, geo.dtype, count,
+                                          "already-cached", str(cached)))
+                continue
+            args = None
+            if tuner.args_from_shapes is not None:
+                args = tuner.args_from_shapes(platform, geo.shapes, geo.dtype)
+            if args is None:
+                results.append(WarmResult(op, geo.shapes, geo.dtype, count,
+                                          "unsynthesizable"))
+                continue
+            config, ok = search_into_cache(
+                cache, platform, tuner, impl.fn, args, key,
+                extra_metrics={"warmed_from_profile": True,
+                               "profile_count": count},
+            )
+            results.append(WarmResult(
+                op, geo.shapes, geo.dtype, count,
+                "warmed" if ok else "search-failed", str(config)))
+    return results
+
+
+# --------------------------------------------------------------------------- #
+def _selftest() -> int:
+    """capture -> warm -> redeploy on pod-sim; 0 iff the redeploy has zero
+    misses and the k-loop moe_gmm entry carries a searched block_k."""
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.bundle import Bundle
+    from repro.core.platform import POD_SIM
+    from repro.core.registry import OpRegistry
+    from repro.core.runtime import Runtime
+    from repro.kernels.ops import ABIS, register_all
+
+    tmp = Path(tempfile.mkdtemp(prefix="repro-warm-selftest-"))
+    host_env = {
+        "REPRO_PLATFORM": "pod-sim",
+        "REPRO_TUNING_CACHE": str(tmp / "tuning.json"),
+        "REPRO_WORKLOAD_PROFILE": str(tmp / "workload.json"),
+    }
+    ops = ("rmsnorm", "moe_gmm")
+    bundle = Bundle(name="warm-selftest", tag="t", model_config={}, recipe={},
+                    required_ops={op: str(ABIS[op]) for op in ops}, env={})
+
+    # 1. capture: deploy with profiling on, run live traffic through the ops
+    rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c1 = rt.deploy(bundle, native_ops=True, autotune=False, profile=True)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(k1, (60, 64), jnp.float32)        # buckets to 64x64
+    wgt = jax.random.normal(k2, (64,), jnp.float32)
+    for _ in range(3):
+        jax.block_until_ready(c1.binding["rmsnorm"](x, wgt))
+    xt = jax.random.normal(k3, (64, 64), jnp.float32)
+    wm = jax.random.normal(k2, (4, 64, 64), jnp.float32)
+    gs = jnp.full((4,), 16, jnp.int32)
+    for _ in range(2):
+        jax.block_until_ready(c1.binding["moe_gmm"](xt, wm, gs))
+    rt.cleanup()   # persists the profile
+
+    profile = WorkloadProfile.load(tmp / "workload.json")
+    if set(profile.ops()) != set(ops):
+        print(f"FAIL: capture recorded {profile.ops()!r}, want {ops!r}")
+        return 1
+
+    # 2. warm: replay the recorded geometries through the tuner
+    cache = TuningCache.load(tmp / "tuning.json")
+    results = warm_cache(profile, cache, POD_SIM,
+                         registry=register_all(OpRegistry()))
+    cache.save()
+    for r in results:
+        print(f"  warm {r.op:<10} {r.shapes:<24} x{r.count:<4} "
+              f"{r.status} ({r.config})")
+    warmed = {r.op for r in results if r.status == "warmed"}
+    if warmed != set(ops):
+        print(f"FAIL: warmed {warmed!r}, want {set(ops)!r}")
+        return 1
+    moe_cfg = next(r.config for r in results if r.op == "moe_gmm")
+    if "block_k=" not in moe_cfg:
+        print(f"FAIL: moe_gmm winner {moe_cfg!r} has no block_k knob")
+        return 1
+
+    # 3. redeploy: autotune against the warmed cache -> zero misses
+    rt2 = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c2 = rt2.deploy(bundle, native_ops=True, autotune=True)
+    print(c2.describe())
+    statuses = {r.op: r.tuning for r in c2.binding.reports}
+    rt2.cleanup()
+    if any(s != "cache-hit" for s in statuses.values()):
+        print(f"FAIL: redeploy expected all cache-hits, got {statuses!r}")
+        return 1
+    print(f"OK: profile-warmed cache at {tmp} replayed with zero misses")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Pre-warm the tuning cache from a captured workload profile.")
+    ap.add_argument("--profile", default=None,
+                    help="workload profile path (default: REPRO_WORKLOAD_PROFILE)")
+    ap.add_argument("--cache", default=None,
+                    help="tuning cache path (default: REPRO_TUNING_CACHE)")
+    ap.add_argument("--platform", default=None,
+                    help="platform name (default: REPRO_PLATFORM / detection)")
+    ap.add_argument("--top", type=int, default=3,
+                    help="geometries to warm per op, hottest first")
+    ap.add_argument("--ops", default=None,
+                    help="comma-separated op filter (default: every profiled op)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the capture->warm->redeploy loop on pod-sim")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    if args.selftest:
+        return _selftest()
+
+    from repro.core.env import resolve_platform
+    from repro.core.platform import PLATFORMS
+
+    platform = (PLATFORMS[args.platform] if args.platform
+                else resolve_platform())
+    profile_path = Path(args.profile) if args.profile else resolve_profile_path()
+    cache_path = Path(args.cache) if args.cache else resolve_cache_path()
+
+    profile = WorkloadProfile.load(profile_path)
+    if not len(profile):
+        print(f"nothing to warm: profile {profile_path} is empty or missing "
+              f"(deploy with REPRO_PROFILE=1 to capture workloads)")
+        return 1
+    cache = TuningCache.load(cache_path)
+    ops = [o.strip() for o in args.ops.split(",")] if args.ops else None
+    results = warm_cache(profile, cache, platform, top_k=args.top, ops=ops)
+    cache.save()
+    for r in results:
+        print(f"{r.op:<18} {r.shapes:<32} {r.dtype:<10} x{r.count:<6} "
+              f"{r.status:<16} {r.config}")
+    warmed = sum(r.status == "warmed" for r in results)
+    print(f"warmed {warmed} entr{'y' if warmed == 1 else 'ies'} "
+          f"into {cache_path} ({len(cache)} total)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

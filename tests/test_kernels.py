@@ -154,3 +154,56 @@ def test_moe_gmm_capacity_drops():
     y = moe_gmm_ref(x, w, gs, capacity_factor=1.0)   # cap = 6 per expert
     dropped = int((jnp.abs(y).sum(axis=1) == 0).sum())
     assert dropped == 4                              # 10 - 6 overflow rows
+
+
+@pytest.mark.parametrize("block_k", [16, 32, 64])
+def test_moe_gmm_kloop_matches_single_block(block_k):
+    """Chunking the contraction must not change the math: every block_k,
+    including non-dividing values (gcd degrade), equals the full-D result."""
+    t, d, e, f = 24, 64, 3, 16
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    x = _rand(ks[0], (t, d), jnp.float32)
+    w = _rand(ks[1], (e, d, f), jnp.float32)
+    gs = jnp.array([10, 0, 14], jnp.int32)
+    exact = moe_gmm_exact(x, w, gs)
+    out = moe_gmm(x, w, gs, block_m=8, block_n=8, block_k=block_k,
+                  interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exact),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_moe_gmm_kloop_nondividing_block_k_degrades():
+    t, d, e, f = 16, 48, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(12), 2)
+    x = _rand(ks[0], (t, d), jnp.float32)
+    w = _rand(ks[1], (e, d, f), jnp.float32)
+    gs = jnp.array([9, 7], jnp.int32)
+    out = moe_gmm(x, w, gs, block_m=8, block_n=8, block_k=32,  # gcd(32,48)=16
+                  interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(moe_gmm_exact(x, w, gs)),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_moe_gmm_wide_d_searched_block_k():
+    """The PR acceptance geometry: D=16384 — far beyond the old single-block
+    kernel's VMEM working set (bm*D + D*bn alone would be ~16.8 MB at
+    128x128 tiles) — matches the fp32 oracle under a *searched* block_k."""
+    from repro.tuning import search
+
+    t, d, e, f = 8, 16384, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(13), 2)
+    x = _rand(ks[0], (t, d), jnp.float32) * 0.05
+    w = _rand(ks[1], (e, d, f), jnp.float32) * 0.05
+    gs = jnp.array([5, 3], jnp.int32)
+
+    result = search(
+        lambda cfg: jax.block_until_ready(
+            moe_gmm(x, w, gs, config=cfg, interpret=True)),
+        {"block_m": (8,), "block_n": (16,), "block_k": (2048, 4096, 8192)},
+        iters=1, warmup=1,
+    )
+    assert result.best is not None
+    assert result.best["block_k"] in (2048, 4096, 8192)
+    out = moe_gmm(x, w, gs, config=result.best, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(moe_gmm_exact(x, w, gs)),
+                               atol=2e-4, rtol=2e-4)

@@ -31,13 +31,14 @@ def test_hierarchical_equals_flat_allreduce():
         from jax.sharding import PartitionSpec as P
         from repro.distributed import flat_grad_allreduce, hierarchical_grad_allreduce
 
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.distributed.collectives import compat_shard_map
+        from repro.launch.mesh import make_compat_mesh
+        mesh = make_compat_mesh((2, 4), ("pod", "data"))
         grads = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4),
                  "b": jnp.ones((5,), jnp.float32)}
 
         def run(fn):
-            return jax.jit(jax.shard_map(
+            return jax.jit(compat_shard_map(
                 fn, mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False,
             ))(grads)
 
@@ -57,12 +58,13 @@ def test_compressed_dcn_allreduce_close_to_exact():
         from jax.sharding import PartitionSpec as P
         from repro.distributed import flat_grad_allreduce, hierarchical_grad_allreduce
 
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.distributed.collectives import compat_shard_map
+        from repro.launch.mesh import make_compat_mesh
+        mesh = make_compat_mesh((2, 4), ("pod", "data"))
         g = {"w": jnp.linspace(-1, 1, 64, dtype=jnp.float32).reshape(8, 8)}
 
         def run(fn):
-            return jax.jit(jax.shard_map(
+            return jax.jit(compat_shard_map(
                 fn, mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False,
             ))(g)
 
@@ -82,8 +84,9 @@ def test_pipeline_matches_sequential():
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed import pipeline_apply
 
-        mesh = jax.make_mesh((4,), ("pipe",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.distributed.collectives import compat_shard_map
+        from repro.launch.mesh import make_compat_mesh
+        mesh = make_compat_mesh((4,), ("pipe",))
         S, M, mb, d = 4, 6, 3, 8
         key = jax.random.PRNGKey(0)
         ws = jax.random.normal(key, (S, d, d)) * 0.3
@@ -116,8 +119,9 @@ def test_moe_shard_map_matches_local_path():
         # capacity cutoff C = cf*T/E depends on the local T; with data>1
         # the reference may drop different overflow rows than the
         # single-device run — documented capacity semantics, not a bug).
-        mesh = jax.make_mesh((1, 8), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.distributed.collectives import compat_shard_map
+        from repro.launch.mesh import make_compat_mesh
+        mesh = make_compat_mesh((1, 8), ("data", "model"))
         pctx = ParallelCtx(mesh=mesh, batch_axes=("data",), model_axis="model")
         model = build_model(cfg, pctx=pctx)
         params = model.init(jax.random.PRNGKey(0))
@@ -149,8 +153,9 @@ def test_small_mesh_train_step_compiles_and_runs():
         from repro.optim import adamw_init
 
         cfg = ARCHS["qwen2.5-14b"].reduced()
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.distributed.collectives import compat_shard_map
+        from repro.launch.mesh import make_compat_mesh
+        mesh = make_compat_mesh((2, 4), ("data", "model"))
         shape = ShapeConfig("t", 32, 4, "train")
         dep = make_deployment(cfg, shape, mesh, options=DeployOptions(donate=False))
         params = jax.device_put(dep.model.init(jax.random.PRNGKey(0)), dep.param_sharding)

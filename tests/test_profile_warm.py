@@ -1,0 +1,384 @@
+"""Workload-profile subsystem: geometry capture round-trip, warm-from-profile
+cache pre-warming, profile-keyed binding, and ABI-bump cache expiry."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.abi import AbiString
+from repro.core.bundle import Bundle
+from repro.core.platform import POD_SIM, Platform
+from repro.core.registry import ImplKind, OpImpl, OpRegistry
+from repro.core.runtime import Runtime
+from repro.kernels.ops import ABIS, register_all
+from repro.tuning import (
+    BlockConfig,
+    CacheKey,
+    GeometryKey,
+    OpTuner,
+    TuningCache,
+    TuningContext,
+    WorkloadProfile,
+    expire_stale,
+    platform_fingerprint,
+    profiled_binding,
+    resolve_profile_path,
+)
+from repro.tuning.warm import warm_cache
+
+# ---------------------------------------------------------------- profile --
+
+
+def test_geometry_key_roundtrip():
+    key = GeometryKey(op="moe_gmm", shapes="64x64,4x64x64,4", dtype="float32")
+    assert GeometryKey.decode(key.encode()) == key
+    x = jnp.zeros((60, 33))      # buckets to powers of two
+    got = GeometryKey.from_args("rmsnorm", (x,))
+    assert got.shapes == "64x64" and got.dtype == "float32"
+
+
+def test_profile_record_save_load_roundtrip(tmp_path):
+    path = tmp_path / "deep" / "workload.json"
+    prof = WorkloadProfile(path)
+    x = jnp.zeros((48, 32))
+    w = jnp.zeros((32,))
+    for _ in range(3):
+        prof.record("rmsnorm", (x, w))
+    prof.record("rmsnorm", (jnp.zeros((128, 32)), w))
+    assert prof.dirty and len(prof) == 2
+    prof.save()
+    assert not prof.dirty
+
+    reloaded = WorkloadProfile.load(path)
+    top = reloaded.top(op="rmsnorm")
+    assert top[0][0].shapes == "64x32,32" and top[0][1] == 3
+    assert top[1][0].shapes == "128x32,32" and top[1][1] == 1
+    assert reloaded.ops() == ("rmsnorm",)
+
+
+def test_profile_save_merges_deltas_not_baselines(tmp_path):
+    """Two processes that loaded the same baseline must add only their own
+    new counts on save — not re-add the baseline they both read."""
+    path = tmp_path / "workload.json"
+    seed = WorkloadProfile(path)
+    seed.record("op_a", (jnp.zeros((8, 8)),), weight=10)
+    seed.save()
+
+    a = WorkloadProfile.load(path)
+    b = WorkloadProfile.load(path)
+    a.record("op_a", (jnp.zeros((8, 8)),), weight=2)
+    b.record("op_a", (jnp.zeros((8, 8)),), weight=5)
+    a.save()
+    b.save()
+    merged = WorkloadProfile.load(path)
+    key = GeometryKey(op="op_a", shapes="8x8", dtype="float32")
+    assert merged.count(key) == 17    # 10 + 2 + 5, baseline counted once
+
+
+def test_profile_corrupted_file_falls_back_empty(tmp_path):
+    path = tmp_path / "workload.json"
+    path.write_text("{ nope")
+    prof = WorkloadProfile.load(path)
+    assert len(prof) == 0
+    prof.record("x", (jnp.zeros((4, 4)),))
+    prof.save()                        # recoverable in place
+    assert len(WorkloadProfile.load(path)) == 1
+
+
+def test_profile_malformed_entries_dropped(tmp_path):
+    path = tmp_path / "workload.json"
+    path.write_text(json.dumps({
+        "schema": 1,
+        "counts": {"rmsnorm|8x8|float32": 3, "noseparators": 1,
+                   "op|8x8|float32": "not-a-number"},
+    }))
+    prof = WorkloadProfile.load(path)
+    assert len(prof) == 1
+
+
+def test_profile_path_env_override(tmp_path):
+    assert resolve_profile_path(
+        {"REPRO_WORKLOAD_PROFILE": str(tmp_path / "p.json")}
+    ) == tmp_path / "p.json"
+    assert resolve_profile_path({}).name == "workload.json"
+
+
+# ------------------------------------------------------- profiled binding --
+
+
+def test_profiled_binding_records_per_compiled_geometry(tmp_path):
+    reg = OpRegistry()
+    abi = AbiString.make("ident", {"args": ["x"]})
+    reg.register(OpImpl(abi=abi, kind=ImplKind.REFERENCE,
+                        fn=lambda x: x * 2, provider="ref"))
+    binding = reg.bind(["ident"], POD_SIM, native=False, freeze=False)
+    prof = WorkloadProfile(tmp_path / "workload.json")
+    wrapped = profiled_binding(binding, prof)
+
+    fn = jax.jit(wrapped["ident"])
+    for _ in range(4):
+        fn(jnp.zeros((16, 16)))       # one trace -> one record
+    fn(jnp.zeros((32, 16)))           # new geometry -> second record
+    assert wrapped["ident"](jnp.ones((2, 2)))[0, 0] == 2.0  # math unchanged
+
+    shapes = {g.shapes for g, _ in prof.top(op="ident")}
+    assert shapes == {"16x16", "32x16", "2x2"}
+    # reports and impl metadata survive the wrap
+    assert wrapped.reports == binding.reports
+    assert wrapped.impl("ident").provider == "ref"
+
+
+# ------------------------------------------------------------------ warm --
+
+
+def test_capture_warm_redeploy_zero_misses(tmp_path):
+    """The PR acceptance loop: a profiling serve-style deployment captures
+    live geometries; repro.tuning.warm pre-warms the cache; the next
+    autotuned deploy binds every op with a cache hit (zero misses)."""
+    host_env = {
+        "REPRO_PLATFORM": "pod-sim",
+        "REPRO_TUNING_CACHE": str(tmp_path / "tuning.json"),
+        "REPRO_WORKLOAD_PROFILE": str(tmp_path / "workload.json"),
+    }
+    bundle = Bundle(name="cap", tag="t", model_config={}, recipe={},
+                    required_ops={"rmsnorm": str(ABIS["rmsnorm"])}, env={})
+
+    # capture
+    rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c1 = rt.deploy(bundle, native_ops=True, autotune=False, profile=True)
+    assert c1.profile and c1.workload is not None
+    x = jax.random.normal(jax.random.PRNGKey(0), (48, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32,))
+    for _ in range(3):
+        jax.block_until_ready(c1.binding["rmsnorm"](x, w))
+    rt.cleanup()   # persists
+
+    prof = WorkloadProfile.load(tmp_path / "workload.json")
+    assert prof.top(op="rmsnorm")[0][0].shapes == "64x32,32"
+
+    # warm
+    cache = TuningCache.load(tmp_path / "tuning.json")
+    results = warm_cache(prof, cache, POD_SIM,
+                         registry=register_all(OpRegistry()))
+    cache.save()
+    assert [r.status for r in results if r.op == "rmsnorm"] == ["warmed"]
+
+    # warm is idempotent: second run finds the entry already cached
+    again = warm_cache(prof, TuningCache.load(cache.path), POD_SIM,
+                       registry=register_all(OpRegistry()))
+    assert [r.status for r in again if r.op == "rmsnorm"] == ["already-cached"]
+
+    # redeploy: zero misses
+    rt2 = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c2 = rt2.deploy(bundle, native_ops=True, autotune=True)
+    report = next(r for r in c2.binding.reports if r.op == "rmsnorm")
+    rt2.cleanup()
+    assert report.tuning == "cache-hit"
+    # and the hit is keyed on the *recorded* geometry, not the canonical one
+    fingerprint = platform_fingerprint(POD_SIM)
+    recorded_key = CacheKey(abi=str(ABIS["rmsnorm"]), platform=fingerprint,
+                            shapes="64x32,32", dtype="float32")
+    assert TuningCache.load(cache.path).get(recorded_key) is not None
+
+
+def test_warm_moe_narrow_d_geometry_searches(tmp_path):
+    """moe_gmm geometries with D below the block_k space minimum must still
+    search (the kernel degrades block_k via gcd), not silently persist the
+    untuned default as a failed search."""
+    prof = WorkloadProfile(tmp_path / "w.json")
+    prof.record("moe_gmm", (jnp.zeros((64, 32), jnp.float32),
+                            jnp.zeros((4, 32, 32), jnp.float32),
+                            jnp.full((4,), 16, jnp.int32)))
+    cache = TuningCache(tmp_path / "t.json")
+    results = warm_cache(prof, cache, POD_SIM,
+                         registry=register_all(OpRegistry()))
+    assert [r.status for r in results] == ["warmed"]
+    assert "block_k=" in results[0].config
+
+
+def test_warm_moe_tiny_token_geometry_searches(tmp_path):
+    """t below the smallest block_m (8) must still search — the kernel
+    clamps block_m to max(t, 8) — and with e > t the synthesized
+    group_sizes must still route every row."""
+    from repro.kernels.ops import tuners
+
+    args = tuners()["moe_gmm"].args_from_shapes(POD_SIM, "4x32,8x32x32,8",
+                                                "float32")
+    assert args is not None
+    assert args[2].shape == (8,) and int(args[2].sum()) == 4  # all rows routed
+
+    prof = WorkloadProfile(tmp_path / "w.json")
+    prof.record("moe_gmm", (jnp.zeros((4, 32), jnp.float32),
+                            jnp.zeros((8, 32, 32), jnp.float32),
+                            jnp.array([1, 1, 1, 1, 0, 0, 0, 0], jnp.int32)))
+    cache = TuningCache(tmp_path / "t.json")
+    results = warm_cache(prof, cache, POD_SIM,
+                         registry=register_all(OpRegistry()))
+    assert [r.status for r in results] == ["warmed"]
+
+
+def test_warm_skips_unsynthesizable_geometry(tmp_path):
+    prof = WorkloadProfile(tmp_path / "workload.json")
+    # one array where rmsnorm's signature expects (x, weight)
+    prof.record("rmsnorm", (jnp.zeros((8, 8)),))
+    cache = TuningCache(tmp_path / "tuning.json")
+    results = warm_cache(prof, cache, POD_SIM,
+                         registry=register_all(OpRegistry()))
+    assert [r.status for r in results] == ["unsynthesizable"]
+    assert len(cache) == 0
+
+
+def test_warm_reports_ops_without_native_impl(tmp_path):
+    prof = WorkloadProfile(tmp_path / "workload.json")
+    prof.record("rmsnorm", (jnp.zeros((8, 8)), jnp.zeros((8,))))
+    cache = TuningCache(tmp_path / "tuning.json")
+    laptop = Platform(name="laptop-x", hardware=POD_SIM.hardware,
+                      mesh_shape=(1,), mesh_axes=("data",),
+                      native_features=frozenset())   # no pallas at all
+    results = warm_cache(prof, cache, laptop,
+                         registry=register_all(OpRegistry()))
+    assert [r.status for r in results] == ["no-native-impl"]
+
+
+# ---------------------------------------------------------------- expiry --
+
+FAKE_SIM = Platform(
+    name="fake-sim",
+    hardware=POD_SIM.hardware,
+    mesh_shape=(1,),
+    mesh_axes=("data",),
+    native_features=frozenset({"pallas_interpret"}),
+)
+
+
+def _registry_at_minor(minor: int):
+    abi = AbiString.make("scale", {"args": ["x"]}, major=1, minor=minor)
+    reg = OpRegistry()
+    reg.register(OpImpl(abi=abi, kind=ImplKind.REFERENCE,
+                        fn=lambda x: x, provider="ref"))
+    tuner = OpTuner(
+        op="scale",
+        space={"block": (2, 4)},
+        example_args=lambda platform: (1.5,),
+        iters=1, warmup=0,
+    )
+    reg.register(OpImpl(
+        abi=abi, kind=ImplKind.NATIVE,
+        fn=lambda x, config=None: x * config["block"],
+        requires_feature="pallas_interpret", provider="fake-native", tuner=tuner,
+    ))
+    return reg, abi
+
+
+def test_abi_bump_expires_entry_and_researches(tmp_path):
+    """A cache tuned at kernel minor 0 must be evicted and re-searched when
+    the site's kernel bumps to minor 1, with the SwapReport saying so."""
+    fingerprint = platform_fingerprint(FAKE_SIM)
+    reg0, abi0 = _registry_at_minor(0)
+    cache = TuningCache(tmp_path / "tuning.json")
+    ctx0 = TuningContext(cache, FAKE_SIM, current_abis={"scale": abi0})
+    reg0.bind(["scale"], FAKE_SIM, native=True, freeze=False, tuning=ctx0)
+    ctx0.flush()
+    stale_key = CacheKey(abi=str(abi0), platform=fingerprint,
+                         shapes="", dtype="none")
+    assert TuningCache.load(cache.path).get(stale_key) is not None
+
+    # kernel revision bumps: same op, minor 1
+    reg1, abi1 = _registry_at_minor(1)
+    cache1 = TuningCache.load(tmp_path / "tuning.json")
+    ctx1 = TuningContext(cache1, FAKE_SIM, current_abis={"scale": abi1})
+    assert ctx1.expiry is not None and len(ctx1.expiry) == 1
+    assert ctx1.expiry.ops == frozenset({"scale"})
+    assert "scale" in ctx1.expiry.describe()
+    binding = reg1.bind(["scale"], FAKE_SIM, native=True, freeze=False,
+                        tuning=ctx1)
+    assert binding.reports[0].tuning == "cache-expired-searched"
+    ctx1.flush()
+
+    # the stale entry is gone from disk (tombstone survived the merge)
+    reloaded = TuningCache.load(tmp_path / "tuning.json")
+    assert reloaded.get(stale_key) is None
+    fresh_key = CacheKey(abi=str(abi1), platform=fingerprint,
+                         shapes="", dtype="none")
+    assert reloaded.get(fresh_key) is not None
+
+    # third deploy at minor 1: plain hit, no expiry
+    ctx2 = TuningContext(reloaded, FAKE_SIM, current_abis={"scale": abi1})
+    assert ctx2.expiry is not None and len(ctx2.expiry) == 0
+    b2 = reg1.bind(["scale"], FAKE_SIM, native=True, freeze=False, tuning=ctx2)
+    assert b2.reports[0].tuning == "cache-hit"
+
+
+def test_expire_stale_leaves_foreign_ops_alone(tmp_path):
+    cache = TuningCache(tmp_path / "t.json")
+    mine = CacheKey(abi="scale/1:0/" + "a" * 12, platform="p", shapes="8", dtype="f")
+    other = CacheKey(abi="other_op/1:0/" + "b" * 12, platform="p", shapes="8", dtype="f")
+    unparsable = CacheKey(abi="not-an-abi", platform="p", shapes="8", dtype="f")
+    for k in (mine, other, unparsable):
+        cache.put(k, BlockConfig.make(block=2))
+    new_abi = AbiString.make("scale", {"args": ["x"]}, major=1, minor=3)
+    report = expire_stale(cache, {"scale": new_abi})
+    assert len(report) == 1 and report.ops == frozenset({"scale"})
+    assert cache.get(mine) is None
+    assert cache.get(other) is not None
+    assert cache.get(unparsable) is not None
+
+
+def test_moe_gmm_abi_minor_is_bumped():
+    """The k-loop extension is a compatible revision: minor 1, same digest,
+    so old bundles (requiring 1:0) still deploy but caches expire."""
+    assert ABIS["moe_gmm"].minor == 1
+    old = AbiString(name="moe_gmm", major=1, minor=0,
+                    digest=ABIS["moe_gmm"].digest)
+    assert old.compatible_with(ABIS["moe_gmm"])       # bundle side still fine
+    assert not ABIS["moe_gmm"].compatible_with(old)   # old impl refused
+
+
+# ------------------------------------------------- profile-keyed context --
+
+
+def test_tuning_context_prefers_profiled_geometry(tmp_path):
+    """With a profile present, the cache key (and searched workload) come
+    from the hottest recorded geometry, not the canonical example."""
+    reg = register_all(OpRegistry())
+    prof = WorkloadProfile(tmp_path / "w.json")
+    x = jnp.zeros((48, 32), jnp.float32)
+    w = jnp.zeros((32,), jnp.float32)
+    prof.record("rmsnorm", (x, w))
+
+    cache = TuningCache(tmp_path / "t.json")
+    ctx = TuningContext(cache, POD_SIM, profile=prof, ops={"rmsnorm"})
+    reg.bind(["rmsnorm"], POD_SIM, native=True, freeze=False, tuning=ctx)
+    assert len(ctx.events) == 1
+    assert "|64x32,32|float32" in ctx.events[0].key
+    # the searched winner fits the recorded geometry (64 rows), not the
+    # canonical 128-row example's larger space
+    assert ctx.events[0].config["block_rows"] <= 64
+
+
+def test_tuning_context_without_profile_uses_canonical(tmp_path):
+    reg = register_all(OpRegistry())
+    cache = TuningCache(tmp_path / "t.json")
+    ctx = TuningContext(cache, POD_SIM, ops=set())   # no search, default path
+    reg.bind(["rmsnorm"], POD_SIM, native=True, freeze=False, tuning=ctx)
+    assert "|128x256,256|float32" in ctx.events[0].key
+
+
+@pytest.mark.parametrize("op", ["rmsnorm", "attention", "decode_attention",
+                                "ssd_scan", "moe_gmm"])
+def test_synthesizers_roundtrip_canonical_bucket(op):
+    """Every op's args_from_shapes must rebuild args whose bucket equals the
+    recorded one — otherwise warm would persist under a key deploys never
+    look up."""
+    from repro.kernels.ops import tuners
+    from repro.tuning import bucket_shapes
+
+    t = tuners()[op]
+    assert t.args_from_shapes is not None
+    shapes, dtype = bucket_shapes(t.workload_spec(POD_SIM))
+    args = t.args_from_shapes(POD_SIM, shapes, dtype)
+    assert args is not None
+    re_shapes, re_dtype = bucket_shapes(args)
+    assert (re_shapes, re_dtype) == (shapes, dtype)
