@@ -15,6 +15,20 @@ persist, rebind — is identical on a TPU site.  Rows:
   table6/<op>/profile_warmed    us/call at a *recorded live geometry*
                                 (different from the canonical example),
                                 tuned offline by repro.tuning.warm
+  table6/<op>/top1_binding      us/call at the SECOND-hottest live
+                                geometry under the pre-dispatch binding
+                                (one baked config: the hottest bucket's,
+                                foreign to this call)
+  table6/<op>/geometry_dispatch us/call at the same geometry under the
+                                geometry-dispatched binding (its own
+                                warmed entry, resolved at trace time);
+                                the note carries both bindings'
+                                multi-bucket exact-hit rates
+
+``--smoke`` (CLI) runs only the geometry-dispatch comparison with tiny
+workloads and exits non-zero unless the dispatched binding resolves
+every live bucket exactly while the top-1 binding cannot — the CI guard
+that keeps the new row runnable.
 """
 
 from __future__ import annotations
@@ -93,4 +107,109 @@ def run() -> list[tuple[str, float, str]]:
         f"config={report_w.config};{report_w.tuning};"
         f"geometry=live-64x32-traffic",
     ))
+    rows.extend(geometry_dispatch_rows(reg))
     return rows
+
+
+def geometry_dispatch_rows(reg) -> list[tuple[str, float, str]]:
+    """One op, two live geometries: the old top-1 binding bakes the hottest
+    bucket's config into every call; the geometry-dispatched binding
+    resolves each call's own warmed entry at trace time.  Reported: the
+    second geometry's us/call under both bindings, plus each binding's
+    multi-bucket exact-hit rate."""
+    import jax.numpy as jnp
+
+    tmp = Path(tempfile.mkdtemp(prefix="repro-t6-dispatch-"))
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    live_hot = (jax.random.normal(ks[0], (256, 32), jnp.float32),
+                jax.random.normal(ks[1], (4, 32, 32), jnp.float32),
+                jnp.full((4,), 64, jnp.int32))
+    live_cold = (jax.random.normal(ks[2], (16, 64), jnp.float32),
+                 jax.random.normal(ks[3], (4, 64, 64), jnp.float32),
+                 jnp.full((4,), 4, jnp.int32))
+    profile = WorkloadProfile(tmp / "workload.json")
+    profile.record("moe_gmm", live_hot, weight=3)
+    profile.record("moe_gmm", live_cold, weight=1)
+
+    # the pre-dispatch deployment: only the hottest bucket is warmed and
+    # its config is the single entry every call resolves to
+    cache_top1 = TuningCache(tmp / "tuning-top1.json")
+    warm_cache(profile, cache_top1, POD_SIM, registry=reg, top_k=1)
+    ctx_top1 = TuningContext(cache_top1, POD_SIM, profile=profile,
+                             top_k=1, search_on_miss=False)
+    top1 = reg.bind(OP_NAMES, POD_SIM, native=True, freeze=False,
+                    tuning=ctx_top1)
+
+    # the geometry-dispatched deployment: every warmed bucket binds
+    cache_full = TuningCache(tmp / "tuning-full.json")
+    warm_cache(profile, cache_full, POD_SIM, registry=reg, top_k=3)
+    ctx_full = TuningContext(cache_full, POD_SIM, profile=profile,
+                             search_on_miss=False)
+    dispatched = reg.bind(OP_NAMES, POD_SIM, native=True, freeze=False,
+                          tuning=ctx_full)
+
+    def hit_rate(binding):
+        stats = dict(binding.impl("moe_gmm").fn.stats)
+        for args in (live_hot, live_cold):
+            jax.block_until_ready(binding["moe_gmm"](*args))
+        new = binding.impl("moe_gmm").fn.stats
+        return {k: new[k] - stats.get(k, 0) for k in new}
+
+    stats_top1 = hit_rate(top1)
+    stats_full = hit_rate(dispatched)
+    t_top1 = timeit(
+        lambda: jax.block_until_ready(top1["moe_gmm"](*live_cold)),
+        warmup=1, iters=3,
+    )
+    t_disp = timeit(
+        lambda: jax.block_until_ready(dispatched["moe_gmm"](*live_cold)),
+        warmup=1, iters=3,
+    )
+    rep = next(r for r in dispatched.reports if r.op == "moe_gmm")
+    return [
+        row("table6/moe_gmm/top1_binding", t_top1 * 1e6,
+            f"exact={stats_top1['exact']}/2;nearest={stats_top1['nearest']};"
+            f"geometry=cold-16x64"),
+        row("table6/moe_gmm/geometry_dispatch", t_disp * 1e6,
+            f"exact={stats_full['exact']}/2;geometries={len(rep.geometries)};"
+            f"speedup_vs_top1={t_top1 / t_disp:.2f}x"),
+    ]
+
+
+def main(argv=None) -> int:
+    """CLI wrapper; ``--smoke`` runs only the geometry-dispatch rows and
+    asserts the dispatch behaviour CI depends on."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="geometry-dispatch rows only, with assertions "
+                         "(the CI guard)")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    if not args.smoke:
+        for name, us, derived in run():
+            print(f"{name},{us:.1f},{derived}")
+        return 0
+    reg = register_all(OpRegistry())
+    rows = geometry_dispatch_rows(reg)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    top1_note = next(d for n, _, d in rows if n.endswith("top1_binding"))
+    disp_note = next(d for n, _, d in rows if n.endswith("geometry_dispatch"))
+    if "exact=1/2" not in top1_note:
+        print(f"FAIL: top-1 binding should hit exactly its one bucket, "
+              f"got {top1_note}")
+        return 1
+    if "exact=2/2" not in disp_note:
+        print(f"FAIL: dispatched binding should hit both buckets, "
+              f"got {disp_note}")
+        return 1
+    print("OK: geometry dispatch resolved 2/2 live buckets; "
+          "top-1 binding resolved 1/2")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -27,6 +27,11 @@ ids, so single-GPU images run unmodified on multi-GPU hosts.
                           capture for tune-on-real-traffic).
   REPRO_WORKLOAD_PROFILE  path of the workload profile JSON (consumed by
                           repro.tuning.resolve_profile_path).
+  REPRO_SEARCH_BUDGET     non-negative integer: cap on how many tuning
+                          searches one deploy may pay.  With a workload
+                          profile present the budget is spent hottest-op
+                          first (profile-driven autotune_ops selection);
+                          absent/invalid values mean unlimited.
 """
 
 from __future__ import annotations
@@ -48,11 +53,13 @@ __all__ = [
     "native_ops_default",
     "autotune_default",
     "profile_default",
+    "search_budget_default",
     "ENV_VISIBLE",
     "ENV_PLATFORM",
     "ENV_NATIVE_OPS",
     "ENV_AUTOTUNE",
     "ENV_PROFILE",
+    "ENV_SEARCH_BUDGET",
 ]
 
 ENV_VISIBLE = "REPRO_VISIBLE_DEVICES"
@@ -60,6 +67,7 @@ ENV_PLATFORM = "REPRO_PLATFORM"
 ENV_NATIVE_OPS = "REPRO_NATIVE_OPS"
 ENV_AUTOTUNE = "REPRO_AUTOTUNE"
 ENV_PROFILE = "REPRO_PROFILE"
+ENV_SEARCH_BUDGET = "REPRO_SEARCH_BUDGET"
 
 _INT_LIST_RE = re.compile(r"^\s*\d+\s*(,\s*\d+\s*)*$")
 
@@ -144,3 +152,21 @@ def autotune_default(env: dict[str, str] | None = None) -> bool:
 def profile_default(env: dict[str, str] | None = None) -> bool:
     env = os.environ if env is None else env
     return env.get(ENV_PROFILE, "0").strip() == "1"
+
+
+def search_budget_default(env: dict[str, str] | None = None) -> int | None:
+    """REPRO_SEARCH_BUDGET as a non-negative int, else None (unlimited).
+
+    Invalid values deactivate the cap rather than erroring, like every
+    other trigger variable here: a malformed budget must not block a
+    deployment that would otherwise run.
+    """
+    env = os.environ if env is None else env
+    text = str(env.get(ENV_SEARCH_BUDGET, "")).strip()
+    if not text:
+        return None
+    try:
+        value = int(text)
+    except ValueError:
+        return None
+    return value if value >= 0 else None

@@ -59,8 +59,10 @@ class OpImpl:
     # bind-time TuningContext specialize this impl to the site (the impl's
     # fn must then accept a ``config=`` keyword).  The registry only
     # carries the hook; it never interprets it.
-    config: Any = None                    # tuning.BlockConfig resolved at bind
-    # time (set by TuningContext.apply); None when untuned.
+    config: Any = None                    # tuning.ConfigTable resolved at bind
+    # time (set by TuningContext.apply): the per-geometry config table the
+    # bound TunedDispatch consults per call — not a single BlockConfig
+    # since the geometry-dispatch redesign.  None when untuned.
 
     def available_on(self, platform: Platform) -> bool:
         if self.requires_feature is not None and not platform.has(self.requires_feature):
@@ -111,10 +113,18 @@ class SwapReport:
     kind: ImplKind
     swapped: bool       # True if a native impl replaced the reference
     reason: str         # why this impl (or why the swap was refused)
-    tuning: str = ""    # autotune outcome: "cache-hit", "cache-miss-searched",
-    #                     "cache-miss-default", "search-failed-default";
-    #                     empty when tuning was off or the impl is untunable
-    config: str = ""    # the resolved BlockConfig, printable form
+    tuning: str = ""    # autotune outcome summary: "cache-hit",
+    #                     "cache-miss-searched", "cache-miss-default",
+    #                     "search-failed-default", ... or "mixed(...)" when
+    #                     geometries disagree; empty when tuning was off or
+    #                     the impl is untunable
+    config: str = ""    # the primary (hottest-geometry) BlockConfig, printable
+    geometries: tuple = ()        # per-geometry tuning breakdown: one
+    #                     tuning.GeometryOutcome per dispatchable shape
+    #                     bucket of this op (empty when untuned)
+    search_rank: int | None = None   # position in the profile-driven search
+    #                     order (1 = hottest op); None when ordering was
+    #                     not profile-driven
 
 
 class OpBinding(Mapping[str, Callable[..., Any]]):
@@ -130,15 +140,27 @@ class OpBinding(Mapping[str, Callable[..., Any]]):
     def impl(self, name: str) -> OpImpl:
         return self._table[name]
 
-    def tuned_config(self, name: str) -> Any:
+    def tuned_config(self, name: str, shapes: Any = None, dtype: str | None = None) -> Any:
         """The BlockConfig the autotuner bound for this op, or None.
 
-        Lets call sites that historically pass their own tile kwargs (the
-        explicit kwarg always wins inside the kernel) defer to the site's
-        tuned value when one exists.
+        With ``shapes=None`` this is the primary (hottest-geometry)
+        config — the pre-dispatch behaviour.  ``shapes`` may also be a
+        sequence of arrays/tracers (the call's actual operands) or an
+        encoded shape-bucket string (plus ``dtype``), in which case the
+        per-geometry table resolves it (exact -> nearest bucket ->
+        platform default).  Lets call sites that historically pass their
+        own tile kwargs (the explicit kwarg always wins inside the
+        kernel) defer to the site's tuned value when one exists.
         """
         impl = self._table.get(name)
-        return getattr(impl, "config", None) if impl is not None else None
+        config = getattr(impl, "config", None) if impl is not None else None
+        if config is None or not hasattr(config, "resolve"):
+            return config
+        if shapes is None:
+            return config.primary
+        if isinstance(shapes, str):
+            return config.resolve(shapes=shapes, dtype=dtype)[0]
+        return config.resolve(shapes)[0]
 
     def __iter__(self):
         return iter(self._table)
@@ -153,7 +175,12 @@ class OpBinding(Mapping[str, Callable[..., Any]]):
             line = f"  {r.op:<18} {mark} {r.bound:<12} [{r.kind.value}] {r.reason}"
             if r.tuning:
                 line += f" | tune: {r.tuning} ({r.config})"
+                if r.search_rank is not None:
+                    line += f" | search#{r.search_rank}"
             lines.append(line)
+            if len(r.geometries) > 1:
+                for g in r.geometries:
+                    lines.append(f"      . {g.describe()}")
         return "\n".join(lines)
 
 
@@ -220,8 +247,10 @@ class OpRegistry:
 
         ``tuning`` is an optional tuning.TuningContext: after the swap
         decision, each chosen impl that registered a tuner hook is
-        specialized to the site (cached config injected, or searched on
-        a miss) and the outcome lands in the SwapReport.
+        specialized to the site — since the geometry-dispatch redesign
+        not to one baked config but to a per-geometry config *table*
+        resolved per call at trace time — and the per-geometry outcomes
+        land in the SwapReport.
         """
         table: dict[str, OpImpl] = {}
         reports: list[SwapReport] = []
@@ -254,13 +283,19 @@ class OpRegistry:
                     reason = f"native swap ({cand.provider}, abi {cand.abi})"
                     break
             tune_status, config_str = "", ""
+            geometries, search_rank = (), None
             if tuning is not None:
-                chosen, tune_status, config_str = tuning.apply(name, chosen)
+                chosen, outcome = tuning.apply(name, chosen)
+                if outcome is not None:
+                    tune_status, config_str = outcome.status, outcome.config
+                    geometries = outcome.geometries
+                    search_rank = outcome.search_rank
             table[name] = chosen
             reports.append(
                 SwapReport(op=name, bound=chosen.provider or chosen.kind.value,
                            kind=chosen.kind, swapped=swapped, reason=reason,
-                           tuning=tune_status, config=config_str)
+                           tuning=tune_status, config=config_str,
+                           geometries=geometries, search_rank=search_rank)
             )
         if freeze:
             self._frozen = True

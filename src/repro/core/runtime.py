@@ -38,6 +38,7 @@ from repro.core.env import (
     parse_visible_devices,
     profile_default,
     resolve_platform,
+    search_budget_default,
     select_devices,
 )
 from repro.core.platform import Platform
@@ -52,7 +53,7 @@ log = logging.getLogger("repro.runtime")
 _HOST_ENV_ALLOWLIST = (ENV_VISIBLE, "REPRO_PLATFORM", "REPRO_CHECKPOINT_DIR",
                        "REPRO_COMPILE_CACHE", "REPRO_AUTOTUNE",
                        "REPRO_TUNING_CACHE", "REPRO_PROFILE",
-                       "REPRO_WORKLOAD_PROFILE")
+                       "REPRO_WORKLOAD_PROFILE", "REPRO_SEARCH_BUDGET")
 
 
 class DeploymentError(RuntimeError):
@@ -134,6 +135,8 @@ class Runtime:
         freeze: bool = True,
         autotune: bool | None = None,
         autotune_ops: Iterable[str] | None = None,
+        autotune_top_k: int = 3,
+        search_budget: int | None = None,
         profile: bool | None = None,
     ) -> Container:
         """Run the preparation stages and hand back the executable Container.
@@ -148,14 +151,27 @@ class Runtime:
             get their block configs from REPRO_TUNING_CACHE, searching
             (and persisting the winner) on a miss.  When the site also
             has a workload profile (REPRO_WORKLOAD_PROFILE) with recorded
-            traffic, cache keys resolve against the hottest *observed*
-            geometry per op, so a ``repro.tuning.warm``-ed cache replays
-            with zero misses.  Entries tuned against an older kernel ABI
-            revision are expired and re-searched, with the eviction noted
-            in the SwapReport ("cache-expired-searched").
+            traffic, the binding is *geometry-dispatched*: every op's
+            top-K observed buckets (plus any further warmed cache
+            entries) are resolved into a per-geometry config table, and
+            each call picks its entry at trace time — a
+            ``repro.tuning.warm``-ed cache replays a shape-polymorphic
+            deployment with zero misses and zero searches.  Entries
+            tuned against an older kernel ABI revision are expired and
+            re-searched, with the eviction noted in the SwapReport
+            ("cache-expired-searched").
           autotune_ops: restricts which ops may pay the search cost;
             cache hits and default fallbacks always apply and are
-            recorded per-op in the binding's SwapReports.
+            recorded per-op in the binding's SwapReports.  When None and
+            the site has recorded traffic, selection is profile-driven:
+            ops bind hottest-first so any search budget is spent where
+            traffic actually goes, with each op's rank recorded in its
+            SwapReport (``search_rank``).
+          autotune_top_k: recorded geometries per op entering the
+            dispatch table (mirrors ``repro.tuning.warm --top``).
+          search_budget: (None -> REPRO_SEARCH_BUDGET env default) cap on
+            how many searches this deploy may pay; misses beyond it bind
+            the platform default ("search-budget-exhausted").
           profile: (None -> REPRO_PROFILE env default) captures every op
             invocation's shape bucket + dtype into the site workload
             profile (under jit: once per compiled geometry, at trace
@@ -238,15 +254,33 @@ class Runtime:
                 native = self.registry.decl(op).tunable_native(platform)
                 if native is not None:
                     current_abis[op] = native.abi
+            if search_budget is None:
+                search_budget = search_budget_default(self.host_env)
+            priority = None
+            if autotune_ops is None and tune_profile is not None:
+                # profile-driven selection: bind (and therefore search)
+                # the hottest ops first, so a bounded search budget is
+                # spent where traffic actually goes; unprofiled ops keep
+                # their relative order after the hot ones
+                totals = tune_profile.op_totals()
+                hot = sorted((op for op in ops if totals.get(op)),
+                             key=lambda o: (-totals[o], o))
+                ops = hot + [op for op in ops if op not in set(hot)]
+                priority = {op: i + 1 for i, op in enumerate(hot)}
             tuning_ctx = TuningContext(
                 TuningCache.load(cache_path), platform,
                 ops=autotune_ops if autotune_ops is None else set(autotune_ops),
                 profile=tune_profile,
                 current_abis=current_abis,
+                top_k=autotune_top_k,
+                search_budget=search_budget,
+                priority=priority,
             )
-            log.info("autotune on: cache %s (%d entries%s)",
+            log.info("autotune on: cache %s (%d entries%s%s)",
                      cache_path, len(tuning_ctx.cache),
-                     ", profile-keyed" if tune_profile is not None else "")
+                     ", profile-keyed" if tune_profile is not None else "",
+                     f", search budget {search_budget}"
+                     if search_budget is not None else "")
 
         binding = self.registry.bind(ops, platform, native=native_ops,
                                      freeze=freeze, tuning=tuning_ctx)

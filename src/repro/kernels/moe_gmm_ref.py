@@ -14,6 +14,21 @@ FLOPs = cf x ideal; live memory = cf x tokens.  The Pallas kernel
 (`moe_gmm.py`) is dropless — strictly more capable, same interface
 (ABI minor bump), numerically identical whenever no group overflows C.
 
+Capacity is a function of T, which makes the drop set *geometry
+dependent*: a decode microbatch (T = batch x top_k rows) computes a
+much smaller C than the prefill that filled its cache, so the same
+token could be dropped in one phase and kept in the other — the
+moonshot prefill/decode divergence (see docs/kernels.md, "Dropless
+reference at decode scale").  Below ``_EXACT_ROWS_MAX`` rows the
+capacity formulation saves nothing (the packing bookkeeping dominates)
+and its drops are at their most likely (C ~ 1-2 slots), so the
+reference switches to the dropless ragged_dot oracle there (when no
+explicit ``capacity_factor`` is passed — asking for capacity semantics
+always gets them): decode and small prefill are always exact, matching
+the dropless native kernel.  At larger T the capacity path is unchanged
+— the documented portable trade-off — and production deployments swap
+in the dropless Pallas kernel anyway.
+
 `moe_gmm_exact` keeps the ragged_dot oracle for small-shape tests.
 """
 
@@ -26,6 +41,14 @@ __all__ = ["moe_gmm_ref", "moe_gmm_exact", "DEFAULT_CAPACITY_FACTOR"]
 
 DEFAULT_CAPACITY_FACTOR = 1.25
 
+# Row count at or below which the reference is dropless (exact ragged_dot).
+# The dense decomposition of ragged_dot costs O(T*E*D*F) portable FLOPs vs
+# the capacity path's O(cf*T*D*F); at T <= 1024 that overhead is dwarfed by
+# the packing/scatter bookkeeping it replaces, and geometry-dependent drops
+# at tiny per-group capacities are exactly what breaks prefill/decode
+# consistency.
+_EXACT_ROWS_MAX = 1024
+
 
 def moe_gmm_exact(x: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray) -> jnp.ndarray:
     """Dropless oracle via jax core ragged_dot (tests / tiny shapes only)."""
@@ -37,10 +60,19 @@ def moe_gmm_ref(
     w: jnp.ndarray,              # (E, D, F)
     group_sizes: jnp.ndarray,    # (E,) int32, sum == T
     *,
-    capacity_factor: float = DEFAULT_CAPACITY_FACTOR,
+    capacity_factor: float | None = None,
 ) -> jnp.ndarray:
+    """capacity_factor=None (the binding's call convention) picks the
+    dropless exact path at <= _EXACT_ROWS_MAX rows and the default
+    capacity factor above; an explicit value always runs the capacity
+    formulation — callers asking for capacity semantics get them at any
+    scale."""
     t, d = x.shape
     e, _, f = w.shape
+    if capacity_factor is None:
+        if t <= _EXACT_ROWS_MAX:
+            return moe_gmm_exact(x, w, group_sizes)
+        capacity_factor = DEFAULT_CAPACITY_FACTOR
     cap = max(int(capacity_factor * t / e + 0.999), 1)
 
     starts = jnp.concatenate(

@@ -59,6 +59,12 @@ _SIGS = {
     "moe_gmm": {
         "args": ["x:[t,d] sorted-by-expert", "w:[e,d,f]", "group_sizes:[e]"],
         "kwargs": [],
+        # NB: this text feeds the signature digest, which must stay stable
+        # across compatible revisions (a digest change strands every bundle
+        # persisted under the old string) — behavioral refinements are
+        # recorded as _ABI_MINORS bumps, not edits here.  Since minor 2 the
+        # reference is dropless at decode scale (<=1k rows); above that it
+        # remains the capacity-truncated baseline.
         "semantics": ("per-group matmul, groups partition rows of x; "
                       "capacity-truncated baseline, dropless native"),
     },
@@ -69,7 +75,10 @@ _SIGS = {
 # minor) but expires the op's tuning-cache entries — they were measured
 # on the previous kernel revision (see tuning/expiry.py).
 #   moe_gmm 1: grew the k-loop contraction (block_k knob, D > 8k feasible)
-_ABI_MINORS = {"moe_gmm": 1}
+#   moe_gmm 2: reference is dropless below _EXACT_ROWS_MAX rows (the
+#              geometry-dependent capacity drop broke prefill/decode
+#              consistency — docs/kernels.md)
+_ABI_MINORS = {"moe_gmm": 2}
 
 ABIS: dict[str, AbiString] = {
     name: AbiString.make(name, sig, major=1, minor=_ABI_MINORS.get(name, 0))

@@ -146,8 +146,26 @@ def main(argv=None) -> int:
     if container.workload is not None:
         print(f"captured {len(container.workload)} op geometries -> "
               f"{container.workload.path} (warm with: python -m repro.tuning.warm)")
+    print_dispatch_stats(container)
     runtime.cleanup()
     return 0
+
+
+def print_dispatch_stats(container) -> None:
+    """Per-op geometry-dispatch hit rates after an autotuned run: how many
+    compiled geometries resolved their own tuned entry (exact) vs fell
+    back to the nearest bucket or the platform default."""
+    if not container.autotune:
+        return
+    for name in container.binding:
+        dispatch = container.binding.impl(name).fn
+        stats = getattr(dispatch, "stats", None)
+        if not stats or not sum(stats.values()):
+            continue
+        total = sum(stats.values())
+        print(f"dispatch {name:<18} {total} geometr{'y' if total == 1 else 'ies'}"
+              f" traced: exact={stats['exact']} nearest={stats['nearest']}"
+              f" default={stats['default']} explicit={stats['explicit']}")
 
 
 if __name__ == "__main__":

@@ -170,6 +170,9 @@ def main(argv=None) -> int:
     if container.workload is not None:
         print(f"captured {len(container.workload)} op geometries -> "
               f"{container.workload.path} (warm with: python -m repro.tuning.warm)")
+    from repro.launch.serve import print_dispatch_stats
+
+    print_dispatch_stats(container)
     runtime.cleanup()
     return 0
 

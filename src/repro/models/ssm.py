@@ -95,8 +95,11 @@ def ssm_apply(
 
     # The chunk is a pure implementation tile: a site-tuned binding knows a
     # better value than the model config's static ssm_chunk, so defer to it
-    # (falling back to the largest divisor when it doesn't divide this seq).
-    tuned = getattr(binding, "tuned_config", lambda name: None)("ssd_scan")
+    # — resolved for THIS call's geometry (prefill and decode sequences tune
+    # to different chunks) — falling back to the largest divisor when it
+    # doesn't divide this seq.
+    tuned = getattr(binding, "tuned_config", lambda name, shapes=None: None)(
+        "ssd_scan", (xh, dt, a, bmg, cmg))
     chunk = tuned["chunk"] if tuned is not None and "chunk" in tuned else cfg.ssm_chunk
     chunk = min(chunk, s)
     if s % chunk:

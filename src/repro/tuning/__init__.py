@@ -15,6 +15,12 @@ PR 2 closes the tune-on-real-traffic loop (see docs/tuning.md):
     geometries through the tuner, pre-warming the cache offline;
   * `expire_stale` (expiry.py) evicts cache entries tuned against an
     older kernel ABI revision, forcing a clean re-search after a bump.
+
+PR 3 makes the binding geometry-dispatched (dispatch.py): one bound op
+carries a `ConfigTable` of *all* its warmed top-K geometries, and the
+`TunedDispatch` callable resolves each call's shape bucket at trace
+time (exact -> nearest bucket -> platform default) — one deployment,
+many tuned configs, zero searches on a warmed shape-polymorphic path.
 """
 
 from repro.tuning.cache import (
@@ -27,6 +33,12 @@ from repro.tuning.cache import (
     resolve_cache_path,
 )
 from repro.tuning.config import BlockConfig, default_config
+from repro.tuning.dispatch import (
+    ConfigTable,
+    GeometryOutcome,
+    TunedDispatch,
+    bucket_distance,
+)
 from repro.tuning.expiry import ExpiryReport, expire_stale
 from repro.tuning.profile import (
     ENV_WORKLOAD_PROFILE,
@@ -37,15 +49,16 @@ from repro.tuning.profile import (
     resolve_profile_path,
 )
 from repro.tuning.search import Measurement, SearchResult, enumerate_space, measure, search
-from repro.tuning.tuner import OpTuner, TuneEvent, TuningContext
+from repro.tuning.tuner import OpTuner, TuneEvent, TuneOutcome, TuningContext
 
 __all__ = [
     "ENV_TUNING_CACHE", "SCHEMA_VERSION", "CacheKey", "TuningCache",
     "bucket_shapes", "platform_fingerprint", "resolve_cache_path",
     "BlockConfig", "default_config",
+    "ConfigTable", "GeometryOutcome", "TunedDispatch", "bucket_distance",
     "ExpiryReport", "expire_stale",
     "ENV_WORKLOAD_PROFILE", "PROFILE_SCHEMA_VERSION", "GeometryKey",
     "WorkloadProfile", "profiled_binding", "resolve_profile_path",
     "Measurement", "SearchResult", "enumerate_space", "measure", "search",
-    "OpTuner", "TuneEvent", "TuningContext",
+    "OpTuner", "TuneEvent", "TuneOutcome", "TuningContext",
 ]

@@ -198,6 +198,19 @@ class TuningCache:
         """Encoded keys of every live entry (see CacheKey.encode)."""
         return tuple(self._entries)
 
+    def entries_for(self, abi: str, platform: str
+                    ) -> dict[tuple[str, str], BlockConfig]:
+        """All tuned geometries of one (ABI, platform fingerprint):
+        (shape bucket, dtype) -> config.  The geometry-dispatch binding
+        sweeps this so a cache warmed deeper than the profile's current
+        top-K still binds every entry hot."""
+        out: dict[tuple[str, str], BlockConfig] = {}
+        for encoded, entry in self._entries.items():
+            parts = encoded.split("|")
+            if len(parts) == 4 and parts[0] == abi and parts[1] == platform:
+                out[(parts[2], parts[3])] = BlockConfig.from_dict(entry["config"])
+        return out
+
     def evict(self, key: "CacheKey | str") -> bool:
         """Remove an entry and tombstone it so save() cannot resurrect it
         from the on-disk copy.  Returns True if the entry existed."""

@@ -1,0 +1,189 @@
+"""Geometry-dispatched tuned configs — one bound op, many tuned configs.
+
+PR 1's binding baked exactly one `BlockConfig` into each op at bind
+time: whatever geometry the `TuningContext` keyed on (canonical example,
+or the profile's single hottest bucket) won, and every other geometry
+the deployment later traced ran under that foreign config.  The warm
+subsystem already tunes the top-K recorded buckets — this module makes
+the *binding* use all of them.
+
+Three pieces:
+
+  * `GeometryOutcome` — one (shape bucket, dtype) with its bind-time
+    tuning status and resolved config; the per-geometry breakdown a
+    `SwapReport` carries.
+  * `ConfigTable` — the per-op map geometry -> config plus a fallback
+    chain: exact bucket match, else the *nearest* tuned bucket of the
+    same structure, else the platform default.  This is what
+    `OpImpl.config` holds after an autotuned bind (it used to hold a
+    single BlockConfig; `ConfigTable.primary` preserves that view).
+  * `TunedDispatch` — the callable the binding exposes.  At trace time
+    it buckets the call's operand shapes (the same `bucket_shapes`
+    encoding `WorkloadProfile` records and `CacheKey` persists) and
+    injects the resolved config; an explicit ``config=`` kwarg from the
+    call site always wins, so kernel signatures are unchanged.
+
+Under ``jit`` the dispatch runs while tracing, i.e. once per compiled
+geometry — the resolved config is a Python-level static, so distinct
+geometries compile distinct specializations and repeated calls at one
+geometry reuse the compiled function with zero dispatch overhead.
+`TunedDispatch.stats` counts resolutions per path (exact / nearest /
+default / explicit), which is exactly the multi-bucket hit rate the
+`geometry_dispatch` benchmark row reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+from repro.tuning.cache import bucket_shapes
+from repro.tuning.config import BlockConfig
+
+__all__ = ["GeometryOutcome", "ConfigTable", "TunedDispatch", "bucket_distance"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometryOutcome:
+    """One geometry's bind-time tuning outcome (the SwapReport breakdown)."""
+
+    shapes: str          # bucket_shapes encoding, e.g. "64x32,32"
+    dtype: str
+    status: str          # cache-hit / cache-miss-searched / cache-miss-default /
+    #                      search-failed-default / cache-expired-searched /
+    #                      search-budget-exhausted / unsynthesizable-default
+    config: BlockConfig
+    count: float = 0.0   # profile observations (0 = canonical/unprofiled)
+
+    def describe(self) -> str:
+        hot = f" x{self.count:g}" if self.count else ""
+        return f"{self.shapes or '<scalar>'}/{self.dtype}{hot} {self.status} ({self.config})"
+
+
+def _parse_bucket(shapes: str) -> list[tuple[int, ...]] | None:
+    try:
+        return [
+            () if part == "scalar" else tuple(int(n) for n in part.split("x"))
+            for part in shapes.split(",") if part
+        ]
+    except ValueError:
+        return None
+
+
+def bucket_distance(a: str, b: str) -> float | None:
+    """Log-space distance between two shape buckets, or None if they are
+    structurally incomparable (different arg count or ranks).
+
+    Buckets are powers of two, so sum(|log2 d - log2 d'|) counts how many
+    doublings separate the workloads — the natural metric for "which tuned
+    geometry is this call closest to".
+    """
+    pa, pb = _parse_bucket(a), _parse_bucket(b)
+    if pa is None or pb is None or len(pa) != len(pb):
+        return None
+    dist = 0.0
+    for da, db in zip(pa, pb):
+        if len(da) != len(db):
+            return None
+        for x, y in zip(da, db):
+            dist += abs(math.log2(max(x, 1)) - math.log2(max(y, 1)))
+    return dist
+
+
+class ConfigTable:
+    """Per-geometry tuned configs for one bound op, with fallback chain.
+
+    ``outcomes`` orders geometries hottest-first; ``default`` is the
+    platform fallback used when no tuned geometry is comparable to the
+    call's.  Hashable content lives in plain dicts so resolution is a
+    lookup, not a scan, on the exact path.
+    """
+
+    def __init__(self, op: str, outcomes: Sequence[GeometryOutcome],
+                 default: BlockConfig) -> None:
+        self.op = op
+        self.outcomes = tuple(outcomes)
+        self.default = default
+        self._by_geom: dict[tuple[str, str], BlockConfig] = {}
+        for o in self.outcomes:
+            self._by_geom.setdefault((o.shapes, o.dtype), o.config)
+
+    # -- the old single-config view ---------------------------------------
+    @property
+    def primary(self) -> BlockConfig:
+        """The hottest geometry's config — what PR 1's binding would have
+        baked in; kept as the answer to shape-less `tuned_config(op)`."""
+        return self.outcomes[0].config if self.outcomes else self.default
+
+    # -- resolution ---------------------------------------------------------
+    def resolve(self, args: Sequence[Any] | None = None, *,
+                shapes: str | None = None, dtype: str | None = None
+                ) -> tuple[BlockConfig, str]:
+        """(config, how) for a call geometry; how in {exact, nearest, default}.
+
+        Geometry comes from ``args`` (arrays/tracers/ShapeDtypeStructs,
+        bucketed like the profile records them) or an explicit
+        (shapes, dtype) bucket pair.
+        """
+        if shapes is None:
+            shapes, dtype = bucket_shapes(args or ())
+        elif dtype is None:
+            dtype = self.outcomes[0].dtype if self.outcomes else "none"
+        hit = self._by_geom.get((shapes, dtype))
+        if hit is not None:
+            return hit, "exact"
+        best, best_d = None, None
+        for (g_shapes, g_dtype), config in self._by_geom.items():
+            if g_dtype != dtype:
+                continue
+            d = bucket_distance(shapes, g_shapes)
+            if d is not None and (best_d is None or d < best_d):
+                best, best_d = config, d
+        if best is not None:
+            return best, "nearest"
+        return self.default, "default"
+
+    def __len__(self) -> int:
+        return len(self._by_geom)
+
+    def __str__(self) -> str:
+        n = len(self._by_geom)
+        if n <= 1:
+            return str(self.primary)
+        return f"{self.primary} (+{n - 1} more geometr{'y' if n == 2 else 'ies'})"
+
+
+class TunedDispatch:
+    """Callable bound into the op table: per-call geometry -> tuned config.
+
+    Wraps the chosen impl's raw fn.  Resolution happens at Python level
+    (trace time under jit); ``stats`` counts one resolution per trace,
+    so `sum(stats.values())` is the number of distinct compiled
+    geometries and `stats["exact"]` of them ran under their own tuned
+    entry.
+    """
+
+    def __init__(self, fn: Callable[..., Any], table: ConfigTable) -> None:
+        self.fn = fn
+        self.table = table
+        self.stats = {"exact": 0, "nearest": 0, "default": 0, "explicit": 0}
+        self.__name__ = getattr(fn, "__name__", table.op)
+
+    def __call__(self, *args, **kwargs):
+        if kwargs.get("config") is None:
+            config, how = self.table.resolve(args)
+            self.stats[how] += 1
+            kwargs["config"] = config
+        else:
+            self.stats["explicit"] += 1
+        return self.fn(*args, **kwargs)
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of resolutions that found their exact tuned bucket."""
+        total = sum(self.stats.values())
+        return self.stats["exact"] / total if total else 0.0
+
+    def __repr__(self) -> str:
+        return f"TunedDispatch({self.table.op}, {len(self.table)} geometries)"

@@ -17,6 +17,14 @@ individually.  Counts therefore rank geometries by how often they are
 (re)compiled/observed across deployments, and merge additively across
 concurrent writers.
 
+Decay/aging: counts accumulate forever, so a bucket that dominated last
+month's traffic would outrank this week's hot geometry indefinitely.
+:meth:`WorkloadProfile.decay` scales every count by a factor in (0, 1)
+and drops entries that fall below a floor — run it before re-ranking
+(``python -m repro.tuning.warm --decay 0.5``) so fresh traffic, recorded
+at full weight, re-ranks the buckets after a shift.  Counts are floats
+on disk for this reason (integers read back unchanged).
+
 File properties mirror `TuningCache` (see cache.py): atomic writes,
 versioned schema, corruption degrades to an empty profile with a warning,
 `REPRO_WORKLOAD_PROFILE` overrides the default location.
@@ -98,10 +106,11 @@ class WorkloadProfile:
     """
 
     def __init__(self, path: str | os.PathLike,
-                 counts: Mapping[str, int] | None = None) -> None:
+                 counts: Mapping[str, float] | None = None) -> None:
         self.path = Path(path)
-        self._counts: dict[str, int] = dict(counts or {})
-        self._loaded: dict[str, int] = dict(self._counts)
+        self._counts: dict[str, float] = dict(counts or {})
+        self._loaded: dict[str, float] = dict(self._counts)
+        self._decayed = False   # decay rewrites the file wholesale on save
 
     # -- loading -----------------------------------------------------------
     @classmethod
@@ -126,11 +135,11 @@ class WorkloadProfile:
                 PROFILE_SCHEMA_VERSION,
             )
             return cls(p)
-        counts: dict[str, int] = {}
+        counts: dict[str, float] = {}
         for key, n in (raw.get("counts") or {}).items():
             try:
                 GeometryKey.decode(key)
-                n = int(n)
+                n = float(n)
             except (ValueError, TypeError):
                 log.warning("workload profile %s: dropping malformed entry %r", p, key)
                 continue
@@ -139,7 +148,7 @@ class WorkloadProfile:
         return cls(p, counts)
 
     # -- recording ---------------------------------------------------------
-    def record(self, op: str, args: Sequence[Any], *, weight: int = 1) -> GeometryKey:
+    def record(self, op: str, args: Sequence[Any], *, weight: float = 1) -> GeometryKey:
         """Count one observation of `op` invoked with `args`.
 
         `args` may be concrete arrays, ShapeDtypeStructs, or jit tracers —
@@ -150,15 +159,46 @@ class WorkloadProfile:
         self._counts[key.encode()] = self._counts.get(key.encode(), 0) + weight
         return key
 
+    # -- aging -------------------------------------------------------------
+    def decay(self, factor: float, *, floor: float = 0.5) -> int:
+        """Age every count by ``factor`` (0 < factor < 1), dropping entries
+        that fall below ``floor``; returns how many were dropped.
+
+        This is the re-ranking valve: traffic recorded *after* a decay
+        lands at full weight, so a shifted workload overtakes stale
+        history in a bounded number of deploy/decay cycles instead of
+        never.  Decay marks the profile for a wholesale rewrite on
+        :meth:`save` (a decayed value cannot be expressed as an additive
+        delta); run it from the offline warm pass, not from concurrent
+        live profilers.
+        """
+        if not (0.0 < factor < 1.0):
+            raise ValueError(f"decay factor must be in (0, 1), got {factor!r}")
+        aged = {k: n * factor for k, n in self._counts.items()}
+        kept = {k: n for k, n in aged.items() if n >= floor}
+        dropped = len(aged) - len(kept)
+        self._counts = kept
+        self._decayed = True
+        return dropped
+
     # -- access ------------------------------------------------------------
-    def count(self, key: GeometryKey) -> int:
+    def count(self, key: GeometryKey) -> float:
         return self._counts.get(key.encode(), 0)
 
     def ops(self) -> tuple[str, ...]:
         return tuple(sorted({GeometryKey.decode(k).op for k in self._counts}))
 
+    def op_totals(self) -> dict[str, float]:
+        """Total observations per op — the hotness ranking profile-driven
+        ``autotune_ops`` selection spends its search budget by."""
+        totals: dict[str, float] = {}
+        for enc, n in self._counts.items():
+            op = GeometryKey.decode(enc).op
+            totals[op] = totals.get(op, 0) + n
+        return totals
+
     def top(self, op: str | None = None, k: int | None = None
-            ) -> list[tuple[GeometryKey, int]]:
+            ) -> list[tuple[GeometryKey, float]]:
         """Hottest geometries, most-counted first (ties broken by key for
         determinism).  `op` filters to one op; `k` truncates."""
         items = [(GeometryKey.decode(enc), n) for enc, n in self._counts.items()]
@@ -183,18 +223,27 @@ class WorkloadProfile:
         same baseline do not double-count it), then temp-file + os.replace
         like `TuningCache.save`.  The whole load-merge-replace runs under
         the same exclusive sidecar lock the cache uses, so concurrent
-        profilers sum instead of losing a writer's delta.  Raises OSError
-        on unwritable paths; the Runtime wraps this in a warning because
-        losing a profile flush must not kill the workload that produced it.
+        profilers sum instead of losing a writer's delta.  After
+        :meth:`decay` the file is instead replaced wholesale with the aged
+        counts (a decayed value has no additive-delta form); the lock
+        still serializes against concurrent save()s, but counts a live
+        profiler recorded between this process's load and the decayed
+        write are aged away with the history — run decay offline.  Raises
+        OSError on unwritable paths; the Runtime wraps this in a warning
+        because losing a profile flush must not kill the workload that
+        produced it.
         """
         self.path.parent.mkdir(parents=True, exist_ok=True)
         with file_lock(self.path.with_name(self.path.name + ".lock")):
-            on_disk = WorkloadProfile.load(self.path)._counts
-            merged = dict(on_disk)
-            for key, n in self._counts.items():
-                delta = n - self._loaded.get(key, 0)
-                if delta > 0:
-                    merged[key] = merged.get(key, 0) + delta
+            if self._decayed:
+                merged = dict(self._counts)
+            else:
+                on_disk = WorkloadProfile.load(self.path)._counts
+                merged = dict(on_disk)
+                for key, n in self._counts.items():
+                    delta = n - self._loaded.get(key, 0)
+                    if delta > 0:
+                        merged[key] = merged.get(key, 0) + delta
             payload = {"schema": PROFILE_SCHEMA_VERSION, "counts": merged}
             fd, tmp = tempfile.mkstemp(dir=self.path.parent,
                                        prefix=self.path.name, suffix=".tmp")
@@ -210,6 +259,7 @@ class WorkloadProfile:
                 raise
         self._counts = merged
         self._loaded = dict(merged)
+        self._decayed = False
         return self.path
 
 
@@ -239,6 +289,9 @@ def profiled_binding(binding: Any, profile: WorkloadProfile,
             def recorded(*args, **kwargs):
                 profile.record(op, args)
                 return fn(*args, **kwargs)
+            if hasattr(fn, "stats"):
+                recorded.stats = fn.stats   # keep TunedDispatch hit-rate
+                # counters reachable when profiling wraps an autotuned op
             return recorded
 
         table[name] = _dc.replace(impl, fn=_wrap(impl.fn, name))

@@ -8,42 +8,60 @@ it to whatever `TuningContext` the Runtime passes into `bind()` — the
 same inversion the paper uses for site resources: the bundle declares
 *what* can be specialized, the site decides *whether and when*.
 
-`TuningContext.apply` resolves one bound impl:
+`TuningContext.apply` resolves one bound impl.  Since the
+geometry-dispatch redesign it no longer bakes a single config into the
+callable: it resolves *every* relevant geometry — the profile's top-K
+recorded buckets (or the canonical example when no traffic was
+recorded), plus any further already-warmed cache entries for the same
+(ABI, platform) — into a `ConfigTable`, and wraps the impl in a
+`TunedDispatch` that buckets each call's operand shapes at trace time
+and injects the matching entry (exact -> nearest bucket -> platform
+default).  Per geometry, the outcome vocabulary is unchanged:
 
-  cache hit            -> inject the cached config        ("cache-hit")
-  miss, op selected    -> search now, persist the winner  ("cache-miss-searched")
-  miss after ABI expiry-> search now, persist the winner  ("cache-expired-searched")
-  miss, not selected   -> platform-default config         ("cache-miss-default")
-  search found nothing -> platform-default config         ("search-failed-default")
+  cache hit            -> use the cached config            ("cache-hit")
+  miss, op selected    -> search now, persist the winner   ("cache-miss-searched")
+  miss after ABI expiry-> search now, persist the winner   ("cache-expired-searched")
+  miss, not selected   -> platform-default config          ("cache-miss-default")
+  search found nothing -> platform-default config          ("search-failed-default")
+  miss, budget spent   -> platform-default config          ("search-budget-exhausted")
+  bucket unsynthesizable-> platform-default config         ("unsynthesizable-default")
 
-Every outcome is surfaced in the binding's SwapReport so EXPERIMENTS
-logs show exactly which deployments ran tuned and from where.
+Every geometry's outcome is surfaced in the binding's SwapReport
+(`SwapReport.geometries`), with `SwapReport.tuning` summarizing (the
+shared status when all geometries agree, a "mixed(...)" breakdown
+otherwise), so EXPERIMENTS logs show exactly which deployments ran
+tuned, at which geometries, and from where.
 
-Two optional inputs close the tune-on-real-traffic loop (PR 2):
+Optional inputs close the tune-on-real-traffic loop:
 
-  * ``profile`` — a `WorkloadProfile` of captured live geometries.  When
-    the profile has observations for an op, the cache key (and, on a
-    miss, the searched workload) comes from the *hottest recorded
-    geometry* instead of the canonical example, so a cache pre-warmed by
-    ``repro.tuning.warm`` from the same profile hits on the next deploy.
+  * ``profile`` — a `WorkloadProfile` of captured live geometries.  Ops
+    with recorded traffic are keyed (and, on a miss, searched) on their
+    top-K recorded buckets instead of the canonical example, so a cache
+    pre-warmed by ``repro.tuning.warm`` from the same profile hits on
+    every bucket at the next deploy — zero searches for a warmed,
+    shape-polymorphic deployment.
   * ``current_abis`` — the site's currently declared ABI per op.  Stale
     cache entries (tuned against an older kernel revision) are expired
     up front (see expiry.py) and the re-search is labelled
     "cache-expired-searched" in the SwapReport.
+  * ``search_budget`` / ``priority`` — cap on how many searches one bind
+    may pay, and the profile-driven op ordering the Runtime derived
+    (hottest first); the rank lands in `SwapReport.search_rank`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import logging
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
 from repro.tuning.cache import CacheKey, TuningCache, bucket_shapes, platform_fingerprint
 from repro.tuning.config import BlockConfig, default_config
+from repro.tuning.dispatch import ConfigTable, GeometryOutcome, TunedDispatch
 from repro.tuning.search import search
 
-__all__ = ["OpTuner", "TuningContext", "TuneEvent", "search_into_cache"]
+__all__ = ["OpTuner", "TuningContext", "TuneEvent", "TuneOutcome",
+           "search_into_cache"]
 
 log = logging.getLogger("repro.tuning")
 
@@ -99,8 +117,9 @@ class OpTuner:
     """Registered next to a native impl: how to specialize it to a site.
 
     The impl's callable must accept a ``config=BlockConfig`` keyword; the
-    context injects the resolved config via functools.partial, so model
-    code keeps calling the op with its ordinary arguments.
+    context wraps it in a `TunedDispatch` that injects the per-geometry
+    resolved config at trace time, so model code keeps calling the op
+    with its ordinary arguments.
 
     Fields:
       op             logical op name (matches the registry declaration).
@@ -143,12 +162,29 @@ class OpTuner:
 
 @dataclasses.dataclass(frozen=True)
 class TuneEvent:
-    """One op's tuning outcome during a bind (hit/miss/fallback record)."""
+    """One (op, geometry) tuning outcome during a bind (hit/miss record)."""
 
     op: str
     status: str
     key: str
     config: BlockConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneOutcome:
+    """One op's aggregate tuning outcome — what the SwapReport records.
+
+    ``status``/``config`` keep the PR 1 single-string view (summary
+    status, primary config); ``geometries`` is the per-geometry
+    breakdown the dispatch table was built from; ``search_rank`` is the
+    op's position in the profile-driven search order (1 = hottest), or
+    None when ordering was not profile-driven.
+    """
+
+    status: str
+    config: str
+    geometries: tuple[GeometryOutcome, ...] = ()
+    search_rank: int | None = None
 
 
 class TuningContext:
@@ -166,14 +202,23 @@ class TuningContext:
                       pay search cost, they only replay what the site has
                       already tuned.
       profile         optional WorkloadProfile: ops with recorded traffic
-                      are keyed (and searched) on their hottest observed
-                      geometry instead of the canonical example.
+                      are keyed (and searched) on their top-K observed
+                      geometries instead of the canonical example.
       current_abis    optional op -> AbiString of the site's current
                       declarations; triggers an ABI-expiry sweep of the
                       cache at construction (see expiry.expire_stale).
+      top_k           how many recorded geometries per op enter the
+                      dispatch table (matches repro.tuning.warm's --top).
+      search_budget   cap on how many searches this bind may pay; None is
+                      unlimited.  Exhausted-budget misses bind the
+                      platform default ("search-budget-exhausted").
+      priority        op -> rank (1 = hottest) from profile-driven op
+                      ordering; recorded in each TuneOutcome so the
+                      SwapReport shows where the search budget went.
 
     After construction, ``expiry`` holds the sweep's ExpiryReport (or
-    None) and ``events`` accumulates one TuneEvent per applied op.
+    None) and ``events`` accumulates one TuneEvent per applied
+    (op, geometry).
     """
 
     def __init__(
@@ -185,12 +230,19 @@ class TuningContext:
         search_on_miss: bool = True,
         profile: Any = None,
         current_abis: Mapping[str, Any] | None = None,
+        top_k: int = 3,
+        search_budget: int | None = None,
+        priority: Mapping[str, int] | None = None,
     ) -> None:
         self.cache = cache
         self.platform = platform
         self.ops = None if ops is None else frozenset(ops)
         self.search_on_miss = search_on_miss
         self.profile = profile
+        self.top_k = max(int(top_k), 1)
+        self.search_budget = search_budget
+        self.searches_spent = 0
+        self.priority = dict(priority) if priority else None
         self.events: list[TuneEvent] = []
         self.expiry = None
         # (op, platform, shapes, dtype) of each evicted entry: a miss is
@@ -214,72 +266,125 @@ class TuningContext:
                         platform=platform_fingerprint(self.platform),
                         shapes=shapes, dtype=dtype)
 
-    def apply(self, name: str, impl: Any) -> tuple[Any, str, str]:
-        """Resolve one chosen impl; returns (impl', status, config string).
+    def _resolve_geometry(
+        self, name: str, impl: Any, tuner: "OpTuner",
+        shapes: str, dtype: str, count: float, *, profiled: bool,
+    ) -> GeometryOutcome:
+        """Hit/search/default decision for one (op, geometry) bucket.
 
-        Impls without a tuner hook (references, untunable natives) pass
-        through untouched with empty annotations.  Key derivation is
-        string-only — a cache-hit deploy allocates no workload arrays;
-        synthesis of a profiled geometry happens only when a miss
+        Key derivation is string-only — a cache-hit deploy allocates no
+        workload arrays; synthesis of a geometry happens only when a miss
         actually triggers a search.
         """
-        tuner: OpTuner | None = getattr(impl, "tuner", None)
-        if tuner is None:
-            return impl, "", ""
-        profiled = None
-        if self.profile is not None and tuner.args_from_shapes is not None:
-            top = self.profile.top(op=name, k=1)
-            if top:
-                profiled = top[0][0]
-        if profiled is not None:
-            key = self._key(impl, profiled.shapes, profiled.dtype)
-        else:
-            shapes, dtype = bucket_shapes(tuner.workload_spec(self.platform))
-            key = self._key(impl, shapes, dtype)
-        expired = (name, key.platform, key.shapes, key.dtype) in self._expired_geoms
+        key = self._key(impl, shapes, dtype)
+        expired = (name, key.platform, shapes, dtype) in self._expired_geoms
         config = self.cache.get(key)
+        status = None
         if config is not None:
             status = "cache-hit"
         elif self.search_on_miss and (self.ops is None or name in self.ops):
-            args = None
-            if profiled is not None:
-                args = tuner.args_from_shapes(self.platform, profiled.shapes,
-                                              profiled.dtype)
-                if args is None:
-                    # recorded bucket doesn't match the op signature: fall
-                    # back wholly to the canonical geometry — key and
-                    # measurement must describe the same workload
-                    log.warning(
-                        "profiled geometry %r for op %s does not match its "
-                        "signature; falling back to the canonical example",
-                        profiled.shapes, name,
-                    )
-                    shapes, dtype = bucket_shapes(
-                        tuner.workload_spec(self.platform))
-                    key = self._key(impl, shapes, dtype)
-                    config = self.cache.get(key)
-            if config is not None:
-                status = "cache-hit"
+            if self.search_budget is not None and \
+                    self.searches_spent >= self.search_budget:
+                config = default_config(name, self.platform)
+                status = "search-budget-exhausted"
             else:
-                if args is None:
-                    args = tuner.example_args(self.platform)
-                config, ok = search_into_cache(
-                    self.cache, self.platform, tuner, impl.fn, args, key)
-                if not ok:
-                    status = "search-failed-default"
+                args = None
+                if profiled:
+                    if tuner.args_from_shapes is not None:
+                        args = tuner.args_from_shapes(self.platform, shapes, dtype)
+                    if args is None:
+                        log.warning(
+                            "profiled geometry %r for op %s does not match "
+                            "its signature; binding the platform default "
+                            "for that bucket", shapes, name,
+                        )
+                        config = default_config(name, self.platform)
+                        status = "unsynthesizable-default"
                 else:
-                    status = ("cache-expired-searched" if expired
+                    args = tuner.example_args(self.platform)
+                if status is None:
+                    self.searches_spent += 1
+                    config, ok = search_into_cache(
+                        self.cache, self.platform, tuner, impl.fn, args, key)
+                    status = ("search-failed-default" if not ok
+                              else "cache-expired-searched" if expired
                               else "cache-miss-searched")
         else:
             config = default_config(name, self.platform)
             status = "cache-expired-default" if expired else "cache-miss-default"
         self.events.append(TuneEvent(op=name, status=status, key=key.encode(),
                                      config=config))
-        log.info("tune %-18s %s (%s)", name, status, config)
+        log.info("tune %-18s %-28s %s (%s)", name, shapes or "<scalar>",
+                 status, config)
+        return GeometryOutcome(shapes=shapes, dtype=dtype, status=status,
+                               config=config, count=count)
+
+    def apply(self, name: str, impl: Any) -> tuple[Any, TuneOutcome | None]:
+        """Resolve one chosen impl; returns (impl', TuneOutcome | None).
+
+        Impls without a tuner hook (references, untunable natives) pass
+        through untouched (outcome None).  Otherwise the impl's fn is
+        wrapped in a `TunedDispatch` over a `ConfigTable` holding:
+
+          1. the profile's top-K recorded geometries for this op
+             (or the canonical example when no traffic was recorded),
+             each resolved hit/search/default as documented above;
+          2. every further already-warmed cache entry under the same
+             (ABI, platform fingerprint) — a cache warmed deeper than
+             the profile's current top-K still binds hot.
+
+        The model calls ``binding[op]`` unchanged; per-call geometry
+        picks its entry at trace time (exact -> nearest -> default), and
+        an explicit ``config=`` kwarg still wins inside the kernel.
+        """
+        tuner: OpTuner | None = getattr(impl, "tuner", None)
+        if tuner is None:
+            return impl, None
+        geometries: list[tuple[str, str, float, bool]] = []
+        if self.profile is not None:
+            for geo, count in self.profile.top(op=name, k=self.top_k):
+                geometries.append((geo.shapes, geo.dtype, float(count), True))
+        if not geometries:
+            shapes, dtype = bucket_shapes(tuner.workload_spec(self.platform))
+            geometries.append((shapes, dtype, 0.0, False))
+        outcomes = [
+            self._resolve_geometry(name, impl, tuner, shapes, dtype, count,
+                                   profiled=profiled)
+            for shapes, dtype, count, profiled in geometries
+        ]
+        # a profile whose every bucket is foreign to this op must not leave
+        # the op untuned: fall back to the canonical geometry, like PR 2 did
+        if all(o.status == "unsynthesizable-default" for o in outcomes):
+            shapes, dtype = bucket_shapes(tuner.workload_spec(self.platform))
+            if (shapes, dtype) not in {(o.shapes, o.dtype) for o in outcomes}:
+                outcomes.append(self._resolve_geometry(
+                    name, impl, tuner, shapes, dtype, 0.0, profiled=False))
+        # sweep: already-warmed entries beyond the profiled top-K bind too
+        seen = {(o.shapes, o.dtype) for o in outcomes}
+        for (shapes, dtype), config in sorted(
+                self.cache.entries_for(str(impl.abi),
+                                       platform_fingerprint(self.platform)).items()):
+            if (shapes, dtype) in seen:
+                continue
+            outcomes.append(GeometryOutcome(shapes=shapes, dtype=dtype,
+                                            status="cache-hit", config=config))
+        table = ConfigTable(name, outcomes,
+                            default=default_config(name, self.platform))
+        statuses = [o.status for o in outcomes]
+        if len(set(statuses)) == 1:
+            summary = statuses[0]
+        else:
+            freq: dict[str, int] = {}
+            for s in statuses:
+                freq[s] = freq.get(s, 0) + 1
+            summary = "mixed(" + ",".join(
+                f"{s}:{n}" for s, n in sorted(freq.items())) + ")"
+        rank = self.priority.get(name) if self.priority else None
         tuned = dataclasses.replace(
-            impl, fn=functools.partial(impl.fn, config=config), config=config
+            impl, fn=TunedDispatch(impl.fn, table), config=table
         )
-        return tuned, status, str(config)
+        return tuned, TuneOutcome(status=summary, config=str(table.primary),
+                                  geometries=tuple(outcomes), search_rank=rank)
 
     # ------------------------------------------------------------------ #
     def flush(self) -> None:

@@ -9,6 +9,7 @@ observed workloads, instead of at deploy time against canonical examples.
 
     python -m repro.tuning.warm [--profile PATH] [--cache PATH]
                                 [--platform NAME] [--top K] [--ops a,b]
+                                [--decay FACTOR]
 
 Environment:
   REPRO_WORKLOAD_PROFILE  profile location (same default as capture).
@@ -27,9 +28,23 @@ Stale-ABI entries are expired before warming (see expiry.py), so a
 kernel revision bump followed by a warm run yields a fully re-tuned
 cache in one pass.
 
+Every result also carries ``hot`` — whether the bucket now has a cache
+entry under the exact key an autotuned deploy will derive for it, i.e.
+whether the geometry-dispatched binding will resolve it with a cache
+hit.  A warm run that leaves any considered bucket cold (no native
+impl, unsynthesizable) says so explicitly rather than letting the next
+deploy discover it.
+
+``--decay FACTOR`` ages the profile before ranking (counts scaled by
+FACTOR, sub-floor entries dropped, file rewritten): traffic recorded
+after the decay lands at full weight, so shifted workloads re-rank the
+buckets instead of being outvoted by stale history forever.
+
 ``--selftest`` runs the whole capture -> warm -> redeploy loop against
 temp files on the ``pod-sim`` platform (interpret-mode kernels, no TPU
-needed) and exits non-zero unless the final deploy reports zero misses.
+needed) and exits non-zero unless the final shape-polymorphic deploy
+binds EVERY captured bucket (2+ per op) with a cache hit — zero misses,
+zero searches — and the dispatch resolves each live geometry exactly.
 This is what the CI docs job executes.
 """
 
@@ -64,9 +79,11 @@ class WarmResult:
     op: str
     shapes: str
     dtype: str
-    count: int          # profile hit count for this geometry
+    count: float        # profile hit count for this geometry
     status: str         # warmed / already-cached / search-failed / ...
     config: str = ""    # winner (or persisted fallback), printable form
+    hot: bool = False   # the bucket now binds cache-hit: an entry exists
+    # under the exact key an autotuned deploy derives for this geometry
 
 
 def _native_impl(registry: Any, op: str, platform: Any):
@@ -94,7 +111,10 @@ def warm_cache(
     Winners land in `cache` (caller saves); existing entries are left
     alone, so repeated warm runs are idempotent and cheap.  Stale-ABI
     entries are expired first.  Returns one WarmResult per considered
-    (op, geometry), hottest first.
+    (op, geometry), hottest first, each verified against the cache
+    (``hot``): after a warm run every top-K bucket with a tunable native
+    must bind cache-hit at the next deploy, and any that cannot is
+    reported cold here instead of discovered there.
     """
     from repro.core.registry import global_registry
     from repro.kernels.ops import register_all
@@ -128,7 +148,8 @@ def warm_cache(
             cached = cache.get(key)
             if cached is not None:
                 results.append(WarmResult(op, geo.shapes, geo.dtype, count,
-                                          "already-cached", str(cached)))
+                                          "already-cached", str(cached),
+                                          hot=True))
                 continue
             args = None
             if tuner.args_from_shapes is not None:
@@ -144,14 +165,23 @@ def warm_cache(
             )
             results.append(WarmResult(
                 op, geo.shapes, geo.dtype, count,
-                "warmed" if ok else "search-failed", str(config)))
+                "warmed" if ok else "search-failed", str(config),
+                hot=cache.get(key) is not None))
+    cold = [r for r in results if not r.hot]
+    if cold:
+        log.warning("warm: %d bucket(s) remain cold (will not bind cache-hit): %s",
+                    len(cold), ", ".join(f"{r.op}[{r.shapes}] {r.status}"
+                                         for r in cold))
     return results
 
 
 # --------------------------------------------------------------------------- #
 def _selftest() -> int:
-    """capture -> warm -> redeploy on pod-sim; 0 iff the redeploy has zero
-    misses and the k-loop moe_gmm entry carries a searched block_k."""
+    """capture (2+ buckets per op) -> warm -> one shape-polymorphic
+    redeploy on pod-sim; 0 iff EVERY captured bucket binds cache-hit
+    (zero misses, zero searches), the dispatch resolves each live
+    geometry exactly, and the k-loop moe_gmm entries carry a searched
+    block_k."""
     import tempfile
 
     import jax
@@ -173,25 +203,36 @@ def _selftest() -> int:
     bundle = Bundle(name="warm-selftest", tag="t", model_config={}, recipe={},
                     required_ops={op: str(ABIS[op]) for op in ops}, env={})
 
-    # 1. capture: deploy with profiling on, run live traffic through the ops
+    # 1. capture: deploy with profiling on, run shape-polymorphic traffic —
+    # two distinct geometries per op, like prefill vs decode microbatches
     rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
     c1 = rt.deploy(bundle, native_ops=True, autotune=False, profile=True)
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
-    x = jax.random.normal(k1, (60, 64), jnp.float32)        # buckets to 64x64
     wgt = jax.random.normal(k2, (64,), jnp.float32)
-    for _ in range(3):
-        jax.block_until_ready(c1.binding["rmsnorm"](x, wgt))
-    xt = jax.random.normal(k3, (64, 64), jnp.float32)
-    wm = jax.random.normal(k2, (4, 64, 64), jnp.float32)
-    gs = jnp.full((4,), 16, jnp.int32)
-    for _ in range(2):
-        jax.block_until_ready(c1.binding["moe_gmm"](xt, wm, gs))
+    rms_geoms = []
+    for rows in (60, 7):                       # buckets 64x64 and 8x64
+        x = jax.random.normal(k1, (rows, 64), jnp.float32)
+        rms_geoms.append((x, wgt))
+        for _ in range(3):
+            jax.block_until_ready(c1.binding["rmsnorm"](x, wgt))
+    moe_geoms = []
+    for t_rows, d in ((64, 64), (16, 32)):     # 64x64... and 16x32... buckets
+        xt = jax.random.normal(k3, (t_rows, d), jnp.float32)
+        wm = jax.random.normal(k2, (4, d, d), jnp.float32)
+        gs = jnp.full((4,), t_rows // 4, jnp.int32)
+        moe_geoms.append((xt, wm, gs))
+        for _ in range(2):
+            jax.block_until_ready(c1.binding["moe_gmm"](xt, wm, gs))
     rt.cleanup()   # persists the profile
 
     profile = WorkloadProfile.load(tmp / "workload.json")
     if set(profile.ops()) != set(ops):
         print(f"FAIL: capture recorded {profile.ops()!r}, want {ops!r}")
         return 1
+    for op in ops:
+        if len(profile.top(op=op)) < 2:
+            print(f"FAIL: capture recorded <2 buckets for {op}")
+            return 1
 
     # 2. warm: replay the recorded geometries through the tuner
     cache = TuningCache.load(tmp / "tuning.json")
@@ -199,27 +240,60 @@ def _selftest() -> int:
                          registry=register_all(OpRegistry()))
     cache.save()
     for r in results:
-        print(f"  warm {r.op:<10} {r.shapes:<24} x{r.count:<4} "
-              f"{r.status} ({r.config})")
-    warmed = {r.op for r in results if r.status == "warmed"}
-    if warmed != set(ops):
-        print(f"FAIL: warmed {warmed!r}, want {set(ops)!r}")
+        print(f"  warm {r.op:<10} {r.shapes:<24} x{r.count:<6g} "
+              f"{r.status} ({r.config}) {'hot' if r.hot else 'COLD'}")
+    if not all(r.hot for r in results):
+        print("FAIL: warm left buckets cold (see above)")
         return 1
-    moe_cfg = next(r.config for r in results if r.op == "moe_gmm")
-    if "block_k=" not in moe_cfg:
-        print(f"FAIL: moe_gmm winner {moe_cfg!r} has no block_k knob")
-        return 1
+    for op in ops:
+        warmed = [r for r in results if r.op == op and r.status == "warmed"]
+        if len(warmed) < 2:
+            print(f"FAIL: expected >=2 warmed buckets for {op}, "
+                  f"got {len(warmed)}")
+            return 1
+    for r in results:
+        if r.op == "moe_gmm" and "block_k=" not in r.config:
+            print(f"FAIL: moe_gmm winner {r.config!r} has no block_k knob")
+            return 1
 
-    # 3. redeploy: autotune against the warmed cache -> zero misses
+    # 3. redeploy once: every captured bucket must bind cache-hit — the
+    # geometry-dispatched binding carries all of them, with zero searches
     rt2 = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
     c2 = rt2.deploy(bundle, native_ops=True, autotune=True)
     print(c2.describe())
-    statuses = {r.op: r.tuning for r in c2.binding.reports}
+    reports = {r.op: r for r in c2.binding.reports}
+    for op in ops:
+        rep = reports[op]
+        if rep.tuning != "cache-hit":
+            print(f"FAIL: {op} redeploy expected cache-hit, got {rep.tuning!r}")
+            return 1
+        if len(rep.geometries) < 2:
+            print(f"FAIL: {op} bound {len(rep.geometries)} geometries, want >=2")
+            return 1
+        if any(g.status != "cache-hit" for g in rep.geometries):
+            print(f"FAIL: {op} has non-hit geometries: "
+                  f"{[(g.shapes, g.status) for g in rep.geometries]}")
+            return 1
+
+    # 4. drive both live geometries through each bound op: the dispatch
+    # must resolve every one exactly (no nearest/default fallbacks)
+    for op, geoms in (("rmsnorm", rms_geoms), ("moe_gmm", moe_geoms)):
+        for args in geoms:
+            jax.block_until_ready(c2.binding[op](*args))
+        dispatch = c2.binding.impl(op).fn
+        stats = getattr(dispatch, "stats", None)
+        if not stats or stats["exact"] < len(geoms) or stats["nearest"] or \
+                stats["default"]:
+            print(f"FAIL: {op} dispatch stats {stats!r}; want every live "
+                  f"geometry resolved exactly")
+            return 1
+        configs = {(g.shapes, g.dtype): str(g.config)
+                   for g in reports[op].geometries}
+        print(f"  dispatch {op}: {len(configs)} tuned geometries, "
+              f"stats {stats}")
     rt2.cleanup()
-    if any(s != "cache-hit" for s in statuses.values()):
-        print(f"FAIL: redeploy expected all cache-hits, got {statuses!r}")
-        return 1
-    print(f"OK: profile-warmed cache at {tmp} replayed with zero misses")
+    print(f"OK: {tmp} — one deploy bound every warmed bucket of every op "
+          f"with zero misses and zero searches")
     return 0
 
 
@@ -236,6 +310,10 @@ def main(argv=None) -> int:
                     help="geometries to warm per op, hottest first")
     ap.add_argument("--ops", default=None,
                     help="comma-separated op filter (default: every profiled op)")
+    ap.add_argument("--decay", type=float, default=None, metavar="FACTOR",
+                    help="age profile counts by FACTOR in (0,1) before "
+                         "ranking (and persist the aged profile): lets "
+                         "shifted traffic re-rank the buckets")
     ap.add_argument("--selftest", action="store_true",
                     help="run the capture->warm->redeploy loop on pod-sim")
     args = ap.parse_args(argv)
@@ -257,16 +335,27 @@ def main(argv=None) -> int:
         print(f"nothing to warm: profile {profile_path} is empty or missing "
               f"(deploy with REPRO_PROFILE=1 to capture workloads)")
         return 1
+    if args.decay is not None:
+        before = len(profile)
+        dropped = profile.decay(args.decay)
+        profile.save()
+        print(f"decayed profile by {args.decay:g}: {before} -> {len(profile)} "
+              f"geometries ({dropped} aged out)")
+        if not len(profile):
+            print("profile fully aged out; nothing to warm")
+            return 0
     cache = TuningCache.load(cache_path)
     ops = [o.strip() for o in args.ops.split(",")] if args.ops else None
     results = warm_cache(profile, cache, platform, top_k=args.top, ops=ops)
     cache.save()
     for r in results:
-        print(f"{r.op:<18} {r.shapes:<32} {r.dtype:<10} x{r.count:<6} "
-              f"{r.status:<16} {r.config}")
+        print(f"{r.op:<18} {r.shapes:<32} {r.dtype:<10} x{r.count:<6g} "
+              f"{r.status:<16} {'hot ' if r.hot else 'COLD'} {r.config}")
     warmed = sum(r.status == "warmed" for r in results)
+    hot = sum(r.hot for r in results)
     print(f"warmed {warmed} entr{'y' if warmed == 1 else 'ies'} "
-          f"into {cache_path} ({len(cache)} total)")
+          f"into {cache_path} ({len(cache)} total); "
+          f"{hot}/{len(results)} considered buckets bind hot")
     return 0
 
 

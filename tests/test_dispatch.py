@@ -1,0 +1,362 @@
+"""Geometry-dispatched bindings: one bound op, many tuned configs.
+
+Covers the PR 3 acceptance loop at unit scale: a warmed cache plus one
+shape-polymorphic deploy binds >= 2 *distinct* tuned configs for the
+same op with zero searches; dispatch-under-jit resolves each compiled
+geometry's own config without retracing blowup; and the fallback chain
+(exact -> nearest bucket -> platform default) is exercised per branch.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.abi import AbiString
+from repro.core.platform import POD_SIM, Platform
+from repro.core.registry import ImplKind, OpImpl, OpRegistry
+from repro.core.runtime import Runtime
+from repro.kernels.ops import ABIS, register_all
+from repro.tuning import (
+    BlockConfig,
+    CacheKey,
+    ConfigTable,
+    GeometryOutcome,
+    OpTuner,
+    TunedDispatch,
+    TuningCache,
+    TuningContext,
+    WorkloadProfile,
+    bucket_distance,
+    platform_fingerprint,
+)
+
+FAKE_SIM = Platform(
+    name="fake-sim",
+    hardware=POD_SIM.hardware,
+    mesh_shape=(1,),
+    mesh_axes=("data",),
+    native_features=frozenset({"pallas_interpret"}),
+)
+
+
+# ------------------------------------------------------------- distance --
+
+
+def test_bucket_distance_log_space():
+    assert bucket_distance("64x32,32", "64x32,32") == 0.0
+    assert bucket_distance("64x32,32", "128x32,32") == 1.0   # one doubling
+    assert bucket_distance("64x32,32", "128x64,32") == 2.0
+    # structural mismatches are incomparable, not "far"
+    assert bucket_distance("64x32,32", "64x32") is None          # arg count
+    assert bucket_distance("64x32,32", "64x32x2,32") is None     # rank
+    assert bucket_distance("junk-bucket", "64x32") is None
+
+
+# ---------------------------------------------------------- config table --
+
+
+def _table():
+    return ConfigTable(
+        "scale",
+        [
+            GeometryOutcome(shapes="64x32,32", dtype="float32",
+                            status="cache-hit",
+                            config=BlockConfig.make(block=64), count=9),
+            GeometryOutcome(shapes="8x32,32", dtype="float32",
+                            status="cache-hit",
+                            config=BlockConfig.make(block=8), count=3),
+        ],
+        default=BlockConfig.make(block=2),
+    )
+
+
+def test_config_table_fallback_chain_per_branch():
+    table = _table()
+    # exact: the call's bucket has its own entry
+    cfg, how = table.resolve(shapes="8x32,32", dtype="float32")
+    assert (cfg["block"], how) == (8, "exact")
+    # nearest: same structure, unseen bucket -> closest tuned bucket wins
+    cfg, how = table.resolve(shapes="16x32,32", dtype="float32")
+    assert (cfg["block"], how) == (8, "nearest")
+    cfg, how = table.resolve(shapes="256x32,32", dtype="float32")
+    assert (cfg["block"], how) == (64, "nearest")
+    # default: structurally foreign (or dtype-foreign) geometry
+    cfg, how = table.resolve(shapes="16x16", dtype="float32")
+    assert (cfg["block"], how) == (2, "default")
+    cfg, how = table.resolve(shapes="8x32,32", dtype="bfloat16")
+    assert (cfg["block"], how) == (2, "default")
+    # primary is the hottest geometry's config (the old top-1 view)
+    assert table.primary["block"] == 64
+    assert len(table) == 2 and "+1 more" in str(table)
+
+
+def test_config_table_resolve_from_args():
+    table = _table()
+    args = (jnp.zeros((60, 32)), jnp.zeros((32,)))   # buckets to 64x32,32
+    cfg, how = table.resolve(args)
+    assert (cfg["block"], how) == (64, "exact")
+
+
+# ------------------------------------------------------ dispatch + jit --
+
+
+def _seeded_registry_and_cache(tmp_path):
+    """A tunable 'scale' op plus a cache holding DISTINCT configs for two
+    geometries of it — the deterministic stand-in for a warmed site."""
+    reg = OpRegistry()
+    abi = AbiString.make("scale", {"args": ["x"]})
+    reg.register(OpImpl(abi=abi, kind=ImplKind.REFERENCE,
+                        fn=lambda x: x, provider="ref"))
+    tuner = OpTuner(op="scale", space={"block": (3, 5)},
+                    example_args=lambda platform: (jnp.zeros((4, 4)),),
+                    iters=1, warmup=0)
+    reg.register(OpImpl(
+        abi=abi, kind=ImplKind.NATIVE,
+        fn=lambda x, config=None: x * config["block"],
+        requires_feature="pallas_interpret", provider="fake-native",
+        tuner=tuner,
+    ))
+    fp = platform_fingerprint(FAKE_SIM)
+    cache = TuningCache(tmp_path / "tuning.json")
+    cache.put(CacheKey(abi=str(abi), platform=fp, shapes="4x4", dtype="float32"),
+              BlockConfig.make(block=3))
+    cache.put(CacheKey(abi=str(abi), platform=fp, shapes="8x4", dtype="float32"),
+              BlockConfig.make(block=5))
+    return reg, abi, cache
+
+
+def test_warmed_deploy_binds_two_distinct_configs_zero_searches(tmp_path):
+    """The acceptance unit test: one shape-polymorphic bind against a
+    warmed cache carries >= 2 distinct tuned configs for the same op,
+    pays zero searches, and surfaces both geometries in the SwapReport
+    and describe()."""
+    reg, _, cache = _seeded_registry_and_cache(tmp_path)
+    prof = WorkloadProfile(tmp_path / "w.json")
+    prof.record("scale", (jnp.zeros((4, 4)),), weight=5)
+    prof.record("scale", (jnp.zeros((8, 4)),), weight=2)
+
+    ctx = TuningContext(cache, FAKE_SIM, profile=prof, search_on_miss=False)
+    binding = reg.bind(["scale"], FAKE_SIM, native=True, freeze=False,
+                       tuning=ctx)
+    assert ctx.searches_spent == 0
+    rep = binding.reports[0]
+    assert rep.tuning == "cache-hit"
+    assert len(rep.geometries) == 2
+    assert all(g.status == "cache-hit" for g in rep.geometries)
+    configs = {str(g.config) for g in rep.geometries}
+    assert configs == {"block=3", "block=5"}          # distinct tuned configs
+    assert "4x4/float32" in binding.describe()
+    assert "8x4/float32" in binding.describe()
+    # per-geometry tuned_config resolution (and the shape-less primary)
+    assert binding.tuned_config("scale")["block"] == 3          # hottest
+    assert binding.tuned_config("scale", (jnp.zeros((8, 4)),))["block"] == 5
+    assert binding.tuned_config("scale", shapes="8x4", dtype="float32")["block"] == 5
+
+
+def test_dispatch_under_jit_distinct_geometries_no_retrace_blowup(tmp_path):
+    """Distinct geometries of ONE bound op resolve distinct configs; the
+    resolution happens at trace time, so N calls at one geometry cost one
+    resolution (== one trace), not N."""
+    reg, _, cache = _seeded_registry_and_cache(tmp_path)
+    prof = WorkloadProfile(tmp_path / "w.json")
+    prof.record("scale", (jnp.zeros((4, 4)),))
+    prof.record("scale", (jnp.zeros((8, 4)),))
+    ctx = TuningContext(cache, FAKE_SIM, profile=prof, search_on_miss=False)
+    binding = reg.bind(["scale"], FAKE_SIM, native=True, freeze=False,
+                       tuning=ctx)
+
+    fn = jax.jit(binding["scale"])
+    a = jnp.ones((4, 4))
+    b = jnp.ones((8, 4))
+    for _ in range(4):
+        assert float(fn(a)[0, 0]) == 3.0    # 4x4 bucket -> block=3
+    assert float(fn(b)[0, 0]) == 5.0        # 8x4 bucket -> block=5
+
+    dispatch = binding.impl("scale").fn
+    assert isinstance(dispatch, TunedDispatch)
+    # 2 compiled geometries -> exactly 2 resolutions despite 5 calls
+    assert dispatch.stats == {"exact": 2, "nearest": 0, "default": 0,
+                              "explicit": 0}
+    assert dispatch.hit_rate == 1.0
+
+
+def test_dispatch_nearest_and_default_branches_in_binding(tmp_path):
+    reg, _, cache = _seeded_registry_and_cache(tmp_path)
+    prof = WorkloadProfile(tmp_path / "w.json")
+    prof.record("scale", (jnp.zeros((4, 4)),))
+    prof.record("scale", (jnp.zeros((8, 4)),))
+    ctx = TuningContext(cache, FAKE_SIM, profile=prof, search_on_miss=False)
+    binding = reg.bind(["scale"], FAKE_SIM, native=True, freeze=False,
+                       tuning=ctx)
+    dispatch = binding.impl("scale").fn
+    # unseen same-structure bucket -> nearest tuned entry (8x4 -> block=5)
+    assert float(binding["scale"](jnp.ones((16, 4)))[0, 0]) == 5.0
+    assert dispatch.stats["nearest"] == 1
+    # structurally foreign geometry -> platform default for 'scale'
+    # (BlockConfig() is empty -> the fake fn would KeyError; assert the
+    # default branch is taken via stats with a config-tolerant call)
+    cfg, how = dispatch.table.resolve(shapes="4", dtype="float32")
+    assert how == "default"
+
+
+def test_explicit_config_kwarg_still_wins(tmp_path):
+    reg, _, cache = _seeded_registry_and_cache(tmp_path)
+    prof = WorkloadProfile(tmp_path / "w.json")
+    prof.record("scale", (jnp.zeros((4, 4)),))
+    ctx = TuningContext(cache, FAKE_SIM, profile=prof, search_on_miss=False)
+    binding = reg.bind(["scale"], FAKE_SIM, native=True, freeze=False,
+                       tuning=ctx)
+    out = binding["scale"](jnp.ones((4, 4)), config=BlockConfig.make(block=7))
+    assert float(out[0, 0]) == 7.0
+    assert binding.impl("scale").fn.stats["explicit"] == 1
+
+
+# ----------------------------------------------------------- search budget --
+
+
+def test_search_budget_exhausted_binds_default(tmp_path):
+    """With budget=1 and two cold profiled buckets, exactly one search runs;
+    the second bucket binds the platform default and says so."""
+    reg = OpRegistry()
+    abi = AbiString.make("scale", {"args": ["x"]})
+    reg.register(OpImpl(abi=abi, kind=ImplKind.REFERENCE,
+                        fn=lambda x: x, provider="ref"))
+    tuner = OpTuner(
+        op="scale", space={"block": (2, 4)},
+        example_args=lambda platform: (jnp.zeros((4, 4)),),
+        args_from_shapes=lambda platform, shapes, dtype: (
+            jnp.zeros(tuple(int(d) for d in shapes.split(",")[0].split("x"))),),
+        iters=1, warmup=0,
+    )
+    reg.register(OpImpl(
+        abi=abi, kind=ImplKind.NATIVE,
+        fn=lambda x, config=None: x * (config["block"] if "block" in config else 1),
+        requires_feature="pallas_interpret", provider="fake-native",
+        tuner=tuner,
+    ))
+    prof = WorkloadProfile(tmp_path / "w.json")
+    prof.record("scale", (jnp.zeros((4, 4)),), weight=5)
+    prof.record("scale", (jnp.zeros((8, 4)),), weight=1)
+    cache = TuningCache(tmp_path / "t.json")
+    ctx = TuningContext(cache, FAKE_SIM, profile=prof, search_budget=1)
+    binding = reg.bind(["scale"], FAKE_SIM, native=True, freeze=False,
+                       tuning=ctx)
+    assert ctx.searches_spent == 1
+    statuses = {g.shapes: g.status for g in binding.reports[0].geometries}
+    assert statuses["4x4"] == "cache-miss-searched"      # hottest searched
+    assert statuses["8x4"] == "search-budget-exhausted"
+    assert "mixed(" in binding.reports[0].tuning
+
+
+# ------------------------------------------- profile-driven op selection --
+
+
+def test_runtime_profile_driven_op_ordering_and_budget(tmp_path):
+    """autotune_ops=None + a profile: ops bind hottest-first, the rank is
+    in the SwapReport, and REPRO_SEARCH_BUDGET=0 suppresses every search."""
+    from repro.core.bundle import Bundle
+
+    profile_path = tmp_path / "workload.json"
+    prof = WorkloadProfile(profile_path)
+    prof.record("moe_gmm", (jnp.zeros((16, 32), jnp.float32),
+                            jnp.zeros((4, 32, 32), jnp.float32),
+                            jnp.zeros((4,), jnp.int32)), weight=9)
+    prof.record("rmsnorm", (jnp.zeros((16, 32), jnp.float32),
+                            jnp.zeros((32,), jnp.float32)), weight=2)
+    prof.save()
+
+    host_env = {
+        "REPRO_PLATFORM": "pod-sim",
+        "REPRO_TUNING_CACHE": str(tmp_path / "tuning.json"),
+        "REPRO_WORKLOAD_PROFILE": str(profile_path),
+        "REPRO_SEARCH_BUDGET": "0",
+    }
+    ops = ("rmsnorm", "moe_gmm")
+    bundle = Bundle(name="b", tag="t", model_config={}, recipe={},
+                    required_ops={op: str(ABIS[op]) for op in ops}, env={})
+    rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c = rt.deploy(bundle, native_ops=True, autotune=True)
+    rt.cleanup()
+    reports = list(c.binding.reports)
+    # hottest op binds (and would search) first, rank recorded
+    assert [r.op for r in reports] == ["moe_gmm", "rmsnorm"]
+    assert reports[0].search_rank == 1 and reports[1].search_rank == 2
+    assert "search#1" in c.binding.describe()
+    # budget 0: nothing searched, every cold bucket binds the default
+    for r in reports:
+        assert all(g.status == "search-budget-exhausted" for g in r.geometries)
+
+
+def test_search_budget_env_parsing():
+    from repro.core.env import search_budget_default
+
+    assert search_budget_default({}) is None
+    assert search_budget_default({"REPRO_SEARCH_BUDGET": "3"}) == 3
+    assert search_budget_default({"REPRO_SEARCH_BUDGET": "0"}) == 0
+    assert search_budget_default({"REPRO_SEARCH_BUDGET": "junk"}) is None
+    assert search_budget_default({"REPRO_SEARCH_BUDGET": "-2"}) is None
+
+
+# ----------------------------------------------------------- profile decay --
+
+
+def test_profile_decay_reranks_after_traffic_shift(tmp_path):
+    prof = WorkloadProfile(tmp_path / "w.json")
+    old_geom = (jnp.zeros((64, 32)),)
+    new_geom = (jnp.zeros((8, 32)),)
+    prof.record("rmsnorm", old_geom, weight=10)
+    prof.save()
+
+    aged = WorkloadProfile.load(tmp_path / "w.json")
+    dropped = aged.decay(0.1)          # 10 -> 1.0, stays above floor
+    assert dropped == 0
+    aged.record("rmsnorm", new_geom, weight=3)
+    aged.save()
+
+    reloaded = WorkloadProfile.load(tmp_path / "w.json")
+    top = reloaded.top(op="rmsnorm")
+    assert top[0][0].shapes == "8x32" and top[0][1] == 3     # fresh wins
+    assert top[1][1] == pytest.approx(1.0)                   # aged history
+
+    # a second aggressive decay floors both buckets (1.0 and 3 -> 0.1, 0.3)
+    again = WorkloadProfile.load(tmp_path / "w.json")
+    assert again.decay(0.1) == 2
+    again.save()
+    assert len(WorkloadProfile.load(tmp_path / "w.json")) == 0
+
+
+def test_profile_decay_rejects_bad_factor(tmp_path):
+    prof = WorkloadProfile(tmp_path / "w.json")
+    with pytest.raises(ValueError):
+        prof.decay(1.5)
+    with pytest.raises(ValueError):
+        prof.decay(0.0)
+
+
+def test_profile_op_totals(tmp_path):
+    prof = WorkloadProfile(tmp_path / "w.json")
+    prof.record("a", (jnp.zeros((4, 4)),), weight=2)
+    prof.record("a", (jnp.zeros((8, 4)),), weight=3)
+    prof.record("b", (jnp.zeros((4, 4)),), weight=1)
+    assert prof.op_totals() == {"a": 5, "b": 1}
+
+
+# ----------------------------------------------- cache sweep into binding --
+
+
+def test_binding_sweeps_warmed_entries_beyond_profile_top_k(tmp_path):
+    """A cache warmed deeper than the profile's current top-K still binds
+    every entry: the sweep adds them as extra cache-hit geometries."""
+    reg, abi, cache = _seeded_registry_and_cache(tmp_path)
+    fp = platform_fingerprint(FAKE_SIM)
+    cache.put(CacheKey(abi=str(abi), platform=fp, shapes="32x4",
+                       dtype="float32"), BlockConfig.make(block=9))
+    prof = WorkloadProfile(tmp_path / "w.json")
+    prof.record("scale", (jnp.zeros((4, 4)),))
+    ctx = TuningContext(cache, FAKE_SIM, profile=prof, search_on_miss=False,
+                        top_k=1)
+    binding = reg.bind(["scale"], FAKE_SIM, native=True, freeze=False,
+                       tuning=ctx)
+    geoms = {g.shapes for g in binding.reports[0].geometries}
+    assert geoms == {"4x4", "8x4", "32x4"}
+    assert float(binding["scale"](jnp.ones((32, 4)))[0, 0]) == 9.0

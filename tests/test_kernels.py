@@ -147,7 +147,20 @@ def test_moe_gmm_kernel_matches_exact(t, d, e, f, dtype):
                                atol=10 * TOLS[dtype], rtol=10 * TOLS[dtype])
 
 
-def test_moe_gmm_capacity_drops():
+def test_moe_gmm_dropless_at_decode_scale():
+    """Unspecified capacity_factor (the binding's call convention) is
+    dropless at <= _EXACT_ROWS_MAX rows: geometry-dependent capacity
+    drops broke prefill/decode consistency (moonshot, docs/kernels.md)."""
+    x = jnp.ones((12, 4))
+    w = jnp.ones((2, 4, 4))
+    gs = jnp.array([10, 2], jnp.int32)
+    y = moe_gmm_ref(x, w, gs)
+    assert int((jnp.abs(y).sum(axis=1) == 0).sum()) == 0
+
+
+def test_moe_gmm_explicit_capacity_factor_drops():
+    """An explicit capacity_factor always runs the capacity formulation
+    (with its documented overflow drop), at any row count."""
     x = jnp.ones((12, 4))
     w = jnp.ones((2, 4, 4))
     gs = jnp.array([10, 2], jnp.int32)

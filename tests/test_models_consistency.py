@@ -79,6 +79,25 @@ def test_multi_step_decode_matches_prefill(arch):
     )
 
 
+def test_moe_gmm_ref_dropless_at_decode_scale():
+    """Pinned repro for the moonshot prefill/decode divergence: the
+    capacity-truncated reference computed cap = cf*T/E, so a decode
+    microbatch (T*k = 4 rows, cap = 2) dropped rows a prefill (T*k = 64,
+    cap = 20) kept — adversarially skewed routing must now be exact at
+    decode scale (docs/kernels.md, "Dropless reference at decode scale")."""
+    from repro.kernels.moe_gmm_ref import moe_gmm_exact, moe_gmm_ref
+
+    # all 4 pairs to one expert: the old cap=2 path zeroed two of them
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16))
+    gs = jnp.array([4, 0, 0, 0], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(moe_gmm_ref(x, w, gs)),
+        np.asarray(moe_gmm_exact(x, w, gs)),
+        atol=1e-6, rtol=1e-6,
+    )
+
+
 def test_moe_gmm_path_matches_dense_oracle():
     cfg = ARCHS["phi3.5-moe-42b-a6.6b"].reduced()
     toks = jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0, cfg.vocab_size)

@@ -327,9 +327,10 @@ def test_expire_stale_leaves_foreign_ops_alone(tmp_path):
 
 
 def test_moe_gmm_abi_minor_is_bumped():
-    """The k-loop extension is a compatible revision: minor 1, same digest,
-    so old bundles (requiring 1:0) still deploy but caches expire."""
-    assert ABIS["moe_gmm"].minor == 1
+    """The k-loop extension (minor 1) and the dropless-reference fix
+    (minor 2) are compatible revisions: old bundles still deploy but
+    caches tuned on older revisions expire."""
+    assert ABIS["moe_gmm"].minor == 2
     old = AbiString(name="moe_gmm", major=1, minor=0,
                     digest=ABIS["moe_gmm"].digest)
     assert old.compatible_with(ABIS["moe_gmm"])       # bundle side still fine
