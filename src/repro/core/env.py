@@ -32,6 +32,14 @@ ids, so single-GPU images run unmodified on multi-GPU hosts.
                           profile present the budget is spent hottest-op
                           first (profile-driven autotune_ops selection);
                           absent/invalid values mean unlimited.
+  REPRO_TUNING_MAX_ENTRIES  positive integer: default for
+                          deploy(max_tuned_entries=) — per-op cap on the
+                          geometry-dispatch table.  Each op binds at most
+                          K buckets (hottest first); cached entries
+                          beyond the cap are LRU-evicted under pressure
+                          ("cache-evicted-lru" in the SwapReport).
+                          Absent/invalid values mean unbounded (the
+                          append-only pre-lifecycle behaviour).
 """
 
 from __future__ import annotations
@@ -54,12 +62,14 @@ __all__ = [
     "autotune_default",
     "profile_default",
     "search_budget_default",
+    "tuning_max_entries_default",
     "ENV_VISIBLE",
     "ENV_PLATFORM",
     "ENV_NATIVE_OPS",
     "ENV_AUTOTUNE",
     "ENV_PROFILE",
     "ENV_SEARCH_BUDGET",
+    "ENV_TUNING_MAX_ENTRIES",
 ]
 
 ENV_VISIBLE = "REPRO_VISIBLE_DEVICES"
@@ -68,6 +78,7 @@ ENV_NATIVE_OPS = "REPRO_NATIVE_OPS"
 ENV_AUTOTUNE = "REPRO_AUTOTUNE"
 ENV_PROFILE = "REPRO_PROFILE"
 ENV_SEARCH_BUDGET = "REPRO_SEARCH_BUDGET"
+ENV_TUNING_MAX_ENTRIES = "REPRO_TUNING_MAX_ENTRIES"
 
 _INT_LIST_RE = re.compile(r"^\s*\d+\s*(,\s*\d+\s*)*$")
 
@@ -170,3 +181,22 @@ def search_budget_default(env: dict[str, str] | None = None) -> int | None:
     except ValueError:
         return None
     return value if value >= 0 else None
+
+
+def tuning_max_entries_default(env: dict[str, str] | None = None) -> int | None:
+    """REPRO_TUNING_MAX_ENTRIES as a positive int, else None (unbounded).
+
+    Zero is treated as invalid, not as "no tuning state at all": a cap of
+    0 would evict every warmed bucket at bind time, which no deployment
+    can want — like every trigger variable here, a nonsensical value
+    deactivates the feature instead of erroring or degrading service.
+    """
+    env = os.environ if env is None else env
+    text = str(env.get(ENV_TUNING_MAX_ENTRIES, "")).strip()
+    if not text:
+        return None
+    try:
+        value = int(text)
+    except ValueError:
+        return None
+    return value if value > 0 else None

@@ -115,13 +115,16 @@ class SwapReport:
     reason: str         # why this impl (or why the swap was refused)
     tuning: str = ""    # autotune outcome summary: "cache-hit",
     #                     "cache-miss-searched", "cache-miss-default",
-    #                     "search-failed-default", ... or "mixed(...)" when
-    #                     geometries disagree; empty when tuning was off or
-    #                     the impl is untunable
+    #                     "search-failed-default", "cache-evicted-lru", ...
+    #                     or "mixed(...)" when geometries disagree; empty
+    #                     when tuning was off or the impl is untunable
     config: str = ""    # the primary (hottest-geometry) BlockConfig, printable
     geometries: tuple = ()        # per-geometry tuning breakdown: one
     #                     tuning.GeometryOutcome per dispatchable shape
-    #                     bucket of this op (empty when untuned)
+    #                     bucket of this op (empty when untuned).  Under a
+    #                     table cap this includes the buckets the bind
+    #                     SHED ("cache-evicted-lru") — reported for the
+    #                     EXPERIMENTS log, absent from the dispatch table
     search_rank: int | None = None   # position in the profile-driven search
     #                     order (1 = hottest op); None when ordering was
     #                     not profile-driven
@@ -148,9 +151,11 @@ class OpBinding(Mapping[str, Callable[..., Any]]):
         sequence of arrays/tracers (the call's actual operands) or an
         encoded shape-bucket string (plus ``dtype``), in which case the
         per-geometry table resolves it (exact -> nearest bucket ->
-        platform default).  Lets call sites that historically pass their
-        own tile kwargs (the explicit kwarg always wins inside the
-        kernel) defer to the site's tuned value when one exists.
+        validated near-dtype borrow -> platform default; an explicit
+        shapes string with ``dtype=None`` matches any dtype, hottest
+        first).  Lets call sites that historically pass their own tile
+        kwargs (the explicit kwarg always wins inside the kernel) defer
+        to the site's tuned value when one exists.
         """
         impl = self._table.get(name)
         config = getattr(impl, "config", None) if impl is not None else None

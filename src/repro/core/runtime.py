@@ -40,6 +40,7 @@ from repro.core.env import (
     resolve_platform,
     search_budget_default,
     select_devices,
+    tuning_max_entries_default,
 )
 from repro.core.platform import Platform
 from repro.core.registry import OpBinding, OpRegistry, global_registry
@@ -53,7 +54,8 @@ log = logging.getLogger("repro.runtime")
 _HOST_ENV_ALLOWLIST = (ENV_VISIBLE, "REPRO_PLATFORM", "REPRO_CHECKPOINT_DIR",
                        "REPRO_COMPILE_CACHE", "REPRO_AUTOTUNE",
                        "REPRO_TUNING_CACHE", "REPRO_PROFILE",
-                       "REPRO_WORKLOAD_PROFILE", "REPRO_SEARCH_BUDGET")
+                       "REPRO_WORKLOAD_PROFILE", "REPRO_SEARCH_BUDGET",
+                       "REPRO_TUNING_MAX_ENTRIES")
 
 
 class DeploymentError(RuntimeError):
@@ -137,6 +139,7 @@ class Runtime:
         autotune_ops: Iterable[str] | None = None,
         autotune_top_k: int = 3,
         search_budget: int | None = None,
+        max_tuned_entries: int | None = None,
         profile: bool | None = None,
     ) -> Container:
         """Run the preparation stages and hand back the executable Container.
@@ -172,6 +175,16 @@ class Runtime:
           search_budget: (None -> REPRO_SEARCH_BUDGET env default) cap on
             how many searches this deploy may pay; misses beyond it bind
             the platform default ("search-budget-exhausted").
+          max_tuned_entries: (None -> REPRO_TUNING_MAX_ENTRIES env
+            default) per-op cap on the geometry-dispatch table — the
+            bounded tuning-state mode.  Each op binds at most this many
+            buckets, hottest first; cached entries beyond the cap are
+            LRU-evicted under pressure (tombstoned, persisted at flush)
+            and surfaced as "cache-evicted-lru" in the SwapReport, so a
+            warmed redeploy over more recorded buckets than the cap
+            provably keeps exactly the K hottest.  bf16 traffic landing
+            on a capped table that only holds fp32 buckets dispatches
+            via the "near-dtype" borrow instead of the shipped default.
           profile: (None -> REPRO_PROFILE env default) captures every op
             invocation's shape bucket + dtype into the site workload
             profile (under jit: once per compiled geometry, at trace
@@ -256,6 +269,8 @@ class Runtime:
                     current_abis[op] = native.abi
             if search_budget is None:
                 search_budget = search_budget_default(self.host_env)
+            if max_tuned_entries is None:
+                max_tuned_entries = tuning_max_entries_default(self.host_env)
             priority = None
             if autotune_ops is None and tune_profile is not None:
                 # profile-driven selection: bind (and therefore search)
@@ -275,12 +290,15 @@ class Runtime:
                 top_k=autotune_top_k,
                 search_budget=search_budget,
                 priority=priority,
+                max_entries=max_tuned_entries,
             )
-            log.info("autotune on: cache %s (%d entries%s%s)",
+            log.info("autotune on: cache %s (%d entries%s%s%s)",
                      cache_path, len(tuning_ctx.cache),
                      ", profile-keyed" if tune_profile is not None else "",
                      f", search budget {search_budget}"
-                     if search_budget is not None else "")
+                     if search_budget is not None else "",
+                     f", table cap {max_tuned_entries}"
+                     if max_tuned_entries is not None else "")
 
         binding = self.registry.bind(ops, platform, native=native_ops,
                                      freeze=freeze, tuning=tuning_ctx)

@@ -122,6 +122,10 @@ def main(argv=None) -> int:
     ap.add_argument("--autotune", action="store_true",
                     help="resolve kernel configs from the site tuning cache "
                          "(or set REPRO_AUTOTUNE=1)")
+    ap.add_argument("--max-tuned-entries", type=int, default=None, metavar="K",
+                    help="per-op cap on the geometry-dispatch table; cold "
+                         "cached buckets beyond it are LRU-evicted "
+                         "(or set REPRO_TUNING_MAX_ENTRIES)")
     args = ap.parse_args(argv)
 
     bundle = make_bundle(args.arch, reduced=True)
@@ -129,7 +133,8 @@ def main(argv=None) -> int:
     container = runtime.deploy(bundle, mesh=make_host_mesh(data=1),
                                native_ops=True if args.native_ops else None,
                                profile=True if args.profile else None,
-                               autotune=True if args.autotune else None)
+                               autotune=True if args.autotune else None,
+                               max_tuned_entries=args.max_tuned_entries)
     cfg = get_config(args.arch).reduced()
 
     server = Server(cfg, container, slots=args.slots, max_len=args.max_len)
@@ -154,18 +159,32 @@ def main(argv=None) -> int:
 def print_dispatch_stats(container) -> None:
     """Per-op geometry-dispatch hit rates after an autotuned run: how many
     compiled geometries resolved their own tuned entry (exact) vs fell
-    back to the nearest bucket or the platform default."""
+    back to the nearest bucket, a dtype-crossing borrow, or the platform
+    default — plus, under a table cap, how full each op's table is and
+    how many cold buckets the bind shed (cache-evicted-lru)."""
     if not container.autotune:
         return
+    reports = {r.op: r for r in container.binding.reports}
     for name in container.binding:
         dispatch = container.binding.impl(name).fn
         stats = getattr(dispatch, "stats", None)
         if not stats or not sum(stats.values()):
             continue
         total = sum(stats.values())
-        print(f"dispatch {name:<18} {total} geometr{'y' if total == 1 else 'ies'}"
-              f" traced: exact={stats['exact']} nearest={stats['nearest']}"
-              f" default={stats['default']} explicit={stats['explicit']}")
+        line = (f"dispatch {name:<18} {total} "
+                f"geometr{'y' if total == 1 else 'ies'} traced:"
+                f" exact={stats['exact']} nearest={stats['nearest']}"
+                f" near-dtype={stats.get('near-dtype', 0)}"
+                f" default={stats['default']} explicit={stats['explicit']}")
+        # impl.config survives the profiled_binding wrap; dispatch.table
+        # would not
+        table = getattr(container.binding.impl(name), "config", None)
+        if table is not None and getattr(table, "max_entries", None):
+            evicted = sum(g.status == "cache-evicted-lru"
+                          for g in reports[name].geometries)
+            line += (f" | table {len(table)}/{table.max_entries}"
+                     + (f" (evicted-lru={evicted})" if evicted else ""))
+        print(line)
 
 
 if __name__ == "__main__":

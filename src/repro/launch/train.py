@@ -111,6 +111,10 @@ def main(argv=None) -> int:
     ap.add_argument("--autotune", action="store_true",
                     help="resolve kernel configs from the site tuning cache "
                          "(or set REPRO_AUTOTUNE=1)")
+    ap.add_argument("--max-tuned-entries", type=int, default=None, metavar="K",
+                    help="per-op cap on the geometry-dispatch table; cold "
+                         "cached buckets beyond it are LRU-evicted "
+                         "(or set REPRO_TUNING_MAX_ENTRIES)")
     args = ap.parse_args(argv)
 
     bundle = make_bundle(args.arch, reduced=args.reduced)
@@ -118,7 +122,8 @@ def main(argv=None) -> int:
     mesh = make_host_mesh(data=args.data_mesh or None)
     container = runtime.deploy(bundle, native_ops=args.native_ops, mesh=mesh,
                                profile=True if args.profile else None,
-                               autotune=True if args.autotune else None)
+                               autotune=True if args.autotune else None,
+                               max_tuned_entries=args.max_tuned_entries)
     print(container.describe())
 
     from repro.configs.base import ModelConfig

@@ -21,6 +21,16 @@ carries a `ConfigTable` of *all* its warmed top-K geometries, and the
 `TunedDispatch` callable resolves each call's shape bucket at trace
 time (exact -> nearest bucket -> platform default) — one deployment,
 many tuned configs, zero searches on a warmed shape-polymorphic path.
+
+PR 4 bounds the lifecycle: tuning state is managed, not append-only.
+`REPRO_TUNING_MAX_ENTRIES` / ``deploy(max_tuned_entries=K)`` caps each
+op's dispatch table at its K hottest buckets, LRU-evicting the rest
+from the cache under pressure ("cache-evicted-lru" in the SwapReport;
+``last_used`` stamps persist in the cache JSON); ``warm --compact``
+GCs the file offline (`compact_lru`); and the resolve chain grows a
+validated dtype-crossing borrow ("near-dtype"): bf16 traffic may use a
+same-structure fp32 bucket's config at `DTYPE_PENALTY` distance once
+it re-passes the VMEM feasibility check for the borrowing dtype.
 """
 
 from repro.tuning.cache import (
@@ -34,12 +44,18 @@ from repro.tuning.cache import (
 )
 from repro.tuning.config import BlockConfig, default_config
 from repro.tuning.dispatch import (
+    DTYPE_PENALTY,
     ConfigTable,
     GeometryOutcome,
     TunedDispatch,
     bucket_distance,
 )
-from repro.tuning.expiry import ExpiryReport, expire_stale
+from repro.tuning.expiry import (
+    ExpiryReport,
+    PressureReport,
+    compact_lru,
+    expire_stale,
+)
 from repro.tuning.profile import (
     ENV_WORKLOAD_PROFILE,
     PROFILE_SCHEMA_VERSION,
@@ -49,14 +65,21 @@ from repro.tuning.profile import (
     resolve_profile_path,
 )
 from repro.tuning.search import Measurement, SearchResult, enumerate_space, measure, search
-from repro.tuning.tuner import OpTuner, TuneEvent, TuneOutcome, TuningContext
+from repro.tuning.tuner import (
+    OpTuner,
+    TuneEvent,
+    TuneOutcome,
+    TuningContext,
+    bucket_validator,
+)
 
 __all__ = [
     "ENV_TUNING_CACHE", "SCHEMA_VERSION", "CacheKey", "TuningCache",
     "bucket_shapes", "platform_fingerprint", "resolve_cache_path",
     "BlockConfig", "default_config",
     "ConfigTable", "GeometryOutcome", "TunedDispatch", "bucket_distance",
-    "ExpiryReport", "expire_stale",
+    "DTYPE_PENALTY", "bucket_validator",
+    "ExpiryReport", "expire_stale", "PressureReport", "compact_lru",
     "ENV_WORKLOAD_PROFILE", "PROFILE_SCHEMA_VERSION", "GeometryKey",
     "WorkloadProfile", "profiled_binding", "resolve_profile_path",
     "Measurement", "SearchResult", "enumerate_space", "measure", "search",

@@ -14,7 +14,13 @@ Properties:
     ignored wholesale, falling back to the built-in defaults;
   * corruption-safe — unparseable files degrade to an empty cache with a
     warning, never an exception (a bad cache must not kill a deployment);
-  * relocatable — REPRO_TUNING_CACHE overrides the default location.
+  * relocatable — REPRO_TUNING_CACHE overrides the default location;
+  * bounded (optional) — ``max_entries`` turns the cache from append-only
+    into a managed LRU: every `get` hit stamps the entry's ``last_used``
+    (persisted in the JSON, so recency survives redeploys), and
+    :meth:`compact` evicts down to the cap, coldest first.  See
+    expiry.compact_lru for the profile-aware sweep and
+    ``python -m repro.tuning.warm --compact`` for the offline GC.
 """
 
 from __future__ import annotations
@@ -26,8 +32,9 @@ import logging
 import math
 import os
 import tempfile
+import time
 from pathlib import Path
-from typing import Any, Mapping, Sequence
+from typing import Any, Iterable, Mapping, Sequence
 
 from repro.tuning.config import BlockConfig
 
@@ -135,15 +142,39 @@ class CacheKey:
 
 
 class TuningCache:
-    """JSON-backed persistent map: CacheKey -> (BlockConfig, metrics)."""
+    """JSON-backed persistent map: CacheKey -> (BlockConfig, metrics).
+
+    ``max_entries`` (optional) bounds the cache: :meth:`save` compacts the
+    merged result down to the cap so the file can never grow past it, and
+    :meth:`compact` may be called explicitly (deploy-time pressure, the
+    ``warm --compact`` GC).  Every live entry carries a ``last_used``
+    stamp — refreshed by `get` hits and `put`s, persisted in the JSON —
+    which is the LRU order eviction walks.
+    """
 
     def __init__(self, path: str | os.PathLike,
-                 entries: Mapping[str, dict] | None = None) -> None:
+                 entries: Mapping[str, dict] | None = None,
+                 max_entries: int | None = None) -> None:
         self.path = Path(path)
         self._entries: dict[str, dict] = dict(entries or {})
         self._evicted: set[str] = set()   # tombstones: keep save() from
         # resurrecting expired entries out of the on-disk copy
+        self._loaded_keys: frozenset[str] = frozenset(self._entries)
+        self._touched: set[str] = set()   # keys put() in THIS process: the
+        # only ones save() may (re)introduce to a file another process has
+        # already evicted them from — so cross-process tombstones hold
+        self._last_stamp = 0.0
+        self.max_entries = max_entries
         self.dirty = False
+
+    def _stamp(self) -> float:
+        """Wall-clock recency stamp, strictly increasing in-process (LRU
+        ordering must hold even when time.time() resolution ties)."""
+        now = time.time()
+        if now <= self._last_stamp:
+            now = self._last_stamp + 1e-6
+        self._last_stamp = now
+        return now
 
     # -- loading -----------------------------------------------------------
     @classmethod
@@ -175,11 +206,34 @@ class TuningCache:
         return cls(p, entries)
 
     # -- access ------------------------------------------------------------
-    def get(self, key: CacheKey) -> BlockConfig | None:
+    def get(self, key: CacheKey, *, touch: bool = True) -> BlockConfig | None:
+        """Config at `key`, stamping ``last_used`` on the hit (persisted on
+        the next save, so LRU recency survives redeploys).  ``touch=False``
+        peeks without refreshing — eviction sweeps must not make an entry
+        look hot by inspecting it."""
         entry = self._entries.get(key.encode())
         if entry is None:
             return None
+        if touch:
+            entry["last_used"] = self._stamp()
+            self.dirty = True
         return BlockConfig.from_dict(entry["config"])
+
+    def touch(self, key: "CacheKey | str") -> None:
+        """Refresh an entry's ``last_used`` without decoding its config
+        (the geometry-dispatch sweep binds entries wholesale)."""
+        encoded = key if isinstance(key, str) else key.encode()
+        entry = self._entries.get(encoded)
+        if entry is not None:
+            entry["last_used"] = self._stamp()
+            self.dirty = True
+
+    def last_used(self, key: "CacheKey | str") -> float:
+        """Recency stamp of an entry (0.0 when absent or never stamped —
+        pre-lifecycle caches sort coldest, which is the right bias)."""
+        encoded = key if isinstance(key, str) else key.encode()
+        entry = self._entries.get(encoded)
+        return float(entry.get("last_used", 0.0)) if entry else 0.0
 
     def metrics(self, key: CacheKey) -> dict:
         entry = self._entries.get(key.encode())
@@ -190,8 +244,10 @@ class TuningCache:
         self._entries[key.encode()] = {
             "config": config.to_dict(),
             "metrics": dict(metrics or {}),
+            "last_used": self._stamp(),
         }
         self._evicted.discard(key.encode())
+        self._touched.add(key.encode())
         self.dirty = True
 
     def raw_keys(self) -> tuple[str, ...]:
@@ -217,9 +273,40 @@ class TuningCache:
         encoded = key if isinstance(key, str) else key.encode()
         existed = self._entries.pop(encoded, None) is not None
         self._evicted.add(encoded)
+        self._touched.discard(encoded)
         if existed:
             self.dirty = True
         return existed
+
+    def compact(self, max_entries: int | None = None, *,
+                protect: Iterable[str] = (),
+                prefer: Iterable[str] = ()) -> list[str]:
+        """Evict (tombstoned) down to ``max_entries``; returns evicted keys.
+
+        Eviction order is the lifecycle policy's mechanics: keys in
+        ``prefer`` go first (the caller marks stale-profile buckets there
+        — see expiry.compact_lru), then coldest ``last_used``; keys in
+        ``protect`` are never evicted, even if that leaves the cache over
+        the cap.  A cap of None falls back to ``self.max_entries``; no cap
+        at all is a no-op (the append-only pre-lifecycle behaviour).
+        """
+        cap = self.max_entries if max_entries is None else max_entries
+        if cap is None or len(self._entries) <= cap:
+            return []
+        protect = frozenset(protect)
+        prefer = frozenset(prefer)
+        victims = sorted(
+            (k for k in self._entries if k not in protect),
+            key=lambda k: (k not in prefer,
+                           float(self._entries[k].get("last_used", 0.0)), k),
+        )
+        evicted: list[str] = []
+        for k in victims:
+            if len(self._entries) <= cap:
+                break
+            self.evict(k)
+            evicted.append(k)
+        return evicted
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -233,10 +320,18 @@ class TuningCache:
 
         The whole load-merge-replace runs under an exclusive sidecar lock:
         two deployments that tuned *different* ops concurrently both keep
-        their winners.  On a same-key conflict this process's entry wins —
-        last writer's measurement, both valid.  Entries evicted in this
-        process (ABI expiry, see expiry.py) are tombstoned and stay gone
-        even if the on-disk copy still holds them.
+        their winners.  On a same-key conflict a key this process *wrote*
+        wins (last writer's measurement, both valid); a key it merely
+        loaded keeps the disk copy — possibly re-measured by a concurrent
+        process — folding in this process's ``last_used`` stamp when that
+        is the fresher recency signal.  Tombstones merge cleanly
+        in both directions: entries evicted in this process (ABI expiry,
+        LRU pressure) stay gone even if the on-disk copy still holds them,
+        and entries another process evicted while we ran stay gone unless
+        this process re-``put`` them (a fresh measurement legitimately
+        resurrects; a mere load-time copy must not).  When ``max_entries``
+        is set, the merged result is compacted before writing, so the
+        file never outgrows the cap through merges.
 
         Raises OSError on unwritable paths; TuningContext.flush downgrades
         that to a warning because a failed persist must not kill a
@@ -248,7 +343,27 @@ class TuningCache:
             if on_disk._entries:
                 kept = {k: v for k, v in on_disk._entries.items()
                         if k not in self._evicted}
-                self._entries = {**kept, **self._entries}
+                merged = dict(kept)
+                for k, v in self._entries.items():
+                    if k in self._touched or k not in self._loaded_keys:
+                        merged[k] = v     # our fresh measurement wins
+                    elif k in kept:
+                        # loaded copy: the disk entry may be fresher (a
+                        # concurrent re-measure), so keep it — but fold in
+                        # our recency stamp so a hit HERE keeps the entry
+                        # hot for eviction ordering everywhere
+                        ours = float(v.get("last_used", 0.0))
+                        if ours > float(merged[k].get("last_used", 0.0)):
+                            merged[k] = {**merged[k], "last_used": ours}
+                    # else: we only loaded it and it vanished from disk — a
+                    # concurrent process's tombstone; respect it
+                self._entries = merged
+            # an empty/missing/corrupt on-disk file is NOT a wipe of our
+            # state: keep this process's entries wholesale (load() already
+            # degrades corruption to empty, and a transient truncation
+            # must not cascade into losing the whole warmed cache)
+            if self.max_entries is not None:
+                self.compact(self.max_entries)
             payload = {"schema": SCHEMA_VERSION, "entries": self._entries}
             fd, tmp = tempfile.mkstemp(dir=self.path.parent,
                                        prefix=self.path.name, suffix=".tmp")
@@ -262,5 +377,11 @@ class TuningCache:
                 except OSError:
                     pass
                 raise
+        self._loaded_keys = frozenset(self._entries)
+        self._touched.clear()
+        # the persisted file now reflects the evictions: drop the
+        # tombstones so a later save by this (long-lived) object cannot
+        # keep killing a key another process legitimately re-measured
+        self._evicted.clear()
         self.dirty = False
         return self.path

@@ -14,9 +14,14 @@ Three pieces:
     `SwapReport` carries.
   * `ConfigTable` — the per-op map geometry -> config plus a fallback
     chain: exact bucket match, else the *nearest* tuned bucket of the
-    same structure, else the platform default.  This is what
-    `OpImpl.config` holds after an autotuned bind (it used to hold a
-    single BlockConfig; `ConfigTable.primary` preserves that view).
+    same structure (same-dtype candidates at raw log2 distance,
+    dtype-crossing candidates at distance + `DTYPE_PENALTY`, validated
+    against the borrowing dtype first — the ``near-dtype`` path), else
+    the platform default.  This is what `OpImpl.config` holds after an
+    autotuned bind (it used to hold a single BlockConfig;
+    `ConfigTable.primary` preserves that view).  ``max_entries`` bounds
+    the table — the lifecycle layer's per-op cap: hottest-first callers
+    keep exactly their K hottest buckets.
   * `TunedDispatch` — the callable the binding exposes.  At trace time
     it buckets the call's operand shapes (the same `bucket_shapes`
     encoding `WorkloadProfile` records and `CacheKey` persists) and
@@ -41,7 +46,14 @@ from typing import Any, Callable, Sequence
 from repro.tuning.cache import bucket_shapes
 from repro.tuning.config import BlockConfig
 
-__all__ = ["GeometryOutcome", "ConfigTable", "TunedDispatch", "bucket_distance"]
+__all__ = ["GeometryOutcome", "ConfigTable", "TunedDispatch", "bucket_distance",
+           "DTYPE_PENALTY"]
+
+# What crossing a dtype costs, in doublings: a bf16 call prefers any
+# same-dtype bucket within 4 doublings of it over an exact-shape fp32
+# bucket, but borrows the fp32 entry rather than fall to the shipped
+# default when its own dtype was never warmed.
+DTYPE_PENALTY = 4.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,7 +64,9 @@ class GeometryOutcome:
     dtype: str
     status: str          # cache-hit / cache-miss-searched / cache-miss-default /
     #                      search-failed-default / cache-expired-searched /
-    #                      search-budget-exhausted / unsynthesizable-default
+    #                      search-budget-exhausted / unsynthesizable-default /
+    #                      cache-evicted-lru (bucket lost its entry to the
+    #                      per-op cap's pressure — reported, not bound)
     config: BlockConfig
     count: float = 0.0   # profile observations (0 = canonical/unprofiled)
 
@@ -98,16 +112,36 @@ class ConfigTable:
     platform fallback used when no tuned geometry is comparable to the
     call's.  Hashable content lives in plain dicts so resolution is a
     lookup, not a scan, on the exact path.
+
+    ``max_entries`` is the bounded mode: only the first K *distinct*
+    geometries enter the table (callers order hottest-first, so the cap
+    keeps exactly the K hottest buckets); overflow outcomes are dropped
+    here — the TuningContext surfaces them as ``cache-evicted-lru``
+    before construction.  ``validate`` guards dtype-crossing borrows:
+    ``(config, shapes, dtype) -> bool`` re-checks the candidate config's
+    feasibility (VMEM working set etc.) against the *borrowing* call's
+    dtype; None (tables built outside a TuningContext) admits any
+    structurally comparable borrow.
     """
 
     def __init__(self, op: str, outcomes: Sequence[GeometryOutcome],
-                 default: BlockConfig) -> None:
+                 default: BlockConfig, *,
+                 validate: Callable[[BlockConfig, str, str], bool] | None = None,
+                 max_entries: int | None = None) -> None:
         self.op = op
-        self.outcomes = tuple(outcomes)
         self.default = default
+        self.validate = validate
+        self.max_entries = max_entries
         self._by_geom: dict[tuple[str, str], BlockConfig] = {}
-        for o in self.outcomes:
-            self._by_geom.setdefault((o.shapes, o.dtype), o.config)
+        kept: list[GeometryOutcome] = []
+        for o in outcomes:
+            geom = (o.shapes, o.dtype)
+            if geom not in self._by_geom and max_entries is not None \
+                    and len(self._by_geom) >= max_entries:
+                continue
+            self._by_geom.setdefault(geom, o.config)
+            kept.append(o)
+        self.outcomes = tuple(kept)
 
     # -- the old single-config view ---------------------------------------
     @property
@@ -120,28 +154,57 @@ class ConfigTable:
     def resolve(self, args: Sequence[Any] | None = None, *,
                 shapes: str | None = None, dtype: str | None = None
                 ) -> tuple[BlockConfig, str]:
-        """(config, how) for a call geometry; how in {exact, nearest, default}.
+        """(config, how); how in {exact, nearest, near-dtype, default}.
 
         Geometry comes from ``args`` (arrays/tracers/ShapeDtypeStructs,
         bucketed like the profile records them) or an explicit
-        (shapes, dtype) bucket pair.
+        (shapes, dtype) bucket pair.  With an explicit ``shapes`` string
+        and ``dtype=None`` the lookup is *dtype-agnostic*: the bucket
+        string carries no dtype, so the table matches any dtype, hottest
+        entry first (it used to silently assume the hottest geometry's
+        dtype, which mis-resolved explicit lookups whenever the table
+        mixed dtypes).
+
+        Candidate ranking on a miss: every structurally comparable tuned
+        bucket competes — same-dtype candidates at their raw log2
+        distance ("nearest"), dtype-crossing candidates at distance +
+        ``DTYPE_PENALTY`` ("near-dtype").  A near-dtype winner must first
+        pass ``validate`` for the borrowing dtype (VMEM re-check); a
+        failed borrow falls through to the next-closest candidate, and
+        only when nothing is comparable does the platform default apply.
         """
         if shapes is None:
             shapes, dtype = bucket_shapes(args or ())
-        elif dtype is None:
-            dtype = self.outcomes[0].dtype if self.outcomes else "none"
+        if dtype is None:
+            for o in self.outcomes:           # hottest-first, any dtype
+                if o.shapes == shapes:
+                    return self._by_geom[(o.shapes, o.dtype)], "exact"
+            best, best_d = None, None
+            for (g_shapes, _), config in self._by_geom.items():
+                d = bucket_distance(shapes, g_shapes)
+                if d is not None and (best_d is None or d < best_d):
+                    best, best_d = config, d
+            return (best, "nearest") if best is not None \
+                else (self.default, "default")
         hit = self._by_geom.get((shapes, dtype))
         if hit is not None:
             return hit, "exact"
-        best, best_d = None, None
+        scored: list[tuple[float, int, str, str, BlockConfig]] = []
         for (g_shapes, g_dtype), config in self._by_geom.items():
-            if g_dtype != dtype:
-                continue
             d = bucket_distance(shapes, g_shapes)
-            if d is not None and (best_d is None or d < best_d):
-                best, best_d = config, d
-        if best is not None:
-            return best, "nearest"
+            if d is None:
+                continue
+            if g_dtype == dtype:
+                scored.append((d, 0, g_shapes, "nearest", config))
+            else:
+                scored.append((d + DTYPE_PENALTY, 1, g_shapes,
+                               "near-dtype", config))
+        scored.sort(key=lambda t: t[:3])
+        for _, _, _, how, config in scored:
+            if how == "near-dtype" and self.validate is not None \
+                    and not self.validate(config, shapes, dtype):
+                continue
+            return config, how
         return self.default, "default"
 
     def __len__(self) -> int:
@@ -167,7 +230,8 @@ class TunedDispatch:
     def __init__(self, fn: Callable[..., Any], table: ConfigTable) -> None:
         self.fn = fn
         self.table = table
-        self.stats = {"exact": 0, "nearest": 0, "default": 0, "explicit": 0}
+        self.stats = {"exact": 0, "nearest": 0, "near-dtype": 0, "default": 0,
+                      "explicit": 0}
         self.__name__ = getattr(fn, "__name__", table.op)
 
     def __call__(self, *args, **kwargs):

@@ -1,4 +1,11 @@
-"""Versioned cache expiry — evict tuned entries for kernels that changed.
+"""Lifecycle sweeps over the tuning cache: ABI expiry and LRU pressure.
+
+Two reasons a cache entry stops deserving its bytes: the kernel it was
+measured on no longer exists at that revision (`expire_stale`), or the
+cache is bounded and the entry is cold (`compact_lru`).  Both sweeps
+tombstone their evictions so a concurrent save cannot resurrect them.
+
+Versioned cache expiry — evict tuned entries for kernels that changed.
 
 Every `TuningCache` entry is keyed by the full ABI string of the kernel
 it was measured against (``op/major:minor/digest``).  When a kernel's
@@ -31,7 +38,7 @@ from typing import Any, Mapping
 from repro.core.abi import AbiError, parse_abi
 from repro.tuning.cache import TuningCache
 
-__all__ = ["ExpiryReport", "expire_stale"]
+__all__ = ["ExpiryReport", "expire_stale", "PressureReport", "compact_lru"]
 
 log = logging.getLogger("repro.tuning")
 
@@ -94,3 +101,70 @@ def expire_stale(cache: TuningCache,
         log.info("tuning cache: expiring %s (tuned for %s, now %s)",
                  abi.name, abi_text, want)
     return ExpiryReport(evicted=tuple(evicted), reasons=tuple(reasons))
+
+
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class PressureReport:
+    """Outcome of one LRU compaction: what was shed, what survived."""
+
+    evicted: tuple[tuple[str, str], ...]   # (op name, encoded cache key)
+    kept: int                              # live entries after the sweep
+    cap: int
+
+    def __len__(self) -> int:
+        return len(self.evicted)
+
+    def describe(self) -> str:
+        if not self.evicted:
+            return (f"compact: cache within cap "
+                    f"({self.kept} entr{'y' if self.kept == 1 else 'ies'} "
+                    f"<= {self.cap})")
+        lines = [f"compact: evicted {len(self.evicted)} cold entr"
+                 f"{'y' if len(self.evicted) == 1 else 'ies'} "
+                 f"({self.kept} kept, cap {self.cap})"]
+        for op, key in self.evicted:
+            lines.append(f"  {op:<18} [{key}]")
+        return "\n".join(lines)
+
+
+def _key_op(encoded: str) -> str:
+    """Op name out of an encoded cache key (the ABI's leading component)."""
+    return encoded.split("|", 1)[0].split("/", 1)[0]
+
+
+def compact_lru(cache: TuningCache, max_entries: int, *,
+                profile: Any = None,
+                protect: Mapping | frozenset | tuple = ()) -> PressureReport:
+    """Shrink `cache` to ``max_entries`` live entries, coldest first.
+
+    The eviction policy prefers *stale-profile* buckets: when a
+    `WorkloadProfile` is given, entries whose (op, shape bucket, dtype)
+    the profile no longer records go before entries traffic still hits,
+    and within each class the oldest ``last_used`` loses first.  Keys in
+    ``protect`` are never evicted (the caller pins, e.g., the geometries
+    it just bound).  Evictions are tombstoned; the caller saves.
+
+    This is the ``python -m repro.tuning.warm --compact`` GC and the
+    library entry point for site cron jobs.
+    """
+    if max_entries < 0:
+        raise ValueError(f"max_entries must be >= 0, got {max_entries}")
+    prefer: tuple[str, ...] = ()
+    if profile is not None and len(profile):
+        recorded = {(geo.op, geo.shapes, geo.dtype)
+                    for geo, _ in profile.top()}
+        prefer = tuple(
+            encoded for encoded in cache.raw_keys()
+            if len(parts := encoded.split("|")) == 4
+            and (_key_op(encoded), parts[2], parts[3]) not in recorded
+        )
+    evicted = cache.compact(max_entries, protect=frozenset(protect),
+                            prefer=prefer)
+    report = PressureReport(
+        evicted=tuple((_key_op(k), k) for k in evicted),
+        kept=len(cache), cap=max_entries,
+    )
+    if len(report):
+        log.info(report.describe())
+    return report

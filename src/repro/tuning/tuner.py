@@ -25,6 +25,7 @@ default).  Per geometry, the outcome vocabulary is unchanged:
   search found nothing -> platform-default config          ("search-failed-default")
   miss, budget spent   -> platform-default config          ("search-budget-exhausted")
   bucket unsynthesizable-> platform-default config         ("unsynthesizable-default")
+  beyond the per-op cap-> entry shed, bucket not bound     ("cache-evicted-lru")
 
 Every geometry's outcome is surfaced in the binding's SwapReport
 (`SwapReport.geometries`), with `SwapReport.tuning` summarizing (the
@@ -57,13 +58,28 @@ from typing import Any, Callable, Iterable, Mapping, Sequence
 
 from repro.tuning.cache import CacheKey, TuningCache, bucket_shapes, platform_fingerprint
 from repro.tuning.config import BlockConfig, default_config
-from repro.tuning.dispatch import ConfigTable, GeometryOutcome, TunedDispatch
+from repro.tuning.dispatch import (
+    ConfigTable,
+    GeometryOutcome,
+    TunedDispatch,
+    _parse_bucket,
+)
 from repro.tuning.search import search
 
 __all__ = ["OpTuner", "TuningContext", "TuneEvent", "TuneOutcome",
-           "search_into_cache"]
+           "search_into_cache", "bucket_validator"]
 
 log = logging.getLogger("repro.tuning")
+
+# Statuses whose geometry holds a live cache entry after resolution
+# (search_into_cache persists even a failed search's default).  The
+# per-op cap budgets THIS state: placeholder outcomes — budget spent,
+# bucket unsynthesizable, search disabled — hold no entry, so they
+# neither consume cap slots nor justify evicting measured state.
+_BACKED_STATUSES = frozenset({
+    "cache-hit", "cache-miss-searched", "cache-expired-searched",
+    "search-failed-default",
+})
 
 
 def search_into_cache(
@@ -110,6 +126,36 @@ def search_into_cache(
     metrics.update(extra_metrics or {})
     cache.put(key, result.best, metrics)
     return result.best, True
+
+
+def bucket_validator(tuner: "OpTuner", platform: Any):
+    """(config, shapes, dtype) -> bool closure over the tuner's feasibility
+    predicate, for dtype-crossing borrows in `ConfigTable.resolve`.
+
+    Rebuilds the bucket as ShapeDtypeStructs carrying the *borrowing*
+    call's dtype (the predicates only read shapes/dtypes, so nothing is
+    allocated) and re-runs the VMEM/divisibility check — a config tuned
+    for fp32 must re-qualify for the bf16 geometry before it is lent out.
+    Returns None when the tuner has no predicate (any structural borrow
+    is admissible).
+    """
+    if tuner.feasible is None:
+        return None
+
+    def validate(config: BlockConfig, shapes: str, dtype: str) -> bool:
+        import jax
+
+        parts = _parse_bucket(shapes)
+        if parts is None:
+            return False
+        try:
+            args = tuple(jax.ShapeDtypeStruct(p, dtype) if p else 0
+                         for p in parts)
+            return bool(tuner.feasible(config, platform, args))
+        except Exception:
+            return False
+
+    return validate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +261,16 @@ class TuningContext:
       priority        op -> rank (1 = hottest) from profile-driven op
                       ordering; recorded in each TuneOutcome so the
                       SwapReport shows where the search budget went.
+      max_entries     per-op dispatch-table cap (the bounded lifecycle
+                      mode; Runtime.deploy(max_tuned_entries=) /
+                      REPRO_TUNING_MAX_ENTRIES).  Each op binds at most
+                      this many geometries — the hottest first — and any
+                      further cached bucket is *evicted* under pressure:
+                      tombstoned out of the cache and surfaced as
+                      "cache-evicted-lru" in the SwapReport, so a
+                      long-lived site serving shape-diverse traffic keeps
+                      bounded tuning state instead of accreting every
+                      bucket it ever saw.  None (default) is unbounded.
 
     After construction, ``expiry`` holds the sweep's ExpiryReport (or
     None) and ``events`` accumulates one TuneEvent per applied
@@ -233,6 +289,7 @@ class TuningContext:
         top_k: int = 3,
         search_budget: int | None = None,
         priority: Mapping[str, int] | None = None,
+        max_entries: int | None = None,
     ) -> None:
         self.cache = cache
         self.platform = platform
@@ -241,6 +298,7 @@ class TuningContext:
         self.profile = profile
         self.top_k = max(int(top_k), 1)
         self.search_budget = search_budget
+        self.max_entries = None if max_entries is None else max(int(max_entries), 1)
         self.searches_spent = 0
         self.priority = dict(priority) if priority else None
         self.events: list[TuneEvent] = []
@@ -319,6 +377,23 @@ class TuningContext:
         return GeometryOutcome(shapes=shapes, dtype=dtype, status=status,
                                config=config, count=count)
 
+    def _evict_under_pressure(
+        self, name: str, impl: Any, shapes: str, dtype: str, count: float,
+        config: BlockConfig,
+    ) -> GeometryOutcome:
+        """Shed one bucket beyond the per-op cap: tombstone its cache entry
+        and report it as "cache-evicted-lru" (carrying the config it loses,
+        so the EXPERIMENTS log records what a re-warm would have to redo)."""
+        key = self._key(impl, shapes, dtype)
+        self.cache.evict(key)
+        self.events.append(TuneEvent(op=name, status="cache-evicted-lru",
+                                     key=key.encode(), config=config))
+        log.info("tune %-18s %-28s cache-evicted-lru (cap %s)", name,
+                 shapes or "<scalar>", self.max_entries)
+        return GeometryOutcome(shapes=shapes, dtype=dtype,
+                               status="cache-evicted-lru", config=config,
+                               count=count)
+
     def apply(self, name: str, impl: Any) -> tuple[Any, TuneOutcome | None]:
         """Resolve one chosen impl; returns (impl', TuneOutcome | None).
 
@@ -334,12 +409,24 @@ class TuningContext:
              the profile's current top-K still binds hot.
 
         The model calls ``binding[op]`` unchanged; per-call geometry
-        picks its entry at trace time (exact -> nearest -> default), and
-        an explicit ``config=`` kwarg still wins inside the kernel.
+        picks its entry at trace time (exact -> nearest -> near-dtype ->
+        default), and an explicit ``config=`` kwarg still wins inside the
+        kernel.
+
+        With ``max_entries`` set (the bounded lifecycle mode), the cap
+        budgets the op's *entry-backed* state at K buckets: profiled
+        candidates beyond the cap are never searched (their warmed
+        entries may still bind when placeholder outcomes — budget spent,
+        unsynthesizable — leave slots free), and every measured bucket
+        beyond the K kept is evicted from the cache under pressure,
+        surfaced as "cache-evicted-lru" geometries in the report (with
+        the config it loses), so the SwapReport shows exactly which cold
+        state the cap shed.
         """
         tuner: OpTuner | None = getattr(impl, "tuner", None)
         if tuner is None:
             return impl, None
+        cap = self.max_entries
         geometries: list[tuple[str, str, float, bool]] = []
         if self.profile is not None:
             for geo, count in self.profile.top(op=name, k=self.top_k):
@@ -347,6 +434,8 @@ class TuningContext:
         if not geometries:
             shapes, dtype = bucket_shapes(tuner.workload_spec(self.platform))
             geometries.append((shapes, dtype, 0.0, False))
+        overflow = [] if cap is None else geometries[cap:]
+        geometries = geometries if cap is None else geometries[:cap]
         outcomes = [
             self._resolve_geometry(name, impl, tuner, shapes, dtype, count,
                                    profiled=profiled)
@@ -354,22 +443,63 @@ class TuningContext:
         ]
         # a profile whose every bucket is foreign to this op must not leave
         # the op untuned: fall back to the canonical geometry, like PR 2 did
+        # — inserted FIRST, so a table cap trims the unsynthesizable
+        # placeholders (all default configs), never the one real config
         if all(o.status == "unsynthesizable-default" for o in outcomes):
             shapes, dtype = bucket_shapes(tuner.workload_spec(self.platform))
             if (shapes, dtype) not in {(o.shapes, o.dtype) for o in outcomes}:
-                outcomes.append(self._resolve_geometry(
+                outcomes.insert(0, self._resolve_geometry(
                     name, impl, tuner, shapes, dtype, 0.0, profiled=False))
-        # sweep: already-warmed entries beyond the profiled top-K bind too
+        # sweep: every other already-warmed entry is a candidate for the
+        # remaining entry-backed slots — profiled buckets beyond the cap
+        # first (hottest first; never searched, but an existing entry may
+        # still bind), then cold entries most-recently-used first, so a
+        # cap keeps the hottest/still-warm state and sheds the rest
+        fp = platform_fingerprint(self.platform)
         seen = {(o.shapes, o.dtype) for o in outcomes}
-        for (shapes, dtype), config in sorted(
-                self.cache.entries_for(str(impl.abi),
-                                       platform_fingerprint(self.platform)).items()):
-            if (shapes, dtype) in seen:
-                continue
-            outcomes.append(GeometryOutcome(shapes=shapes, dtype=dtype,
-                                            status="cache-hit", config=config))
-        table = ConfigTable(name, outcomes,
-                            default=default_config(name, self.platform))
+        entries = self.cache.entries_for(str(impl.abi), fp)
+        pool: list[tuple[str, str, BlockConfig, float]] = []
+        for shapes, dtype, count, _ in overflow:
+            if (shapes, dtype) not in seen and (shapes, dtype) in entries:
+                pool.append((shapes, dtype, entries[shapes, dtype], count))
+                seen.add((shapes, dtype))
+        cold = [(shapes, dtype, config, 0.0) for (shapes, dtype), config
+                in entries.items() if (shapes, dtype) not in seen]
+        cold.sort(key=lambda t: (-self.cache.last_used(
+            self._key(impl, t[0], t[1])), t[0], t[1]))
+        pool += cold
+        slots = sum(o.status in _BACKED_STATUSES for o in outcomes)
+        evicted: list[GeometryOutcome] = []
+        bound_swept: list[tuple[str, str]] = []
+        for shapes, dtype, config, count in pool:
+            if cap is None or slots < cap:
+                outcomes.append(GeometryOutcome(shapes=shapes, dtype=dtype,
+                                                status="cache-hit",
+                                                config=config, count=count))
+                bound_swept.append((shapes, dtype))
+                slots += 1
+            else:
+                evicted.append(self._evict_under_pressure(
+                    name, impl, shapes, dtype, count, config))
+        # refresh the recency of the swept entries this bind uses —
+        # coldest first, so the fresh stamps PRESERVE their relative LRU
+        # order instead of inverting it for the next eviction pass
+        for shapes, dtype in reversed(bound_swept):
+            self.cache.touch(self._key(impl, shapes, dtype))
+        table_outcomes = outcomes
+        if cap is not None:
+            # entry-backed outcomes first: the table cap must keep every
+            # real config and trim only default-config placeholders (whose
+            # buckets then resolve via nearest/near-dtype, a strictly
+            # better answer than a pinned shipped default)
+            table_outcomes = (
+                [o for o in outcomes if o.status in _BACKED_STATUSES]
+                + [o for o in outcomes if o.status not in _BACKED_STATUSES])
+        table = ConfigTable(name, table_outcomes,
+                            default=default_config(name, self.platform),
+                            validate=bucket_validator(tuner, self.platform),
+                            max_entries=cap)
+        outcomes = outcomes + evicted       # report shows what was shed
         statuses = [o.status for o in outcomes]
         if len(set(statuses)) == 1:
             summary = statuses[0]

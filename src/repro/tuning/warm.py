@@ -10,11 +10,13 @@ observed workloads, instead of at deploy time against canonical examples.
     python -m repro.tuning.warm [--profile PATH] [--cache PATH]
                                 [--platform NAME] [--top K] [--ops a,b]
                                 [--decay FACTOR]
+    python -m repro.tuning.warm --compact [--max-entries N] [--decay FACTOR]
 
 Environment:
   REPRO_WORKLOAD_PROFILE  profile location (same default as capture).
   REPRO_TUNING_CACHE      cache location (same default as deploy).
   REPRO_PLATFORM          platform override; else device detection.
+  REPRO_TUNING_MAX_ENTRIES  default bound for ``--compact``.
 
 Per (op, geometry) outcome, printed and returned by `warm_cache`:
   warmed            searched and persisted a winner
@@ -39,6 +41,13 @@ deploy discover it.
 FACTOR, sub-floor entries dropped, file rewritten): traffic recorded
 after the decay lands at full weight, so shifted workloads re-rank the
 buckets instead of being outvoted by stale history forever.
+
+``--compact`` is the cache GC — the offline half of the bounded
+tuning-state lifecycle: shrink the cache file to ``--max-entries`` (or
+``REPRO_TUNING_MAX_ENTRIES``) live entries, evicting stale-profile
+buckets first and then the coldest ``last_used``, tombstoned under the
+same file lock deploys merge with.  Combine with ``--decay`` to age the
+profile in the same maintenance pass.
 
 ``--selftest`` runs the whole capture -> warm -> redeploy loop against
 temp files on the ``pod-sim`` platform (interpret-mode kernels, no TPU
@@ -176,7 +185,8 @@ def warm_cache(
 
 
 # --------------------------------------------------------------------------- #
-def _selftest() -> int:
+def _selftest() -> int:   # pragma: no cover — runs as its own CI job
+    # (`warm --selftest` in the docs workflow), not under pytest
     """capture (2+ buckets per op) -> warm -> one shape-polymorphic
     redeploy on pod-sim; 0 iff EVERY captured bucket binds cache-hit
     (zero misses, zero searches), the dispatch resolves each live
@@ -297,6 +307,40 @@ def _selftest() -> int:
     return 0
 
 
+def _compact(cache_path: Path, profile_path: Path,
+             max_entries: int | None, *, decay: float | None = None) -> int:
+    """The ``--compact`` GC: bound the cache file, preferring to shed
+    buckets the (optionally freshly decayed) profile no longer records."""
+    from repro.core.env import tuning_max_entries_default
+    from repro.tuning.expiry import compact_lru
+
+    if max_entries is None:
+        max_entries = tuning_max_entries_default()
+    if max_entries is None or max_entries < 1:
+        print("--compact needs a bound: pass --max-entries N or set "
+              "REPRO_TUNING_MAX_ENTRIES")
+        return 2
+    profile = WorkloadProfile.load(profile_path)
+    if decay is not None and len(profile):
+        before = len(profile)
+        dropped = profile.decay(decay)
+        profile.save()
+        print(f"decayed profile by {decay:g}: {before} -> {len(profile)} "
+              f"geometries ({dropped} aged out)")
+    cache = TuningCache.load(cache_path)
+    if not len(cache):
+        print(f"nothing to compact: cache {cache_path} is empty or missing")
+        return 0
+    report = compact_lru(cache, max_entries,
+                         profile=profile if len(profile) else None)
+    cache.save()
+    print(report.describe())
+    print(f"cache {cache_path}: {report.kept} entr"
+          f"{'y' if report.kept == 1 else 'ies'} kept "
+          f"(cap {max_entries}, {len(report)} evicted)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Pre-warm the tuning cache from a captured workload profile.")
@@ -314,6 +358,12 @@ def main(argv=None) -> int:
                     help="age profile counts by FACTOR in (0,1) before "
                          "ranking (and persist the aged profile): lets "
                          "shifted traffic re-rank the buckets")
+    ap.add_argument("--compact", action="store_true",
+                    help="GC the cache instead of warming: LRU-evict down "
+                         "to --max-entries (stale-profile buckets first)")
+    ap.add_argument("--max-entries", type=int, default=None, metavar="N",
+                    help="bound for --compact (default: "
+                         "REPRO_TUNING_MAX_ENTRIES)")
     ap.add_argument("--selftest", action="store_true",
                     help="run the capture->warm->redeploy loop on pod-sim")
     args = ap.parse_args(argv)
@@ -322,13 +372,18 @@ def main(argv=None) -> int:
     if args.selftest:
         return _selftest()
 
+    profile_path = Path(args.profile) if args.profile else resolve_profile_path()
+    cache_path = Path(args.cache) if args.cache else resolve_cache_path()
+
+    if args.compact:
+        return _compact(cache_path, profile_path, args.max_entries,
+                        decay=args.decay)
+
     from repro.core.env import resolve_platform
     from repro.core.platform import PLATFORMS
 
     platform = (PLATFORMS[args.platform] if args.platform
                 else resolve_platform())
-    profile_path = Path(args.profile) if args.profile else resolve_profile_path()
-    cache_path = Path(args.cache) if args.cache else resolve_cache_path()
 
     profile = WorkloadProfile.load(profile_path)
     if not len(profile):

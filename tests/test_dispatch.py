@@ -80,14 +80,105 @@ def test_config_table_fallback_chain_per_branch():
     assert (cfg["block"], how) == (8, "nearest")
     cfg, how = table.resolve(shapes="256x32,32", dtype="float32")
     assert (cfg["block"], how) == (64, "nearest")
-    # default: structurally foreign (or dtype-foreign) geometry
+    # default: structurally foreign geometry
     cfg, how = table.resolve(shapes="16x16", dtype="float32")
     assert (cfg["block"], how) == (2, "default")
+    # near-dtype: bf16 traffic with only fp32-warmed buckets borrows the
+    # same-structure entry at a distance penalty instead of the default
     cfg, how = table.resolve(shapes="8x32,32", dtype="bfloat16")
-    assert (cfg["block"], how) == (2, "default")
+    assert (cfg["block"], how) == (8, "near-dtype")
     # primary is the hottest geometry's config (the old top-1 view)
     assert table.primary["block"] == 64
     assert len(table) == 2 and "+1 more" in str(table)
+
+
+def test_near_dtype_borrow_is_validated_and_penalized():
+    from repro.tuning import DTYPE_PENALTY
+
+    # a same-dtype bucket within the penalty radius beats an exact-shape
+    # foreign-dtype bucket; beyond it, the borrow wins
+    table = ConfigTable(
+        "scale",
+        [
+            GeometryOutcome(shapes="8x32,32", dtype="bfloat16",
+                            status="cache-hit",
+                            config=BlockConfig.make(block=16), count=5),
+            GeometryOutcome(shapes="64x32,32", dtype="float32",
+                            status="cache-hit",
+                            config=BlockConfig.make(block=64), count=3),
+        ],
+        default=BlockConfig.make(block=2),
+    )
+    # bf16 query at 16x32,32: own-dtype neighbour is 1 doubling away,
+    # the fp32 bucket 2 + DTYPE_PENALTY — own dtype wins
+    cfg, how = table.resolve(shapes="16x32,32", dtype="bfloat16")
+    assert (cfg["block"], how) == (16, "nearest")
+    # fp32 query at 64x32,32 hits exactly despite the hotter bf16 entry
+    cfg, how = table.resolve(shapes="64x32,32", dtype="float32")
+    assert (cfg["block"], how) == (64, "exact")
+    assert DTYPE_PENALTY > 0
+
+    # the validator gates the borrow: a config that fails the borrowing
+    # dtype's feasibility check falls through to the next candidate
+    rejected = []
+
+    def validate(config, shapes, dtype):
+        rejected.append((str(config), shapes, dtype))
+        return config["block"] <= 16
+
+    gated = ConfigTable(
+        "scale",
+        [GeometryOutcome(shapes="8x32,32", dtype="float32",
+                         status="cache-hit",
+                         config=BlockConfig.make(block=64), count=1)],
+        default=BlockConfig.make(block=2),
+        validate=validate,
+    )
+    cfg, how = gated.resolve(shapes="8x32,32", dtype="bfloat16")
+    assert (cfg["block"], how) == (2, "default")     # borrow refused
+    assert rejected == [("block=64", "8x32,32", "bfloat16")]
+
+
+def test_resolve_shapes_without_dtype_is_dtype_agnostic():
+    """Regression: an explicit ``shapes=`` lookup with no ``dtype`` used to
+    assume the hottest geometry's dtype, so a bucket tuned under any OTHER
+    dtype mis-resolved to a foreign nearest entry."""
+    table = ConfigTable(
+        "scale",
+        [
+            GeometryOutcome(shapes="64x32,32", dtype="float32",
+                            status="cache-hit",
+                            config=BlockConfig.make(block=64), count=9),
+            GeometryOutcome(shapes="8x32,32", dtype="bfloat16",
+                            status="cache-hit",
+                            config=BlockConfig.make(block=8), count=1),
+        ],
+        default=BlockConfig.make(block=2),
+    )
+    # the bf16-tuned bucket is found even though the hottest entry is fp32
+    cfg, how = table.resolve(shapes="8x32,32")
+    assert (cfg["block"], how) == (8, "exact")
+    # unseen bucket: nearest over ALL dtypes, no penalty (dtype unknown)
+    cfg, how = table.resolve(shapes="16x32,32")
+    assert (cfg["block"], how) == (8, "nearest")
+    # structurally foreign still defaults
+    assert table.resolve(shapes="4")[1] == "default"
+
+
+def test_config_table_bounded_mode_keeps_head():
+    outcomes = [
+        GeometryOutcome(shapes=f"{2 ** i}x32,32", dtype="float32",
+                        status="cache-hit",
+                        config=BlockConfig.make(block=2 ** i), count=10 - i)
+        for i in range(4)
+    ]
+    table = ConfigTable("scale", outcomes, default=BlockConfig.make(block=2),
+                        max_entries=2)
+    assert len(table) == 2
+    assert {o.shapes for o in table.outcomes} == {"1x32,32", "2x32,32"}
+    # a trimmed bucket now resolves through the fallback chain
+    cfg, how = table.resolve(shapes="8x32,32", dtype="float32")
+    assert how == "nearest" and cfg["block"] == 2
 
 
 def test_config_table_resolve_from_args():
@@ -175,8 +266,8 @@ def test_dispatch_under_jit_distinct_geometries_no_retrace_blowup(tmp_path):
     dispatch = binding.impl("scale").fn
     assert isinstance(dispatch, TunedDispatch)
     # 2 compiled geometries -> exactly 2 resolutions despite 5 calls
-    assert dispatch.stats == {"exact": 2, "nearest": 0, "default": 0,
-                              "explicit": 0}
+    assert dispatch.stats == {"exact": 2, "nearest": 0, "near-dtype": 0,
+                              "default": 0, "explicit": 0}
     assert dispatch.hit_rate == 1.0
 
 

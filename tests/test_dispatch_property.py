@@ -1,0 +1,146 @@
+"""Property-based invariants for geometry dispatch (hypothesis).
+
+`bucket_distance` must behave like a metric on structure-matched buckets
+(symmetry, identity-is-zero) and return None — never a number — for
+structurally incomparable ones; `ConfigTable.resolve` must be consistent
+with it (the nearest-neighbour fallback really picks a minimum-distance
+bucket); and the dtype-crossing borrow must never hand out a config the
+borrowing dtype's feasibility check rejects.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.tuning import (  # noqa: E402
+    BlockConfig,
+    ConfigTable,
+    GeometryOutcome,
+    bucket_distance,
+)
+
+_dim = st.integers(min_value=0, max_value=10).map(lambda e: 2 ** e)
+_shape = st.lists(_dim, min_size=1, max_size=3)
+_bucket = st.lists(_shape, min_size=1, max_size=3).map(
+    lambda shapes: ",".join("x".join(str(d) for d in s) for s in shapes)
+)
+
+
+@st.composite
+def _matched(draw, n_min=1, n_max=5):
+    """A query bucket plus n tuned buckets, all over ONE structure (same
+    arg count and ranks), so every pair is comparable."""
+    ranks = draw(st.lists(st.integers(1, 3), min_size=1, max_size=3))
+
+    def bucket():
+        return ",".join(
+            "x".join(str(2 ** draw(st.integers(0, 10))) for _ in range(r))
+            for r in ranks
+        )
+
+    n = draw(st.integers(n_min, n_max))
+    return [bucket() for _ in range(n)], bucket()
+
+
+@given(_bucket, _bucket)
+@settings(max_examples=80, deadline=None)
+def test_bucket_distance_symmetry(a, b):
+    assert bucket_distance(a, b) == bucket_distance(b, a)
+
+
+@given(_bucket)
+@settings(max_examples=50, deadline=None)
+def test_bucket_distance_identity_is_zero(a):
+    assert bucket_distance(a, a) == 0.0
+
+
+@given(_matched())
+@settings(max_examples=80, deadline=None)
+def test_structure_matched_buckets_are_always_comparable(data):
+    buckets, query = data
+    for b in buckets:
+        d = bucket_distance(query, b)
+        assert d is not None and d >= 0.0
+
+
+@given(_matched())
+@settings(max_examples=80, deadline=None)
+def test_nearest_neighbor_consistency(data):
+    """resolve() agrees with bucket_distance: an exact bucket resolves to
+    its own config, anything else to a minimum-distance tuned bucket."""
+    buckets, query = data
+    table = ConfigTable(
+        "op",
+        [GeometryOutcome(shapes=b, dtype="float32", status="cache-hit",
+                         config=BlockConfig.make(block=i + 1),
+                         count=len(buckets) - i)
+         for i, b in enumerate(buckets)],
+        default=BlockConfig.make(block=999),
+    )
+    cfg, how = table.resolve(shapes=query, dtype="float32")
+    assert cfg["block"] != 999                  # comparable => never default
+    chosen = buckets[cfg["block"] - 1]
+    if query in buckets:
+        assert how == "exact" and chosen == query
+    else:
+        assert how == "nearest"
+        dists = {bucket_distance(query, b) for b in buckets}
+        assert bucket_distance(query, chosen) == min(dists)
+
+
+@given(_matched(), st.integers(2, 64))
+@settings(max_examples=80, deadline=None)
+def test_borrowed_config_never_exceeds_vmem_for_borrowing_dtype(data, budget):
+    """The near-dtype acceptance property: every tuned bucket is fp32, the
+    query is bf16, and the validator models a VMEM budget in the
+    borrowing dtype — whatever resolve() hands back either passed that
+    check or is the (never-validated) platform default."""
+    buckets, query = data
+
+    def validate(config, shapes, dtype):
+        itemsize = {"float32": 4, "bfloat16": 2}[dtype]
+        return config["block"] * itemsize <= budget
+
+    table = ConfigTable(
+        "op",
+        [GeometryOutcome(shapes=b, dtype="float32", status="cache-hit",
+                         config=BlockConfig.make(block=i + 1),
+                         count=len(buckets) - i)
+         for i, b in enumerate(buckets)],
+        default=BlockConfig.make(block=10 ** 6),
+        validate=validate,
+    )
+    cfg, how = table.resolve(shapes=query, dtype="bfloat16")
+    assert how in ("near-dtype", "default")     # no bf16 entries exist
+    if how == "near-dtype":
+        assert validate(cfg, query, "bfloat16")
+    else:
+        # default only when EVERY structural candidate failed validation
+        assert all(not validate(BlockConfig.make(block=i + 1), query,
+                                "bfloat16")
+                   for i in range(len(buckets)))
+
+
+@given(_matched(n_min=2))
+@settings(max_examples=60, deadline=None)
+def test_bounded_table_resolves_within_kept_head(data):
+    """Bounded-mode invariant: a capped table only ever resolves to one of
+    the K hottest (first-listed) buckets' configs, never a trimmed one."""
+    buckets, query = data
+    cap = max(1, len(set(buckets)) - 1)
+    table = ConfigTable(
+        "op",
+        [GeometryOutcome(shapes=b, dtype="float32", status="cache-hit",
+                         config=BlockConfig.make(block=i + 1),
+                         count=len(buckets) - i)
+         for i, b in enumerate(buckets)],
+        default=BlockConfig.make(block=999),
+        max_entries=cap,
+    )
+    assert len(table) <= cap
+    kept_configs = {o.config["block"] for o in table.outcomes}
+    cfg, how = table.resolve(shapes=query, dtype="float32")
+    if how != "default":
+        assert cfg["block"] in kept_configs

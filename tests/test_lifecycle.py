@@ -1,0 +1,677 @@
+"""Bounded tuning-state lifecycle: eviction pressure, compaction, soak.
+
+The paper's claim is that a site-adapted runtime keeps containers fast
+*indefinitely*; before this layer the tuning state only ever grew.  This
+suite covers the managed lifecycle end to end:
+
+  * LRU mechanics — ``last_used`` stamped on hits, persisted in the JSON,
+    compaction evicts coldest-first with protect/prefer knobs;
+  * a traffic soak — N "days" of shifting traffic (profile decay + warm +
+    capped deploy in a loop) with the invariants a long-lived deployment
+    needs: dispatch-table size stays <= cap, live-traffic hit rate stays
+    high, and eviction never sheds the currently hottest bucket;
+  * the acceptance loop — REPRO_TUNING_MAX_ENTRIES=K through a real
+    Runtime.deploy binds exactly the K hottest warmed buckets and routes
+    bf16 traffic over fp32-only state via the near-dtype borrow;
+  * concurrency — two processes warming one cache under file_lock lose
+    nothing and corrupt nothing; tombstones merge cleanly across writers;
+  * the ``warm --compact`` GC CLI.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core.abi import AbiString
+from repro.core.platform import POD_SIM, Platform
+from repro.core.registry import ImplKind, OpImpl, OpRegistry
+from repro.core.runtime import Runtime
+from repro.kernels.ops import ABIS, register_all
+from repro.tuning import (
+    BlockConfig,
+    CacheKey,
+    OpTuner,
+    TuningCache,
+    TuningContext,
+    WorkloadProfile,
+    compact_lru,
+    platform_fingerprint,
+)
+from repro.tuning.warm import warm_cache
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+FAKE_SIM = Platform(
+    name="fake-sim",
+    hardware=POD_SIM.hardware,
+    mesh_shape=(1,),
+    mesh_axes=("data",),
+    native_features=frozenset({"pallas_interpret"}),
+)
+
+_ABI = AbiString.make("scale", {"args": ["x"]})
+
+
+def _synth(platform, shapes, dtype):
+    parts = [p for p in shapes.split(",") if p]
+    try:
+        dims = tuple(int(d) for d in parts[0].split("x"))
+    except ValueError:
+        return None
+    return (jnp.zeros(dims, jnp.dtype(dtype)),)
+
+
+def _scale_registry():
+    """A tunable 'scale' op whose searches are instant — the deterministic
+    stand-in for a warmed site (same idiom as test_dispatch)."""
+    reg = OpRegistry()
+    reg.register(OpImpl(abi=_ABI, kind=ImplKind.REFERENCE,
+                        fn=lambda x: x, provider="ref"))
+    tuner = OpTuner(op="scale", space={"block": (2, 3)},
+                    example_args=lambda platform: (jnp.zeros((4, 4)),),
+                    args_from_shapes=_synth, iters=1, warmup=0)
+    reg.register(OpImpl(
+        abi=_ABI, kind=ImplKind.NATIVE,
+        fn=lambda x, config=None: x * (config.get("block", 1)
+                                       if config is not None else 1),
+        requires_feature="pallas_interpret", provider="fake-native",
+        tuner=tuner,
+    ))
+    return reg
+
+
+def _key(shapes, dtype="float32", abi=str(_ABI),
+         platform=None):
+    return CacheKey(abi=abi,
+                    platform=platform or platform_fingerprint(FAKE_SIM),
+                    shapes=shapes, dtype=dtype)
+
+
+# ------------------------------------------------------------ LRU mechanics --
+
+
+def test_last_used_stamped_on_hits_and_persisted(tmp_path):
+    cache = TuningCache(tmp_path / "t.json")
+    k = _key("4x4")
+    cache.put(k, BlockConfig.make(block=3))
+    t0 = cache.last_used(k)
+    assert t0 > 0
+    assert cache.get(k) is not None
+    assert cache.last_used(k) > t0            # the hit refreshed it
+    t1 = cache.last_used(k)
+    assert cache.get(k, touch=False) is not None
+    assert cache.last_used(k) == t1           # a peek did not
+    cache.save()
+    reloaded = TuningCache.load(tmp_path / "t.json")
+    assert reloaded.last_used(k) == t1        # recency survives redeploys
+    assert reloaded.last_used(_key("8x8")) == 0.0
+
+
+def test_compact_evicts_coldest_first(tmp_path):
+    cache = TuningCache(tmp_path / "t.json")
+    keys = [_key(f"{2 ** i}x4") for i in range(4)]
+    for i, k in enumerate(keys):
+        cache.put(k, BlockConfig.make(block=i + 1))
+    cache.get(keys[0])                        # oldest entry becomes newest
+    evicted = cache.compact(2)
+    assert set(evicted) == {keys[1].encode(), keys[2].encode()}
+    assert cache.get(keys[0], touch=False) is not None
+    assert cache.get(keys[3], touch=False) is not None
+    assert cache.compact(2) == []             # already within the cap
+    # evictions are tombstoned: a save cannot resurrect them from disk
+    cache.save()
+    assert len(TuningCache.load(tmp_path / "t.json")) == 2
+
+
+def test_compact_protect_and_prefer(tmp_path):
+    cache = TuningCache(tmp_path / "t.json")
+    keys = [_key(f"{2 ** i}x4") for i in range(4)]
+    for i, k in enumerate(keys):
+        cache.put(k, BlockConfig.make(block=i + 1))
+    # protect the coldest entry: everything else goes before it
+    evicted = cache.compact(1, protect={keys[0].encode()})
+    assert keys[0].encode() not in evicted and len(cache) == 1
+    # prefer beats recency: the newest entry is marked stale and goes first
+    cache2 = TuningCache(tmp_path / "t2.json")
+    for i, k in enumerate(keys):
+        cache2.put(k, BlockConfig.make(block=i + 1))
+    evicted = cache2.compact(3, prefer={keys[3].encode()})
+    assert evicted == [keys[3].encode()]
+
+
+def test_save_enforces_cache_cap_through_merges(tmp_path):
+    path = tmp_path / "t.json"
+    a = TuningCache(path)
+    for i in range(3):
+        a.put(_key(f"{2 ** i}x4"), BlockConfig.make(block=1))
+    a.save()
+    b = TuningCache.load(path)
+    b.max_entries = 4
+    for i in range(3, 6):
+        b.put(_key(f"{2 ** i}x4"), BlockConfig.make(block=1))
+    b.save()                                  # merge would hold 6; cap is 4
+    final = TuningCache.load(path)
+    assert len(final) == 4
+    # the survivors are the most recently used (b's fresh puts + newest of a)
+    for i in range(3, 6):
+        assert final.get(_key(f"{2 ** i}x4"), touch=False) is not None
+
+
+def test_compact_lru_prefers_stale_profile_buckets(tmp_path):
+    cache = TuningCache(tmp_path / "t.json")
+    hot, lukewarm, stale1, stale2 = (_key("4x4"), _key("8x4"),
+                                     _key("16x4"), _key("32x4"))
+    for k in (stale1, stale2, hot, lukewarm):   # stale ones are OLDEST too
+        cache.put(k, BlockConfig.make(block=2))
+    profile = WorkloadProfile(tmp_path / "w.json")
+    profile.record("scale", (jnp.zeros((4, 4)),), weight=5)
+    profile.record("scale", (jnp.zeros((8, 4)),), weight=1)
+    report = compact_lru(cache, 2, profile=profile)
+    assert {op for op, _ in report.evicted} == {"scale"}
+    assert {k for _, k in report.evicted} == {stale1.encode(), stale2.encode()}
+    assert report.kept == 2 and report.cap == 2
+    assert "evicted 2" in report.describe()
+    # within cap: clean report
+    assert len(compact_lru(cache, 2, profile=profile)) == 0
+    with pytest.raises(ValueError):
+        compact_lru(cache, -1)
+
+
+# ------------------------------------------------------- eviction pressure --
+
+
+def test_capped_bind_keeps_k_hottest_and_sheds_the_rest(tmp_path):
+    """A warmed redeploy over more buckets than the cap binds exactly the
+    K hottest; shed buckets surface as cache-evicted-lru and leave the
+    cache (tombstoned, so the persisted file shrinks too)."""
+    reg = _scale_registry()
+    cache = TuningCache(tmp_path / "t.json")
+    for rows in (4, 8, 16, 32):
+        cache.put(_key(f"{rows}x4"), BlockConfig.make(block=3))
+    prof = WorkloadProfile(tmp_path / "w.json")
+    prof.record("scale", (jnp.zeros((4, 4)),), weight=9)
+    prof.record("scale", (jnp.zeros((8, 4)),), weight=5)
+    prof.record("scale", (jnp.zeros((16, 4)),), weight=1)
+
+    ctx = TuningContext(cache, FAKE_SIM, profile=prof, search_on_miss=False,
+                        max_entries=2)
+    binding = reg.bind(["scale"], FAKE_SIM, native=True, freeze=False,
+                       tuning=ctx)
+    table = binding.impl("scale").config
+    assert len(table) == 2
+    by_status = {}
+    for g in binding.reports[0].geometries:
+        by_status.setdefault(g.status, set()).add(g.shapes)
+    assert by_status["cache-hit"] == {"4x4", "8x4"}            # the 2 hottest
+    assert by_status["cache-evicted-lru"] == {"16x4", "32x4"}  # the shed tail
+    assert "cache-evicted-lru" in binding.reports[0].tuning    # mixed(...)
+    assert len(cache) == 2
+    cache.save()
+    assert len(TuningCache.load(tmp_path / "t.json")) == 2
+
+
+def test_soak_shifting_traffic_keeps_state_bounded(tmp_path):
+    """N days of drifting traffic: each day a new geometry dominates, the
+    profile decays, the cache warms, and a capped deploy rebinds.  The
+    lifecycle invariants must hold every single day."""
+    CAP = 3
+    reg = _scale_registry()
+    cache_path = tmp_path / "tuning.json"
+    prof = WorkloadProfile(tmp_path / "workload.json")
+    day_rows = [4, 8, 16, 32, 64, 128, 256, 512]
+
+    for day, rows in enumerate(day_rows):
+        if day:
+            prof.decay(0.4)                          # history ages...
+            prof.record("scale", (jnp.zeros((day_rows[day - 1], 4)),),
+                        weight=2)                    # ...with a long tail
+        prof.record("scale", (jnp.zeros((rows, 4)),), weight=10)
+        prof.save()
+
+        cache = TuningCache.load(cache_path)
+        warm_cache(prof, cache, FAKE_SIM, registry=reg, top_k=CAP)
+        cache.save()
+
+        cache = TuningCache.load(cache_path)
+        ctx = TuningContext(cache, FAKE_SIM, profile=prof,
+                            search_on_miss=False, top_k=CAP, max_entries=CAP)
+        binding = reg.bind(["scale"], FAKE_SIM, native=True, freeze=False,
+                           tuning=ctx)
+        ctx.flush()
+
+        # 1. the dispatch table never outgrows its cap
+        table = binding.impl("scale").config
+        assert len(table) <= CAP, f"day {day}: table {len(table)} > cap {CAP}"
+
+        # 2. eviction pressure never sheds the current hottest bucket
+        hottest, _ = prof.top(op="scale", k=1)[0]
+        shed = {g.shapes for g in binding.reports[0].geometries
+                if g.status == "cache-evicted-lru"}
+        assert hottest.shapes not in shed, f"day {day}: evicted the hottest"
+        assert cache.get(_key(hottest.shapes), touch=False) is not None
+
+        # 3. live traffic keeps hitting its own tuned entries
+        dispatch = binding.impl("scale").fn
+        for geo, _ in prof.top(op="scale", k=CAP):
+            dims = tuple(int(d) for d in geo.shapes.split(",")[0].split("x"))
+            binding["scale"](jnp.ones(dims))
+        assert dispatch.hit_rate >= 0.75, \
+            f"day {day}: hit rate {dispatch.hit_rate:.2f} ({dispatch.stats})"
+
+    # the persisted site state is bounded after a week of drift, not a
+    # transcript of every geometry ever seen
+    final = TuningCache.load(cache_path)
+    assert len(final) <= CAP
+
+
+def test_env_capped_redeploy_binds_k_hottest_with_near_dtype(tmp_path):
+    """The acceptance loop through a real Runtime: REPRO_TUNING_MAX_ENTRIES=2
+    over 4 warmed rmsnorm buckets binds the 2 hottest, and bf16 traffic
+    (only fp32 warmed) dispatches via near-dtype instead of default."""
+    from repro.core.bundle import Bundle
+
+    fp = platform_fingerprint(POD_SIM)
+    abi = str(ABIS["rmsnorm"])
+    cache = TuningCache(tmp_path / "tuning.json")
+    for rows in (8, 16, 32, 64):
+        cache.put(CacheKey(abi=abi, platform=fp, shapes=f"{rows}x64,64",
+                           dtype="float32"),
+                  BlockConfig.make(block_rows=rows))
+    cache.save()
+    prof = WorkloadProfile(tmp_path / "workload.json")
+    w = jnp.zeros((64,))
+    prof.record("rmsnorm", (jnp.zeros((64, 64)), w), weight=9)
+    prof.record("rmsnorm", (jnp.zeros((8, 64)), w), weight=5)
+    prof.record("rmsnorm", (jnp.zeros((16, 64)), w), weight=1)
+    prof.save()
+
+    host_env = {
+        "REPRO_PLATFORM": "pod-sim",
+        "REPRO_TUNING_CACHE": str(tmp_path / "tuning.json"),
+        "REPRO_WORKLOAD_PROFILE": str(tmp_path / "workload.json"),
+        "REPRO_SEARCH_BUDGET": "0",
+        "REPRO_TUNING_MAX_ENTRIES": "2",
+    }
+    bundle = Bundle(name="cap", tag="t", model_config={}, recipe={},
+                    required_ops={"rmsnorm": abi}, env={})
+    rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c = rt.deploy(bundle, native_ops=True, autotune=True)
+
+    rep = next(r for r in c.binding.reports if r.op == "rmsnorm")
+    table = c.binding.impl("rmsnorm").config
+    assert len(table) == 2
+    hits = {g.shapes for g in rep.geometries if g.status == "cache-hit"}
+    shed = {g.shapes for g in rep.geometries
+            if g.status == "cache-evicted-lru"}
+    assert hits == {"64x64,64", "8x64,64"}        # exactly the 2 hottest
+    assert shed == {"16x64,64", "32x64,64"}
+    # the allowlist forwards the cap into the container env
+    assert c.env["REPRO_TUNING_MAX_ENTRIES"] == "2"
+
+    # bf16 call over fp32-only tuned state: near-dtype borrow, not default
+    x16 = jnp.ones((64, 64), jnp.bfloat16)
+    w16 = jnp.ones((64,), jnp.bfloat16)
+    out = c.binding["rmsnorm"](x16, w16)
+    dispatch = c.binding.impl("rmsnorm").fn
+    assert out.dtype == jnp.bfloat16
+    assert dispatch.stats["near-dtype"] == 1
+    assert dispatch.stats["default"] == 0
+    rt.cleanup()
+
+    # pressure persisted: the cache file kept only the bound buckets
+    final = TuningCache.load(tmp_path / "tuning.json")
+    assert len(final) == 2
+
+
+# ----------------------------------------------------------- concurrency --
+
+
+_WORKER = """
+import sys
+sys.path.insert(0, sys.argv[4])
+from repro.tuning.cache import CacheKey, TuningCache
+from repro.tuning.config import BlockConfig
+
+path, tag, n = sys.argv[1], sys.argv[2], int(sys.argv[3])
+cache = TuningCache.load(path)
+for i in range(n):
+    key = CacheKey(abi="scale/1:0/x", platform="fake",
+                   shapes=f"{tag}{i}x4", dtype="float32")
+    cache.put(key, BlockConfig.make(block=i + 1))
+cache.save()
+"""
+
+
+def test_two_processes_warm_one_cache_without_losing_entries(tmp_path):
+    """Two concurrent writers, disjoint keys: the file_lock'd load-merge-
+    replace keeps both sets — no lost update, no torn JSON."""
+    path = tmp_path / "tuning.json"
+    n = 20
+    procs = [
+        subprocess.Popen([sys.executable, "-c", _WORKER, str(path), tag,
+                          str(n), SRC])
+        for tag in ("a", "b")
+    ]
+    for p in procs:
+        assert p.wait(timeout=120) == 0
+    raw = json.loads(path.read_text())          # parseable, not torn
+    assert len(raw["entries"]) == 2 * n
+    cache = TuningCache.load(path)
+    for tag in ("a", "b"):
+        for i in range(n):
+            key = CacheKey(abi="scale/1:0/x", platform="fake",
+                           shapes=f"{tag}{i}x4", dtype="float32")
+            assert cache.get(key, touch=False) is not None
+
+
+def test_tombstones_merge_cleanly_across_writers(tmp_path):
+    """A writer that loaded an entry before another process evicted it must
+    not resurrect it on save; a fresh put legitimately may."""
+    path = tmp_path / "t.json"
+    k1, k2, k3 = _key("4x4"), _key("8x4"), _key("16x4")
+    seed = TuningCache(path)
+    seed.put(k1, BlockConfig.make(block=3))
+    seed.put(k2, BlockConfig.make(block=5))
+    seed.save()
+
+    b = TuningCache.load(path)                  # holds k1 from load
+    a = TuningCache.load(path)
+    a.evict(k1)
+    a.save()                                    # k1 gone from disk
+    b.put(k3, BlockConfig.make(block=7))
+    b.save()                                    # must NOT resurrect k1
+    final = TuningCache.load(path)
+    assert final.get(k1, touch=False) is None
+    assert final.get(k2, touch=False) is not None
+    assert final.get(k3, touch=False) is not None
+    assert len(final) == 2
+
+    c = TuningCache.load(path)                  # a fresh measurement DOES
+    c.put(k1, BlockConfig.make(block=9))        # bring the key back
+    c.save()
+    assert TuningCache.load(path).get(k1, touch=False)["block"] == 9
+
+
+def test_save_keeps_concurrent_writers_fresher_state(tmp_path):
+    """Regression: a process that merely LOADED an entry must not clobber
+    a concurrent writer's fresher copy on save — disk wins for untouched
+    keys, with last_used merged at the max."""
+    path = tmp_path / "t.json"
+    k1, k2 = _key("4x4"), _key("8x4")
+    seed = TuningCache(path)
+    seed.put(k1, BlockConfig.make(block=3))
+    seed.put(k2, BlockConfig.make(block=5))
+    seed.save()
+
+    a = TuningCache.load(path)                  # loads k1 but never uses it
+    b = TuningCache.load(path)
+    b.put(k1, BlockConfig.make(block=9))        # concurrent re-measure
+    b.save()
+    stamp_b = TuningCache.load(path).last_used(k1)
+    a.put(_key("16x4"), BlockConfig.make(block=7))
+    a.save()                                    # must not rewind k1
+    final = TuningCache.load(path)
+    assert final.get(k1, touch=False)["block"] == 9
+    assert final.last_used(k1) == stamp_b
+    # ...but a hit HERE is a real recency signal and must survive the merge
+    c = TuningCache.load(path)
+    assert c.get(k1) is not None                # stamps locally
+    stamp_c = c.last_used(k1)
+    c.save()
+    assert TuningCache.load(path).last_used(k1) == stamp_c
+
+
+def test_save_onto_wiped_file_keeps_loaded_state(tmp_path):
+    """Regression: an empty/missing/corrupt on-disk file at save time is
+    not a universal tombstone — the process rewrites its loaded state
+    instead of silently dropping the whole warmed cache."""
+    path = tmp_path / "t.json"
+    seed = TuningCache(path)
+    seed.put(_key("4x4"), BlockConfig.make(block=3))
+    seed.put(_key("8x4"), BlockConfig.make(block=5))
+    seed.save()
+
+    cache = TuningCache.load(path)
+    path.write_text("{ truncated garbage")      # transient corruption
+    cache.put(_key("16x4"), BlockConfig.make(block=7))
+    cache.save()
+    final = TuningCache.load(path)
+    assert len(final) == 3                      # nothing was lost
+
+
+def test_tombstones_do_not_outlive_their_save(tmp_path):
+    """Regression: once an eviction is persisted, the tombstone is spent —
+    a later save by the same long-lived object must not keep deleting a
+    key another process re-measured in between."""
+    path = tmp_path / "t.json"
+    k1, k2 = _key("4x4"), _key("8x4")
+    longlived = TuningCache(path)
+    longlived.put(k1, BlockConfig.make(block=3))
+    longlived.put(k2, BlockConfig.make(block=5))
+    longlived.evict(k1)
+    longlived.save()                            # k1 gone from disk
+
+    warmer = TuningCache.load(path)             # offline warm re-measures k1
+    warmer.put(k1, BlockConfig.make(block=9))
+    warmer.save()
+
+    longlived.put(_key("16x4"), BlockConfig.make(block=7))
+    longlived.save()                            # must NOT re-kill k1
+    assert TuningCache.load(path).get(k1, touch=False)["block"] == 9
+
+
+def test_capped_unsynthesizable_profile_still_binds_canonical(tmp_path):
+    """Regression: when every profiled bucket is foreign to the op, the
+    canonical-geometry fallback must survive a table cap — the cap trims
+    the unsynthesizable placeholders, never the one real config."""
+    reg = OpRegistry()
+    abi = AbiString.make("scale2", {"args": ["x"]})
+    reg.register(OpImpl(abi=abi, kind=ImplKind.REFERENCE,
+                        fn=lambda x: x, provider="ref"))
+    # args_from_shapes=None: every profiled bucket is unsynthesizable
+    tuner = OpTuner(op="scale2", space={"block": (3,)},
+                    example_args=lambda platform: (jnp.zeros((4, 4)),),
+                    iters=1, warmup=0)
+    reg.register(OpImpl(
+        abi=abi, kind=ImplKind.NATIVE,
+        fn=lambda x, config=None: x * (config.get("block", 1)
+                                       if config is not None else 1),
+        requires_feature="pallas_interpret", provider="fake-native",
+        tuner=tuner,
+    ))
+    prof = WorkloadProfile(tmp_path / "w.json")
+    prof.record("scale2", (jnp.zeros((8, 8)),), weight=5)
+    prof.record("scale2", (jnp.zeros((16, 8)),), weight=2)
+
+    cache = TuningCache(tmp_path / "t.json")
+    ctx = TuningContext(cache, FAKE_SIM, profile=prof, max_entries=2)
+    binding = reg.bind(["scale2"], FAKE_SIM, native=True, freeze=False,
+                       tuning=ctx)
+    table = binding.impl("scale2").config
+    assert len(table) <= 2
+    # the canonical geometry's searched config is in the table and primary
+    assert table.primary["block"] == 3
+    cfg, how = table.resolve((jnp.zeros((4, 4)),))
+    assert (cfg["block"], how) == (3, "exact")
+    statuses = {g.shapes: g.status for g in binding.reports[0].geometries}
+    assert statuses["4x4"] == "cache-miss-searched"
+
+
+def test_budget_starved_capped_bind_keeps_warmed_state(tmp_path):
+    """Regression: placeholder outcomes (search budget spent) hold no
+    cache entry, so they must not consume cap slots — a budget-starved
+    capped redeploy binds the warmed entries instead of evicting them
+    and dispatching nothing but defaults."""
+    reg = _scale_registry()
+    cache = TuningCache(tmp_path / "t.json")
+    cache.put(_key("4x4"), BlockConfig.make(block=3))
+    cache.put(_key("8x4"), BlockConfig.make(block=5))
+    prof = WorkloadProfile(tmp_path / "w.json")
+    prof.record("scale", (jnp.zeros((64, 4)),), weight=9)    # cold buckets
+    prof.record("scale", (jnp.zeros((128, 4)),), weight=5)
+
+    ctx = TuningContext(cache, FAKE_SIM, profile=prof, search_budget=0,
+                        max_entries=2)
+    binding = reg.bind(["scale"], FAKE_SIM, native=True, freeze=False,
+                       tuning=ctx)
+    rep = binding.reports[0]
+    assert not any(g.status == "cache-evicted-lru" for g in rep.geometries)
+    assert len(cache) == 2                      # nothing was shed
+    table = binding.impl("scale").config
+    assert len(table) == 2                      # ...and the warmed state binds
+    cfg, how = table.resolve((jnp.zeros((4, 4)),))
+    assert (cfg["block"], how) == (3, "exact")
+    statuses = {g.shapes: g.status for g in rep.geometries}
+    assert statuses["64x4"] == "search-budget-exhausted"
+    assert statuses["4x4"] == statuses["8x4"] == "cache-hit"
+
+
+def test_capped_sweep_touch_preserves_lru_order(tmp_path):
+    """Regression: binding swept entries MRU-first must not hand out
+    stamps in that same order (which would invert their relative recency
+    for the next eviction pass)."""
+    reg = _scale_registry()
+    cache = TuningCache(tmp_path / "t.json")
+    cache.put(_key("4x4"), BlockConfig.make(block=3))      # older
+    cache.put(_key("8x4"), BlockConfig.make(block=5))      # newer
+    ctx = TuningContext(cache, FAKE_SIM, search_on_miss=False,
+                        max_entries=3)
+    reg.bind(["scale"], FAKE_SIM, native=True, freeze=False, tuning=ctx)
+    assert cache.last_used(_key("8x4")) > cache.last_used(_key("4x4"))
+
+
+def test_compact_merges_with_concurrent_warm(tmp_path):
+    """A compaction racing a warm run: the compactor's tombstones hold,
+    the warmer's fresh entries survive, the file stays valid."""
+    path = tmp_path / "t.json"
+    seed = TuningCache(path)
+    keys = [_key(f"{2 ** i}x4") for i in range(6)]
+    for k in keys:
+        seed.put(k, BlockConfig.make(block=2))
+    seed.save()
+
+    warmer = TuningCache.load(path)             # loaded before the GC ran
+    compactor = TuningCache.load(path)
+    report = compact_lru(compactor, 3)
+    assert len(report) == 3
+    compactor.save()
+    fresh = [_key("1024x4"), _key("2048x4")]
+    for k in fresh:
+        warmer.put(k, BlockConfig.make(block=7))
+    warmer.save()
+
+    final = TuningCache.load(path)
+    assert len(final) == 5                      # 3 survivors + 2 fresh
+    for _, evicted_key in report.evicted:
+        assert evicted_key not in final.raw_keys()
+    for k in fresh:
+        assert final.get(k, touch=False) is not None
+    json.loads(path.read_text())
+
+
+# ------------------------------------------------------------- the GC CLI --
+
+
+def test_warm_compact_cli(tmp_path, capsys):
+    from repro.tuning import warm
+
+    cache_path = tmp_path / "tuning.json"
+    prof_path = tmp_path / "workload.json"
+    cache = TuningCache(cache_path)
+    for rows in (4, 8, 16, 32, 64):
+        cache.put(_key(f"{rows}x4"), BlockConfig.make(block=2))
+    cache.save()
+    prof = WorkloadProfile(prof_path)
+    prof.record("scale", (jnp.zeros((32, 4)),), weight=4)
+    prof.record("scale", (jnp.zeros((64, 4)),), weight=2)
+    prof.save()
+
+    rc = warm.main(["--compact", "--max-entries", "3",
+                    "--cache", str(cache_path), "--profile", str(prof_path)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "evicted 2" in out and "cap 3" in out
+    final = TuningCache.load(cache_path)
+    assert len(final) == 3
+    # the profiled (still-live-traffic) buckets survived the GC
+    assert final.get(_key("32x4"), touch=False) is not None
+    assert final.get(_key("64x4"), touch=False) is not None
+
+    # idempotent: a second pass is a no-op
+    assert warm.main(["--compact", "--max-entries", "3",
+                      "--cache", str(cache_path),
+                      "--profile", str(prof_path)]) == 0
+    assert len(TuningCache.load(cache_path)) == 3
+
+
+def test_warm_compact_cli_requires_a_bound(tmp_path, capsys, monkeypatch):
+    from repro.tuning import warm
+
+    monkeypatch.delenv("REPRO_TUNING_MAX_ENTRIES", raising=False)
+    rc = warm.main(["--compact", "--cache", str(tmp_path / "t.json"),
+                    "--profile", str(tmp_path / "w.json")])
+    assert rc == 2
+    assert "REPRO_TUNING_MAX_ENTRIES" in capsys.readouterr().out
+
+    # the env default supplies the bound (and an empty cache is a no-op)
+    monkeypatch.setenv("REPRO_TUNING_MAX_ENTRIES", "3")
+    rc = warm.main(["--compact", "--cache", str(tmp_path / "t.json"),
+                    "--profile", str(tmp_path / "w.json")])
+    assert rc == 0
+    assert "nothing to compact" in capsys.readouterr().out
+
+
+def test_warm_cli_end_to_end_with_decay(tmp_path, capsys):
+    """The plain warm CLI over a real (pod-sim) op, with --decay: covers
+    main()'s warm path the docs job otherwise exercises only in CI."""
+    from repro.tuning import warm
+
+    prof_path = tmp_path / "workload.json"
+    cache_path = tmp_path / "tuning.json"
+    prof = WorkloadProfile(prof_path)
+    w = jnp.zeros((64,))
+    prof.record("rmsnorm", (jnp.zeros((8, 64)), w), weight=4)
+    prof.save()
+
+    rc = warm.main(["--profile", str(prof_path), "--cache", str(cache_path),
+                    "--platform", "pod-sim", "--top", "1",
+                    "--decay", "0.5", "--ops", "rmsnorm"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "decayed profile by 0.5" in out and "warmed 1 entry" in out
+    cache = TuningCache.load(cache_path)
+    assert len(cache) == 1
+    key = CacheKey(abi=str(ABIS["rmsnorm"]),
+                   platform=platform_fingerprint(POD_SIM),
+                   shapes="8x64,64", dtype="float32")
+    assert cache.get(key, touch=False) is not None
+
+
+def test_warm_cli_empty_profile_reports(tmp_path, capsys):
+    from repro.tuning import warm
+
+    rc = warm.main(["--profile", str(tmp_path / "none.json"),
+                    "--cache", str(tmp_path / "t.json"),
+                    "--platform", "pod-sim"])
+    assert rc == 1
+    assert "nothing to warm" in capsys.readouterr().out
+
+
+# ------------------------------------------------------------ env parsing --
+
+
+def test_tuning_max_entries_env_parsing():
+    from repro.core.env import tuning_max_entries_default
+
+    assert tuning_max_entries_default({}) is None
+    assert tuning_max_entries_default({"REPRO_TUNING_MAX_ENTRIES": "4"}) == 4
+    assert tuning_max_entries_default({"REPRO_TUNING_MAX_ENTRIES": " 7 "}) == 7
+    # zero and junk deactivate the cap instead of erroring (or evicting
+    # every warmed bucket, which no deployment can want)
+    assert tuning_max_entries_default({"REPRO_TUNING_MAX_ENTRIES": "0"}) is None
+    assert tuning_max_entries_default({"REPRO_TUNING_MAX_ENTRIES": "-3"}) is None
+    assert tuning_max_entries_default({"REPRO_TUNING_MAX_ENTRIES": "junk"}) is None
