@@ -30,12 +30,19 @@ persist, rebind — is identical on a TPU site.  Rows:
                                 bucket's config ("near-dtype", VMEM
                                 re-validated for bf16) instead of
                                 falling to the shipped default
+  table6/<op>/bundle_import     time-to-first-dispatch at a FRESH site:
+                                a cold deploy (searches at bind) vs the
+                                same deploy after importing the origin
+                                site's exported tuning bundle (zero
+                                searches, exact dispatch) — the paper's
+                                ship-the-artifact story quantified
 
-``--smoke`` (CLI) runs only the geometry-dispatch + near-dtype rows with
-tiny workloads and exits non-zero unless the dispatched binding resolves
-every live bucket exactly while the top-1 binding cannot, and the bf16
-call dispatches via near-dtype — the CI guard that keeps the new rows
-runnable.
+``--smoke`` (CLI) runs only the geometry-dispatch + near-dtype + bundle
+rows with tiny workloads and exits non-zero unless the dispatched
+binding resolves every live bucket exactly while the top-1 binding
+cannot, the bf16 call dispatches via near-dtype, and the bundle-imported
+deploy pays zero searches where the cold one paid at least one — the CI
+guard that keeps the new rows runnable.
 """
 
 from __future__ import annotations
@@ -116,7 +123,62 @@ def run() -> list[tuple[str, float, str]]:
     ))
     rows.extend(geometry_dispatch_rows(reg))
     rows.extend(near_dtype_rows(reg))
+    rows.extend(bundle_import_rows(reg))
     return rows
+
+
+def bundle_import_rows(reg) -> list[tuple[str, float, str]]:
+    """Cold-search deploy vs bundle-imported deploy at a fresh site: the
+    origin warms rmsnorm from recorded traffic and exports; the target
+    either searches at bind (cold) or imports the artifact first.  Both
+    rows time bind + first live dispatch (time-to-first-dispatch); the
+    note carries the search counts the artifact eliminated."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.tuning import WorkloadProfile, import_bundle
+    from repro.tuning.bundle import export_bundle
+
+    tmp = Path(tempfile.mkdtemp(prefix="repro-t6-bundle-"))
+    ks = jax.random.split(jax.random.PRNGKey(17), 2)
+    live = (jax.random.normal(ks[0], (128, 64), jnp.float32),
+            jax.random.normal(ks[1], (64,), jnp.float32))
+    profile = WorkloadProfile(tmp / "workload.json")
+    profile.record("rmsnorm", live, weight=4)
+    profile.save()
+
+    # origin site: warm from the recorded traffic, export the artifact
+    origin = TuningCache(tmp / "origin.json")
+    warm_cache(profile, origin, POD_SIM, registry=reg, top_k=1)
+    origin.save()
+    bundle_path, _ = export_bundle(tmp / "origin.tgz",
+                                   cache_path=origin.path, platform=POD_SIM,
+                                   profile_path=profile.path)
+
+    def deploy_and_first_dispatch(cache_path):
+        """Bind (searching on miss) + first live call; returns
+        (seconds, searches paid, dispatch stats)."""
+        cache = TuningCache.load(cache_path)
+        ctx = TuningContext(cache, POD_SIM, ops={"rmsnorm"}, profile=profile)
+        t0 = time.perf_counter()
+        binding = reg.bind(OP_NAMES, POD_SIM, native=True, freeze=False,
+                           tuning=ctx)
+        jax.block_until_ready(binding["rmsnorm"](*live))
+        dt = time.perf_counter() - t0
+        return dt, ctx.searches_spent, dict(binding.impl("rmsnorm").fn.stats)
+
+    t_cold, searches_cold, _ = deploy_and_first_dispatch(tmp / "cold.json")
+    import_bundle(bundle_path, cache_path=tmp / "shipped.json",
+                  platform=POD_SIM, registry=reg)
+    t_bundle, searches_bundle, stats = \
+        deploy_and_first_dispatch(tmp / "shipped.json")
+    return [row(
+        "table6/rmsnorm/bundle_import", t_bundle * 1e6,
+        f"searches_cold={searches_cold};searches_bundle={searches_bundle};"
+        f"exact={stats['exact']};cold_us={t_cold * 1e6:.1f};"
+        f"ttfd_speedup_vs_cold={t_cold / t_bundle:.2f}x",
+    )]
 
 
 def near_dtype_rows(reg) -> list[tuple[str, float, str]]:
@@ -237,12 +299,14 @@ def main(argv=None) -> int:
             print(f"{name},{us:.1f},{derived}")
         return 0
     reg = register_all(OpRegistry())
-    rows = geometry_dispatch_rows(reg) + near_dtype_rows(reg)
+    rows = geometry_dispatch_rows(reg) + near_dtype_rows(reg) \
+        + bundle_import_rows(reg)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     top1_note = next(d for n, _, d in rows if n.endswith("top1_binding"))
     disp_note = next(d for n, _, d in rows if n.endswith("geometry_dispatch"))
     borrow_note = next(d for n, _, d in rows if n.endswith("near_dtype_borrow"))
+    bundle_note = next(d for n, _, d in rows if n.endswith("bundle_import"))
     if "exact=1/2" not in top1_note:
         print(f"FAIL: top-1 binding should hit exactly its one bucket, "
               f"got {top1_note}")
@@ -257,8 +321,14 @@ def main(argv=None) -> int:
         print(f"FAIL: bf16 call on an fp32-warmed site should dispatch via "
               f"near-dtype, got {borrow_note}")
         return 1
+    if "searches_bundle=0" not in bundle_note \
+            or "searches_cold=0" in bundle_note:
+        print(f"FAIL: the bundle-imported deploy should pay zero searches "
+              f"where the cold one pays >=1, got {bundle_note}")
+        return 1
     print("OK: geometry dispatch resolved 2/2 live buckets; top-1 binding "
-          "resolved 1/2; bf16 traffic borrowed the fp32 bucket (near-dtype)")
+          "resolved 1/2; bf16 traffic borrowed the fp32 bucket (near-dtype); "
+          "bundle import turned the cold-search deploy into a zero-search one")
     return 0
 
 

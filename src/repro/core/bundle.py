@@ -45,6 +45,11 @@ class Bundle:
     required_ops: Mapping[str, str]            # op name -> required ABI string
     env: Mapping[str, str]                     # baked-in environment defaults
     base: str | None = None                    # "name:tag" of a parent bundle
+    tuning_bundle: str | None = None           # path/reference of a portable
+    # tuning bundle (repro.tuning.bundle) shipped WITH this run bundle: the
+    # Runtime auto-imports it before binding, so a laptop-warmed artifact
+    # travels inside the deployable unit (overridable by deploy(tuning_bundle=)
+    # or REPRO_TUNING_BUNDLE, both of which win over this baked-in default)
     format_version: int = _FORMAT_VERSION
 
     # -- identity ----------------------------------------------------------
@@ -66,6 +71,7 @@ class Bundle:
             "name": self.name,
             "tag": self.tag,
             "base": self.base,
+            "tuning_bundle": self.tuning_bundle,
             "model_config": dict(self.model_config),
             "recipe": dict(self.recipe),
             "required_ops": dict(self.required_ops),
@@ -83,6 +89,7 @@ class Bundle:
                 name=d["name"],
                 tag=d["tag"],
                 base=d.get("base"),
+                tuning_bundle=d.get("tuning_bundle"),
                 model_config=dict(d["model_config"]),
                 recipe=dict(d["recipe"]),
                 required_ops=dict(d["required_ops"]),
@@ -116,6 +123,7 @@ class Bundle:
             name=self.name,
             tag=self.tag,
             base=None,
+            tuning_bundle=self.tuning_bundle or parent.tuning_bundle,
             model_config={**parent.model_config, **self.model_config},
             recipe={**parent.recipe, **self.recipe},
             required_ops={**parent.required_ops, **self.required_ops},

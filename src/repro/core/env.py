@@ -40,6 +40,15 @@ ids, so single-GPU images run unmodified on multi-GPU hosts.
                           ("cache-evicted-lru" in the SwapReport).
                           Absent/invalid values mean unbounded (the
                           append-only pre-lifecycle behaviour).
+  REPRO_TUNING_BUNDLE     path of a portable tuning bundle (see
+                          repro.tuning.bundle): default for
+                          deploy(tuning_bundle=) — auto-imported into the
+                          site cache before binding, with every entry
+                          revalidated against THIS platform (feasible ->
+                          first-class, infeasible -> demoted candidate,
+                          corrupt/ABI-incompatible -> rejected wholesale,
+                          leaving the cache untouched).  Absent means no
+                          import.
 """
 
 from __future__ import annotations
@@ -63,6 +72,7 @@ __all__ = [
     "profile_default",
     "search_budget_default",
     "tuning_max_entries_default",
+    "tuning_bundle_default",
     "ENV_VISIBLE",
     "ENV_PLATFORM",
     "ENV_NATIVE_OPS",
@@ -70,6 +80,7 @@ __all__ = [
     "ENV_PROFILE",
     "ENV_SEARCH_BUDGET",
     "ENV_TUNING_MAX_ENTRIES",
+    "ENV_TUNING_BUNDLE",
 ]
 
 ENV_VISIBLE = "REPRO_VISIBLE_DEVICES"
@@ -79,6 +90,7 @@ ENV_AUTOTUNE = "REPRO_AUTOTUNE"
 ENV_PROFILE = "REPRO_PROFILE"
 ENV_SEARCH_BUDGET = "REPRO_SEARCH_BUDGET"
 ENV_TUNING_MAX_ENTRIES = "REPRO_TUNING_MAX_ENTRIES"
+ENV_TUNING_BUNDLE = "REPRO_TUNING_BUNDLE"
 
 _INT_LIST_RE = re.compile(r"^\s*\d+\s*(,\s*\d+\s*)*$")
 
@@ -200,3 +212,15 @@ def tuning_max_entries_default(env: dict[str, str] | None = None) -> int | None:
     except ValueError:
         return None
     return value if value > 0 else None
+
+
+def tuning_bundle_default(env: dict[str, str] | None = None) -> str | None:
+    """REPRO_TUNING_BUNDLE as a path string, else None (no auto-import).
+
+    Existence is NOT checked here: a missing/corrupt bundle is diagnosed
+    (and degraded to a warning) by the deploy-time import, which is the
+    stage that can say *why* the artifact is unusable.
+    """
+    env = os.environ if env is None else env
+    text = str(env.get(ENV_TUNING_BUNDLE, "")).strip()
+    return text or None

@@ -115,7 +115,9 @@ class SwapReport:
     reason: str         # why this impl (or why the swap was refused)
     tuning: str = ""    # autotune outcome summary: "cache-hit",
     #                     "cache-miss-searched", "cache-miss-default",
-    #                     "search-failed-default", "cache-evicted-lru", ...
+    #                     "search-failed-default", "cache-evicted-lru",
+    #                     "bundle-imported"/"bundle-demoted"/
+    #                     "bundle-rejected" (tuning-bundle provenance), ...
     #                     or "mixed(...)" when geometries disagree; empty
     #                     when tuning was off or the impl is untunable
     config: str = ""    # the primary (hottest-geometry) BlockConfig, printable
@@ -180,6 +182,15 @@ class OpBinding(Mapping[str, Callable[..., Any]]):
             line = f"  {r.op:<18} {mark} {r.bound:<12} [{r.kind.value}] {r.reason}"
             if r.tuning:
                 line += f" | tune: {r.tuning} ({r.config})"
+                # size accounting: serialized bytes of the entries actually
+                # backing this op's dispatch state (evicted/rejected
+                # geometries hold none by the time the binding exists)
+                state = sum(
+                    getattr(g, "bytes", 0) for g in r.geometries
+                    if g.status not in ("cache-evicted-lru", "bundle-rejected")
+                )
+                if state:
+                    line += f" | state ~{state}B"
                 if r.search_rank is not None:
                     line += f" | search#{r.search_rank}"
             lines.append(line)

@@ -40,6 +40,7 @@ from repro.core.env import (
     resolve_platform,
     search_budget_default,
     select_devices,
+    tuning_bundle_default,
     tuning_max_entries_default,
 )
 from repro.core.platform import Platform
@@ -55,7 +56,7 @@ _HOST_ENV_ALLOWLIST = (ENV_VISIBLE, "REPRO_PLATFORM", "REPRO_CHECKPOINT_DIR",
                        "REPRO_COMPILE_CACHE", "REPRO_AUTOTUNE",
                        "REPRO_TUNING_CACHE", "REPRO_PROFILE",
                        "REPRO_WORKLOAD_PROFILE", "REPRO_SEARCH_BUDGET",
-                       "REPRO_TUNING_MAX_ENTRIES")
+                       "REPRO_TUNING_MAX_ENTRIES", "REPRO_TUNING_BUNDLE")
 
 
 class DeploymentError(RuntimeError):
@@ -82,6 +83,9 @@ class Container:
     workload: Any = None   # tuning.WorkloadProfile capturing this
     # container's op geometries; None unless profiling is on.  Persisted
     # by Runtime.cleanup().
+    tuning_imports: Any = None   # tuning.bundle.ImportReport of the
+    # tuning-bundle import that ran before binding; None when no bundle
+    # was given (or its import was rejected — the rejection is logged).
 
     @property
     def devices(self) -> tuple[jax.Device, ...]:
@@ -140,6 +144,7 @@ class Runtime:
         autotune_top_k: int = 3,
         search_budget: int | None = None,
         max_tuned_entries: int | None = None,
+        tuning_bundle: str | os.PathLike | None = None,
         profile: bool | None = None,
     ) -> Container:
         """Run the preparation stages and hand back the executable Container.
@@ -185,6 +190,20 @@ class Runtime:
             provably keeps exactly the K hottest.  bf16 traffic landing
             on a capped table that only holds fp32 buckets dispatches
             via the "near-dtype" borrow instead of the shipped default.
+          tuning_bundle: (None -> REPRO_TUNING_BUNDLE env default, then
+            the run bundle's own ``tuning_bundle`` reference) path of a
+            portable tuning bundle (repro.tuning.bundle) to auto-import
+            into the site cache BEFORE binding.  Every entry is
+            revalidated against this platform: feasible entries land
+            first-class and bind as "bundle-imported" geometries;
+            structurally-matched-but-infeasible ones are demoted to
+            penalized dispatch candidates ("bundle-demoted", never bound
+            raw); structurally foreign buckets are rejected per entry
+            ("bundle-rejected" in the SwapReport).  A corrupt, tampered,
+            wrong-schema, or ABI-major-incompatible artifact is rejected
+            wholesale — the site cache stays byte-identical and the
+            deployment continues cold with a warning (the CLI import, by
+            contrast, exits non-zero).
           profile: (None -> REPRO_PROFILE env default) captures every op
             invocation's shape bucket + dtype into the site workload
             profile (under jit: once per compiled geometry, at trace
@@ -239,6 +258,32 @@ class Runtime:
             log.info("profiling on: workload profile %s (%d geometries)",
                      profile_path, len(workload))
 
+        # -- stage: tuning-bundle import (portable site artifacts) -----------
+        # The shipped artifact lands in the site cache before the binding
+        # reads it, so a laptop-warmed bundle turns a cold cluster deploy
+        # into a zero-search one.  Rejections degrade to a warning: a bad
+        # artifact must not kill a deployment that can still run cold.
+        if tuning_bundle is None:
+            tuning_bundle = tuning_bundle_default(self.host_env)
+        if tuning_bundle is None:
+            tuning_bundle = bundle.tuning_bundle
+        bundle_report = None
+        if tuning_bundle:
+            from repro.tuning import resolve_cache_path
+            from repro.tuning.bundle import BundleFormatError, import_bundle
+
+            try:
+                bundle_report = import_bundle(
+                    tuning_bundle,
+                    cache_path=resolve_cache_path(self.host_env),
+                    platform=platform, registry=self.registry,
+                )
+                log.info("tuning bundle %s: %s", tuning_bundle,
+                         bundle_report.describe().splitlines()[0])
+            except (BundleFormatError, OSError) as e:
+                log.warning("tuning bundle %s rejected: %s (site cache "
+                            "untouched; deploying cold)", tuning_bundle, e)
+
         # -- stage: site specialization (deferred kernel tuning) -------------
         if autotune is None:
             autotune = autotune_default(self.host_env)
@@ -291,6 +336,7 @@ class Runtime:
                 search_budget=search_budget,
                 priority=priority,
                 max_entries=max_tuned_entries,
+                bundle_report=bundle_report,
             )
             log.info("autotune on: cache %s (%d entries%s%s%s)",
                      cache_path, len(tuning_ctx.cache),
@@ -327,6 +373,7 @@ class Runtime:
             autotune=autotune,
             profile=profile,
             workload=workload,
+            tuning_imports=bundle_report,
         )
         self._active = container
         return container

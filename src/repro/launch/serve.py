@@ -12,6 +12,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+import types
 from collections import deque
 
 import jax
@@ -126,6 +127,12 @@ def main(argv=None) -> int:
                     help="per-op cap on the geometry-dispatch table; cold "
                          "cached buckets beyond it are LRU-evicted "
                          "(or set REPRO_TUNING_MAX_ENTRIES)")
+    ap.add_argument("--tuning-bundle", default=None, metavar="PATH",
+                    help="portable tuning bundle to import before binding "
+                         "(python -m repro.tuning.bundle export; or set "
+                         "REPRO_TUNING_BUNDLE) — entries revalidate against "
+                         "this platform, so a laptop-warmed artifact deploys "
+                         "here with zero searches")
     args = ap.parse_args(argv)
 
     bundle = make_bundle(args.arch, reduced=True)
@@ -134,7 +141,8 @@ def main(argv=None) -> int:
                                native_ops=True if args.native_ops else None,
                                profile=True if args.profile else None,
                                autotune=True if args.autotune else None,
-                               max_tuned_entries=args.max_tuned_entries)
+                               max_tuned_entries=args.max_tuned_entries,
+                               tuning_bundle=args.tuning_bundle)
     cfg = get_config(args.arch).reduced()
 
     server = Server(cfg, container, slots=args.slots, max_len=args.max_len)
@@ -157,33 +165,54 @@ def main(argv=None) -> int:
 
 
 def print_dispatch_stats(container) -> None:
-    """Per-op geometry-dispatch hit rates after an autotuned run: how many
-    compiled geometries resolved their own tuned entry (exact) vs fell
-    back to the nearest bucket, a dtype-crossing borrow, or the platform
-    default — plus, under a table cap, how full each op's table is and
-    how many cold buckets the bind shed (cache-evicted-lru)."""
+    """Per-op geometry-dispatch stats after an autotuned run, from the one
+    consolidated (schema-pinned) stats dict: how many compiled geometries
+    resolved their own tuned entry (exact) vs fell back to the nearest
+    bucket, a dtype-crossing borrow, a demoted bundle candidate, or the
+    platform default — plus table fullness/size and the bind-time
+    lifecycle counters (LRU eviction, bundle import outcomes).  Iterating
+    the schema (not an ad hoc format string) is what guarantees a new
+    counter cannot be silently dropped from this output."""
     if not container.autotune:
         return
+    from repro.tuning.dispatch import DISPATCH_PATHS, consolidated_stats
+
+    if container.tuning_imports is not None:
+        c = container.tuning_imports.counts()
+        print(f"tuning bundle [{container.tuning_imports.source}]: "
+              + " ".join(f"{k}={v}" for k, v in sorted(c.items())))
     reports = {r.op: r for r in container.binding.reports}
     for name in container.binding:
-        dispatch = container.binding.impl(name).fn
-        stats = getattr(dispatch, "stats", None)
-        if not stats or not sum(stats.values()):
+        impl = container.binding.impl(name)
+        dispatch = getattr(impl.fn, "stats", None)
+        # impl.config survives the profiled_binding wrap; impl.fn.stats is
+        # forwarded through it, but consolidated_stats needs the dispatch
+        # object itself — reconstruct a view from config + stats
+        table = getattr(impl, "config", None)
+        if dispatch is None or table is None or not hasattr(table, "stats"):
             continue
-        total = sum(stats.values())
+        if not sum(dispatch.values()):
+            continue
+        # the profiled wrapper hides the TunedDispatch instance but forwards
+        # its counters; a facade with .stats/.table is all the consolidation
+        # needs
+        view = types.SimpleNamespace(stats=dispatch, table=table)
+        stats = consolidated_stats(view, reports[name].geometries)
+        total = sum(stats[p] for p in DISPATCH_PATHS)
+        parts = " ".join(f"{p}={stats[p]}" for p in DISPATCH_PATHS)
         line = (f"dispatch {name:<18} {total} "
-                f"geometr{'y' if total == 1 else 'ies'} traced:"
-                f" exact={stats['exact']} nearest={stats['nearest']}"
-                f" near-dtype={stats.get('near-dtype', 0)}"
-                f" default={stats['default']} explicit={stats['explicit']}")
-        # impl.config survives the profiled_binding wrap; dispatch.table
-        # would not
-        table = getattr(container.binding.impl(name), "config", None)
-        if table is not None and getattr(table, "max_entries", None):
-            evicted = sum(g.status == "cache-evicted-lru"
-                          for g in reports[name].geometries)
-            line += (f" | table {len(table)}/{table.max_entries}"
-                     + (f" (evicted-lru={evicted})" if evicted else ""))
+                f"geometr{'y' if total == 1 else 'ies'} traced: {parts}")
+        line += (f" | table {stats['table-entries']}"
+                 + (f"/{stats['table-cap']}" if stats["table-cap"] else "")
+                 + (f" (+{stats['table-demoted']} demoted)"
+                    if stats["table-demoted"] else "")
+                 + f" ~{stats['table-bytes']}B")
+        lifecycle = " ".join(
+            f"{k}={stats[k]}" for k in ("evicted-lru", "bundle-imported",
+                                        "bundle-demoted", "bundle-rejected")
+            if stats[k])
+        if lifecycle:
+            line += f" | {lifecycle}"
         print(line)
 
 

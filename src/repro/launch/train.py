@@ -115,6 +115,10 @@ def main(argv=None) -> int:
                     help="per-op cap on the geometry-dispatch table; cold "
                          "cached buckets beyond it are LRU-evicted "
                          "(or set REPRO_TUNING_MAX_ENTRIES)")
+    ap.add_argument("--tuning-bundle", default=None, metavar="PATH",
+                    help="portable tuning bundle to import before binding "
+                         "(python -m repro.tuning.bundle export; or set "
+                         "REPRO_TUNING_BUNDLE)")
     args = ap.parse_args(argv)
 
     bundle = make_bundle(args.arch, reduced=args.reduced)
@@ -123,7 +127,8 @@ def main(argv=None) -> int:
     container = runtime.deploy(bundle, native_ops=args.native_ops, mesh=mesh,
                                profile=True if args.profile else None,
                                autotune=True if args.autotune else None,
-                               max_tuned_entries=args.max_tuned_entries)
+                               max_tuned_entries=args.max_tuned_entries,
+                               tuning_bundle=args.tuning_bundle)
     print(container.describe())
 
     from repro.configs.base import ModelConfig

@@ -22,6 +22,16 @@ carries a `ConfigTable` of *all* its warmed top-K geometries, and the
 time (exact -> nearest bucket -> platform default) — one deployment,
 many tuned configs, zero searches on a warmed shape-polymorphic path.
 
+PR 5 makes the state portable (bundle.py): ``python -m
+repro.tuning.bundle {export,import,verify}`` packages one site's cache +
+profile + ABI manifest into a checksummed tarball; importing on another
+site re-runs ``tuner.feasible`` per entry against the *target* platform
+— feasible entries land first-class ("bundle-imported"), structurally
+matched but infeasible (or revision-drifted) ones become *demoted*
+dispatch candidates at `DEMOTED_PENALTY` distance ("bundle-demoted",
+never bound raw), and corrupt/ABI-major-mismatched artifacts are
+rejected atomically, leaving the target cache byte-identical.
+
 PR 4 bounds the lifecycle: tuning state is managed, not append-only.
 `REPRO_TUNING_MAX_ENTRIES` / ``deploy(max_tuned_entries=K)`` caps each
 op's dispatch table at its K hottest buckets, LRU-evicting the rest
@@ -44,11 +54,15 @@ from repro.tuning.cache import (
 )
 from repro.tuning.config import BlockConfig, default_config
 from repro.tuning.dispatch import (
+    DEMOTED_PENALTY,
+    DISPATCH_PATHS,
     DTYPE_PENALTY,
+    STATS_SCHEMA,
     ConfigTable,
     GeometryOutcome,
     TunedDispatch,
     bucket_distance,
+    consolidated_stats,
 )
 from repro.tuning.expiry import (
     ExpiryReport,
@@ -73,12 +87,34 @@ from repro.tuning.tuner import (
     bucket_validator,
 )
 
+# bundle.py is re-exported lazily (PEP 562): importing it eagerly here
+# would make ``python -m repro.tuning.bundle`` warn about the module
+# being initialized twice (runpy re-executes the CLI module after the
+# package import already loaded it).
+_BUNDLE_EXPORTS = (
+    "BUNDLE_SCHEMA_VERSION", "ENV_TUNING_BUNDLE", "BundleFormatError",
+    "ImportReport", "SiteFingerprint", "export_bundle", "import_bundle",
+    "verify_bundle",
+)
+
+
+def __getattr__(name):
+    if name in _BUNDLE_EXPORTS:
+        from repro.tuning import bundle
+
+        return getattr(bundle, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "ENV_TUNING_CACHE", "SCHEMA_VERSION", "CacheKey", "TuningCache",
     "bucket_shapes", "platform_fingerprint", "resolve_cache_path",
     "BlockConfig", "default_config",
     "ConfigTable", "GeometryOutcome", "TunedDispatch", "bucket_distance",
-    "DTYPE_PENALTY", "bucket_validator",
+    "DTYPE_PENALTY", "DEMOTED_PENALTY", "DISPATCH_PATHS", "STATS_SCHEMA",
+    "consolidated_stats", "bucket_validator",
+    "BUNDLE_SCHEMA_VERSION", "ENV_TUNING_BUNDLE", "BundleFormatError",
+    "ImportReport", "SiteFingerprint", "export_bundle", "import_bundle",
+    "verify_bundle",
     "ExpiryReport", "expire_stale", "PressureReport", "compact_lru",
     "ENV_WORKLOAD_PROFILE", "PROFILE_SCHEMA_VERSION", "GeometryKey",
     "WorkloadProfile", "profiled_binding", "resolve_profile_path",

@@ -21,6 +21,15 @@ Properties:
     :meth:`compact` evicts down to the cap, coldest first.  See
     expiry.compact_lru for the profile-aware sweep and
     ``python -m repro.tuning.warm --compact`` for the offline GC.
+
+Entries may additionally be *demoted* (``put(..., demoted=True)``): a
+demoted entry keeps its bytes, recency, and eviction exposure, but
+:meth:`get` and :meth:`entries_for` skip it — it never binds first-class.
+Demotion is how a cross-site tuning-bundle import (see bundle.py) keeps
+a config that failed the target platform's feasibility re-check as a
+*near-config candidate*: the dispatch layer may still lend it out at a
+distance penalty after re-validating it for the borrowing call, and a
+fresh local search (`put` without the flag) upgrades the key wholesale.
 """
 
 from __future__ import annotations
@@ -210,14 +219,23 @@ class TuningCache:
         """Config at `key`, stamping ``last_used`` on the hit (persisted on
         the next save, so LRU recency survives redeploys).  ``touch=False``
         peeks without refreshing — eviction sweeps must not make an entry
-        look hot by inspecting it."""
+        look hot by inspecting it.  Demoted entries (bundle imports that
+        failed the local feasibility re-check) are *not* returned: they
+        must never bind first-class, only via the dispatch layer's
+        penalized candidate pool (see demoted_for)."""
         entry = self._entries.get(key.encode())
-        if entry is None:
+        if entry is None or entry.get("demoted"):
             return None
         if touch:
             entry["last_used"] = self._stamp()
             self.dirty = True
         return BlockConfig.from_dict(entry["config"])
+
+    def is_demoted(self, key: "CacheKey | str") -> bool:
+        """True iff an entry exists at `key` AND carries the demotion flag."""
+        encoded = key if isinstance(key, str) else key.encode()
+        entry = self._entries.get(encoded)
+        return bool(entry is not None and entry.get("demoted"))
 
     def touch(self, key: "CacheKey | str") -> None:
         """Refresh an entry's ``last_used`` without decoding its config
@@ -240,12 +258,20 @@ class TuningCache:
         return dict(entry.get("metrics", {})) if entry else {}
 
     def put(self, key: CacheKey, config: BlockConfig,
-            metrics: Mapping[str, Any] | None = None) -> None:
-        self._entries[key.encode()] = {
+            metrics: Mapping[str, Any] | None = None, *,
+            demoted: bool = False) -> None:
+        """Insert/replace an entry.  ``demoted=True`` marks it second-class
+        (skipped by get/entries_for; see module docstring) — a later plain
+        put at the same key clears the flag, i.e. a local measurement
+        upgrades a demoted bundle import to a first-class entry."""
+        entry = {
             "config": config.to_dict(),
             "metrics": dict(metrics or {}),
             "last_used": self._stamp(),
         }
+        if demoted:
+            entry["demoted"] = True
+        self._entries[key.encode()] = entry
         self._evicted.discard(key.encode())
         self._touched.add(key.encode())
         self.dirty = True
@@ -254,18 +280,59 @@ class TuningCache:
         """Encoded keys of every live entry (see CacheKey.encode)."""
         return tuple(self._entries)
 
+    def raw_entry(self, key: "CacheKey | str") -> dict | None:
+        """A copy of one entry's raw persisted form (config/metrics/
+        last_used/demoted) — what bundle export packages verbatim."""
+        encoded = key if isinstance(key, str) else key.encode()
+        entry = self._entries.get(encoded)
+        return dict(entry) if entry is not None else None
+
     def entries_for(self, abi: str, platform: str
                     ) -> dict[tuple[str, str], BlockConfig]:
-        """All tuned geometries of one (ABI, platform fingerprint):
-        (shape bucket, dtype) -> config.  The geometry-dispatch binding
-        sweeps this so a cache warmed deeper than the profile's current
-        top-K still binds every entry hot."""
+        """All first-class tuned geometries of one (ABI, platform
+        fingerprint): (shape bucket, dtype) -> config.  The geometry-
+        dispatch binding sweeps this so a cache warmed deeper than the
+        profile's current top-K still binds every entry hot.  Demoted
+        entries are excluded — they only ever dispatch through the
+        penalized candidate pool (see demoted_for)."""
         out: dict[tuple[str, str], BlockConfig] = {}
         for encoded, entry in self._entries.items():
             parts = encoded.split("|")
-            if len(parts) == 4 and parts[0] == abi and parts[1] == platform:
+            if len(parts) == 4 and parts[0] == abi and parts[1] == platform \
+                    and not entry.get("demoted"):
                 out[(parts[2], parts[3])] = BlockConfig.from_dict(entry["config"])
         return out
+
+    def demoted_for(self, abi: str, platform: str
+                    ) -> dict[tuple[str, str], BlockConfig]:
+        """Demoted geometries of one (ABI, platform fingerprint) — the
+        near-config candidate pool a bundle import left behind (configs
+        that failed the target's feasibility re-check at their own bucket
+        but may re-qualify for a smaller live geometry)."""
+        out: dict[tuple[str, str], BlockConfig] = {}
+        for encoded, entry in self._entries.items():
+            parts = encoded.split("|")
+            if len(parts) == 4 and parts[0] == abi and parts[1] == platform \
+                    and entry.get("demoted"):
+                out[(parts[2], parts[3])] = BlockConfig.from_dict(entry["config"])
+        return out
+
+    def entry_bytes(self, key: "CacheKey | str") -> int:
+        """Approximate serialized size of one entry (compact JSON bytes of
+        its value, key included) — the unit the size accounting reports in
+        OpBinding.describe(), ``warm --compact``, and bundle manifests."""
+        encoded = key if isinstance(key, str) else key.encode()
+        entry = self._entries.get(encoded)
+        if entry is None:
+            return 0
+        blob = json.dumps({encoded: entry}, sort_keys=True,
+                          separators=(",", ":"))
+        return len(blob.encode())
+
+    def total_bytes(self) -> int:
+        """Approximate serialized bytes of every live entry (see
+        entry_bytes)."""
+        return sum(self.entry_bytes(encoded) for encoded in self._entries)
 
     def evict(self, key: "CacheKey | str") -> bool:
         """Remove an entry and tombstone it so save() cannot resurrect it

@@ -47,13 +47,46 @@ from repro.tuning.cache import bucket_shapes
 from repro.tuning.config import BlockConfig
 
 __all__ = ["GeometryOutcome", "ConfigTable", "TunedDispatch", "bucket_distance",
-           "DTYPE_PENALTY"]
+           "DTYPE_PENALTY", "DEMOTED_PENALTY", "DISPATCH_PATHS", "STATS_SCHEMA",
+           "consolidated_stats"]
 
 # What crossing a dtype costs, in doublings: a bf16 call prefers any
 # same-dtype bucket within 4 doublings of it over an exact-shape fp32
 # bucket, but borrows the fp32 entry rather than fall to the shipped
 # default when its own dtype was never warmed.
 DTYPE_PENALTY = 4.0
+
+# What a *demoted* candidate costs on top of its distance: a config a
+# tuning-bundle import could not validate at its own bucket (foreign
+# fingerprint, or tuned on a drifted kernel revision) competes only after
+# every first-class candidate within this radius, and must re-pass the
+# borrowing call's feasibility check before it is lent out.
+DEMOTED_PENALTY = 6.0
+
+# The fixed vocabulary of per-call resolution paths.  TunedDispatch.stats
+# carries exactly these keys from construction — new paths are added HERE,
+# never accreted ad hoc at count time, so downstream consumers (serve's
+# dispatch printout, the consolidated stats dict) cannot silently miss one.
+DISPATCH_PATHS = ("exact", "nearest", "near-dtype", "demoted", "default",
+                  "explicit")
+
+# Schema of consolidated_stats(): resolution-path counters + table shape +
+# the bind-time lifecycle counters.  Regression-pinned by the test suite so
+# `serve`/`train` output cannot silently drop a counter.
+STATS_SCHEMA = frozenset(DISPATCH_PATHS) | {
+    "table-entries", "table-demoted", "table-cap", "table-bytes",
+    "evicted-lru", "bundle-imported", "bundle-demoted", "bundle-rejected",
+}
+
+# GeometryOutcome statuses that consolidated_stats() counts (everything
+# else — hits, searches, defaults — is already visible through the
+# resolution paths and the table size).
+_COUNTED_STATUSES = {
+    "cache-evicted-lru": "evicted-lru",
+    "bundle-imported": "bundle-imported",
+    "bundle-demoted": "bundle-demoted",
+    "bundle-rejected": "bundle-rejected",
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,13 +99,24 @@ class GeometryOutcome:
     #                      search-failed-default / cache-expired-searched /
     #                      search-budget-exhausted / unsynthesizable-default /
     #                      cache-evicted-lru (bucket lost its entry to the
-    #                      per-op cap's pressure — reported, not bound)
+    #                      per-op cap's pressure — reported, not bound) /
+    #                      bundle-imported (entry arrived via a tuning
+    #                      bundle and revalidated feasible here) /
+    #                      bundle-demoted (bundle entry that failed the
+    #                      local feasibility re-check: a penalized
+    #                      candidate, never bound first-class) /
+    #                      bundle-rejected (bundle entry structurally
+    #                      foreign to this op — reported, not bound)
     config: BlockConfig
     count: float = 0.0   # profile observations (0 = canonical/unprofiled)
+    bytes: int = 0       # approximate serialized size of the backing cache
+    #                      entry (0 = placeholder outcome with no entry)
 
     def describe(self) -> str:
         hot = f" x{self.count:g}" if self.count else ""
-        return f"{self.shapes or '<scalar>'}/{self.dtype}{hot} {self.status} ({self.config})"
+        size = f" ~{self.bytes}B" if self.bytes else ""
+        return (f"{self.shapes or '<scalar>'}/{self.dtype}{hot} "
+                f"{self.status} ({self.config}){size}")
 
 
 def _parse_bucket(shapes: str) -> list[tuple[int, ...]] | None:
@@ -122,12 +166,21 @@ class ConfigTable:
     feasibility (VMEM working set etc.) against the *borrowing* call's
     dtype; None (tables built outside a TuningContext) admits any
     structurally comparable borrow.
+
+    ``demoted`` is the second-class candidate pool a tuning-bundle
+    import leaves behind (configs that failed the target platform's
+    feasibility re-check at their own bucket, or were tuned on a drifted
+    kernel revision): never matched exactly, never counted against the
+    cap, but competing in the fallback ranking at ``DEMOTED_PENALTY``
+    distance — and always re-``validate``d for the borrowing call first,
+    since demotion means "suspect until proven feasible for YOU".
     """
 
     def __init__(self, op: str, outcomes: Sequence[GeometryOutcome],
                  default: BlockConfig, *,
                  validate: Callable[[BlockConfig, str, str], bool] | None = None,
-                 max_entries: int | None = None) -> None:
+                 max_entries: int | None = None,
+                 demoted: Sequence[GeometryOutcome] = ()) -> None:
         self.op = op
         self.default = default
         self.validate = validate
@@ -142,6 +195,15 @@ class ConfigTable:
             self._by_geom.setdefault(geom, o.config)
             kept.append(o)
         self.outcomes = tuple(kept)
+        self._demoted_by_geom: dict[tuple[str, str], BlockConfig] = {}
+        kept_demoted: list[GeometryOutcome] = []
+        for o in demoted:
+            geom = (o.shapes, o.dtype)
+            if geom in self._by_geom or geom in self._demoted_by_geom:
+                continue
+            self._demoted_by_geom[geom] = o.config
+            kept_demoted.append(o)
+        self.demoted = tuple(kept_demoted)
 
     # -- the old single-config view ---------------------------------------
     @property
@@ -154,7 +216,8 @@ class ConfigTable:
     def resolve(self, args: Sequence[Any] | None = None, *,
                 shapes: str | None = None, dtype: str | None = None
                 ) -> tuple[BlockConfig, str]:
-        """(config, how); how in {exact, nearest, near-dtype, default}.
+        """(config, how); how in {exact, nearest, near-dtype, demoted,
+        default}.
 
         Geometry comes from ``args`` (arrays/tracers/ShapeDtypeStructs,
         bucketed like the profile records them) or an explicit
@@ -168,8 +231,12 @@ class ConfigTable:
         Candidate ranking on a miss: every structurally comparable tuned
         bucket competes — same-dtype candidates at their raw log2
         distance ("nearest"), dtype-crossing candidates at distance +
-        ``DTYPE_PENALTY`` ("near-dtype").  A near-dtype winner must first
-        pass ``validate`` for the borrowing dtype (VMEM re-check); a
+        ``DTYPE_PENALTY`` ("near-dtype"), and demoted bundle candidates
+        at distance + ``DEMOTED_PENALTY`` (plus the dtype penalty when
+        they also cross dtypes; "demoted").  A near-dtype winner must
+        first pass ``validate`` for the borrowing dtype (VMEM re-check);
+        a demoted winner must *always* pass ``validate`` for the
+        borrowing call (it already failed at its own bucket once); a
         failed borrow falls through to the next-closest candidate, and
         only when nothing is comparable does the platform default apply.
         """
@@ -179,12 +246,26 @@ class ConfigTable:
             for o in self.outcomes:           # hottest-first, any dtype
                 if o.shapes == shapes:
                     return self._by_geom[(o.shapes, o.dtype)], "exact"
-            best, best_d = None, None
+            best, best_d, best_how = None, None, "nearest"
             for (g_shapes, _), config in self._by_geom.items():
                 d = bucket_distance(shapes, g_shapes)
                 if d is not None and (best_d is None or d < best_d):
-                    best, best_d = config, d
-            return (best, "nearest") if best is not None \
+                    best, best_d, best_how = config, d, "nearest"
+            for (g_shapes, g_dtype), config in self._demoted_by_geom.items():
+                d = bucket_distance(shapes, g_shapes)
+                if d is None or (best_d is not None
+                                 and d + DEMOTED_PENALTY >= best_d):
+                    continue
+                # demoted candidates are suspect even on the dtype-agnostic
+                # path: re-check feasibility at the QUERY shapes under the
+                # candidate's own dtype (the best information available
+                # when the caller supplied none)
+                if self.validate is not None \
+                        and not self.validate(config, shapes, g_dtype):
+                    continue
+                best, best_d, best_how = config, d + DEMOTED_PENALTY, \
+                    "demoted"
+            return (best, best_how) if best is not None \
                 else (self.default, "default")
         hit = self._by_geom.get((shapes, dtype))
         if hit is not None:
@@ -199,9 +280,16 @@ class ConfigTable:
             else:
                 scored.append((d + DTYPE_PENALTY, 1, g_shapes,
                                "near-dtype", config))
+        for (g_shapes, g_dtype), config in self._demoted_by_geom.items():
+            d = bucket_distance(shapes, g_shapes)
+            if d is None:
+                continue
+            penalty = DEMOTED_PENALTY + (DTYPE_PENALTY if g_dtype != dtype
+                                         else 0.0)
+            scored.append((d + penalty, 2, g_shapes, "demoted", config))
         scored.sort(key=lambda t: t[:3])
         for _, _, _, how, config in scored:
-            if how == "near-dtype" and self.validate is not None \
+            if how in ("near-dtype", "demoted") and self.validate is not None \
                     and not self.validate(config, shapes, dtype):
                 continue
             return config, how
@@ -209,6 +297,18 @@ class ConfigTable:
 
     def __len__(self) -> int:
         return len(self._by_geom)
+
+    def stats(self) -> dict[str, int]:
+        """Table-shape counters: first-class entries, demoted candidates,
+        cap (0 = unbounded), and total serialized bytes of the backing
+        cache entries (summed from each outcome's size accounting)."""
+        return {
+            "table-entries": len(self._by_geom),
+            "table-demoted": len(self._demoted_by_geom),
+            "table-cap": self.max_entries or 0,
+            "table-bytes": (sum(o.bytes for o in self.outcomes)
+                            + sum(o.bytes for o in self.demoted)),
+        }
 
     def __str__(self) -> str:
         n = len(self._by_geom)
@@ -230,8 +330,7 @@ class TunedDispatch:
     def __init__(self, fn: Callable[..., Any], table: ConfigTable) -> None:
         self.fn = fn
         self.table = table
-        self.stats = {"exact": 0, "nearest": 0, "near-dtype": 0, "default": 0,
-                      "explicit": 0}
+        self.stats = {path: 0 for path in DISPATCH_PATHS}
         self.__name__ = getattr(fn, "__name__", table.op)
 
     def __call__(self, *args, **kwargs):
@@ -251,3 +350,32 @@ class TunedDispatch:
 
     def __repr__(self) -> str:
         return f"TunedDispatch({self.table.op}, {len(self.table)} geometries)"
+
+
+def consolidated_stats(dispatch: Any,
+                       geometries: Sequence[GeometryOutcome] = ()
+                       ) -> dict[str, int]:
+    """One op's complete tuning-stats dict, under the pinned STATS_SCHEMA.
+
+    ``dispatch`` is a TunedDispatch or any facade exposing ``.stats``
+    (the per-path counters) and ``.table`` (the ConfigTable) — the
+    profiled-binding wrapper forwards the counters but hides the
+    instance, so launchers hand in a namespace view.
+
+    The single consolidation point for everything `serve`/`train` print
+    per op after an autotuned run: per-path resolution counters (from the
+    dispatch), table shape/size (from the ConfigTable), and the bind-time
+    lifecycle counters (eviction pressure, bundle import outcomes — from
+    the SwapReport's geometries).  Every schema key is always present, so
+    a new counter can only reach production output by joining the schema
+    — never by being silently dropped from an ad hoc printout.
+    """
+    out = {path: int(dispatch.stats.get(path, 0)) for path in DISPATCH_PATHS}
+    out.update(dispatch.table.stats())
+    for counter in _COUNTED_STATUSES.values():
+        out[counter] = 0
+    for g in geometries:
+        counter = _COUNTED_STATUSES.get(g.status)
+        if counter is not None:
+            out[counter] += 1
+    return out

@@ -185,6 +185,11 @@ class WorkloadProfile:
     def count(self, key: GeometryKey) -> float:
         return self._counts.get(key.encode(), 0)
 
+    def counts(self) -> dict[str, float]:
+        """A copy of the raw encoded-key -> count map (the persisted form;
+        what bundle export packages)."""
+        return dict(self._counts)
+
     def ops(self) -> tuple[str, ...]:
         return tuple(sorted({GeometryKey.decode(k).op for k in self._counts}))
 

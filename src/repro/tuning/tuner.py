@@ -76,9 +76,12 @@ log = logging.getLogger("repro.tuning")
 # per-op cap budgets THIS state: placeholder outcomes — budget spent,
 # bucket unsynthesizable, search disabled — hold no entry, so they
 # neither consume cap slots nor justify evicting measured state.
+# "bundle-imported" is a cache hit whose entry arrived via a portable
+# tuning bundle (and revalidated feasible on this platform): first-class
+# entry-backed state, labelled for provenance only.
 _BACKED_STATUSES = frozenset({
     "cache-hit", "cache-miss-searched", "cache-expired-searched",
-    "search-failed-default",
+    "search-failed-default", "bundle-imported",
 })
 
 
@@ -261,6 +264,13 @@ class TuningContext:
       priority        op -> rank (1 = hottest) from profile-driven op
                       ordering; recorded in each TuneOutcome so the
                       SwapReport shows where the search budget went.
+      bundle_report   optional bundle.ImportReport from a tuning-bundle
+                      import that ran just before this bind: entries the
+                      import *rejected* (structurally foreign buckets)
+                      are surfaced as "bundle-rejected" geometries in the
+                      op's SwapReport — reported, never bound — so the
+                      EXPERIMENTS log shows exactly which shipped state
+                      the target site could not use.
       max_entries     per-op dispatch-table cap (the bounded lifecycle
                       mode; Runtime.deploy(max_tuned_entries=) /
                       REPRO_TUNING_MAX_ENTRIES).  Each op binds at most
@@ -290,12 +300,14 @@ class TuningContext:
         search_budget: int | None = None,
         priority: Mapping[str, int] | None = None,
         max_entries: int | None = None,
+        bundle_report: Any = None,
     ) -> None:
         self.cache = cache
         self.platform = platform
         self.ops = None if ops is None else frozenset(ops)
         self.search_on_miss = search_on_miss
         self.profile = profile
+        self.bundle_report = bundle_report
         self.top_k = max(int(top_k), 1)
         self.search_budget = search_budget
         self.max_entries = None if max_entries is None else max(int(max_entries), 1)
@@ -339,7 +351,12 @@ class TuningContext:
         config = self.cache.get(key)
         status = None
         if config is not None:
-            status = "cache-hit"
+            # provenance: a hit on an entry a tuning bundle shipped in (and
+            # this platform revalidated) is labelled as such until a local
+            # search re-measures the key
+            status = ("bundle-imported"
+                      if "bundle_origin" in self.cache.metrics(key)
+                      else "cache-hit")
         elif self.search_on_miss and (self.ops is None or name in self.ops):
             if self.search_budget is not None and \
                     self.searches_spent >= self.search_budget:
@@ -375,7 +392,8 @@ class TuningContext:
         log.info("tune %-18s %-28s %s (%s)", name, shapes or "<scalar>",
                  status, config)
         return GeometryOutcome(shapes=shapes, dtype=dtype, status=status,
-                               config=config, count=count)
+                               config=config, count=count,
+                               bytes=self.cache.entry_bytes(key))
 
     def _evict_under_pressure(
         self, name: str, impl: Any, shapes: str, dtype: str, count: float,
@@ -385,6 +403,7 @@ class TuningContext:
         and report it as "cache-evicted-lru" (carrying the config it loses,
         so the EXPERIMENTS log records what a re-warm would have to redo)."""
         key = self._key(impl, shapes, dtype)
+        nbytes = self.cache.entry_bytes(key)     # size it held, pre-eviction
         self.cache.evict(key)
         self.events.append(TuneEvent(op=name, status="cache-evicted-lru",
                                      key=key.encode(), config=config))
@@ -392,7 +411,7 @@ class TuningContext:
                  shapes or "<scalar>", self.max_entries)
         return GeometryOutcome(shapes=shapes, dtype=dtype,
                                status="cache-evicted-lru", config=config,
-                               count=count)
+                               count=count, bytes=nbytes)
 
     def apply(self, name: str, impl: Any) -> tuple[Any, TuneOutcome | None]:
         """Resolve one chosen impl; returns (impl', TuneOutcome | None).
@@ -473,9 +492,13 @@ class TuningContext:
         bound_swept: list[tuple[str, str]] = []
         for shapes, dtype, config, count in pool:
             if cap is None or slots < cap:
-                outcomes.append(GeometryOutcome(shapes=shapes, dtype=dtype,
-                                                status="cache-hit",
-                                                config=config, count=count))
+                key = self._key(impl, shapes, dtype)
+                status = ("bundle-imported"
+                          if "bundle_origin" in self.cache.metrics(key)
+                          else "cache-hit")
+                outcomes.append(GeometryOutcome(
+                    shapes=shapes, dtype=dtype, status=status, config=config,
+                    count=count, bytes=self.cache.entry_bytes(key)))
                 bound_swept.append((shapes, dtype))
                 slots += 1
             else:
@@ -495,11 +518,43 @@ class TuningContext:
             table_outcomes = (
                 [o for o in outcomes if o.status in _BACKED_STATUSES]
                 + [o for o in outcomes if o.status not in _BACKED_STATUSES])
+        # demoted bundle candidates: configs a cross-site import could not
+        # validate at their own bucket join the table's penalized pool
+        # (never first-class, never against the cap) and the report.  A
+        # still-demoted geometry that also resolved a placeholder outcome
+        # (miss-default, budget spent — a local search would have upgraded
+        # it and cleared the flag) sheds the placeholder: pinning the
+        # shipped default at that bucket would shadow the validated borrow
+        # with a strictly worse answer.
+        dem_entries = self.cache.demoted_for(str(impl.abi), fp)
+        demoted_outcomes = [
+            GeometryOutcome(shapes=shapes, dtype=dtype,
+                            status="bundle-demoted", config=config,
+                            bytes=self.cache.entry_bytes(
+                                self._key(impl, shapes, dtype)))
+            for (shapes, dtype), config in sorted(dem_entries.items())
+        ]
+        if dem_entries:
+            def shadows(o: GeometryOutcome) -> bool:
+                return ((o.shapes, o.dtype) in dem_entries
+                        and o.status not in _BACKED_STATUSES)
+
+            outcomes = [o for o in outcomes if not shadows(o)]
+            table_outcomes = [o for o in table_outcomes if not shadows(o)]
         table = ConfigTable(name, table_outcomes,
                             default=default_config(name, self.platform),
                             validate=bucket_validator(tuner, self.platform),
-                            max_entries=cap)
+                            max_entries=cap, demoted=demoted_outcomes)
         outcomes = outcomes + evicted       # report shows what was shed
+        outcomes += demoted_outcomes        # ...and what binds second-class
+        if self.bundle_report is not None:   # ...and what the import refused
+            outcomes += [
+                GeometryOutcome(shapes=r.shapes, dtype=r.dtype,
+                                status="bundle-rejected",
+                                config=default_config(name, self.platform))
+                for r in self.bundle_report.results
+                if r.op == name and r.status == "rejected"
+            ]
         statuses = [o.status for o in outcomes]
         if len(set(statuses)) == 1:
             summary = statuses[0]

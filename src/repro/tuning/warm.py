@@ -331,13 +331,16 @@ def _compact(cache_path: Path, profile_path: Path,
     if not len(cache):
         print(f"nothing to compact: cache {cache_path} is empty or missing")
         return 0
+    bytes_before = cache.total_bytes()
     report = compact_lru(cache, max_entries,
                          profile=profile if len(profile) else None)
+    bytes_after = cache.total_bytes()
     cache.save()
     print(report.describe())
     print(f"cache {cache_path}: {report.kept} entr"
           f"{'y' if report.kept == 1 else 'ies'} kept "
-          f"(cap {max_entries}, {len(report)} evicted)")
+          f"(cap {max_entries}, {len(report)} evicted, "
+          f"~{bytes_before}B -> ~{bytes_after}B)")
     return 0
 
 

@@ -1,0 +1,939 @@
+"""Portable tuning bundles: cross-site conformance + corruption injection.
+
+The paper's portability thesis applied to tuning state: a laptop-warmed
+artifact ships to a cluster and *adapts* — feasible entries replay
+exactly with zero searches, infeasible ones demote to penalized
+candidates instead of binding raw, and any damaged or ABI-incompatible
+artifact is rejected atomically with the target cache left
+byte-identical.  This suite drives:
+
+  * the laptop->cluster round trip on pod-sim-style fake platforms
+    (export under fingerprint A, import under mismatched fingerprint B);
+  * corruption injection — truncated tarball, tampered member bytes,
+    unknown manifest schema, ABI-major-mismatched bundle — each rejected
+    wholesale, never a partial write;
+  * import idempotency, demoted-entry dispatch/upgrade semantics, the
+    Runtime auto-import path (REPRO_TUNING_BUNDLE / deploy kwarg /
+    Bundle.tuning_bundle reference), the verify CLI, and the pinned
+    consolidated-stats schema.
+"""
+
+import io
+import json
+import tarfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.abi import AbiString
+from repro.core.platform import POD_SIM, Platform
+from repro.core.registry import ImplKind, OpImpl, OpRegistry
+from repro.core.runtime import Runtime
+from repro.kernels.ops import ABIS, register_all
+from repro.tuning import (
+    BlockConfig,
+    BundleFormatError,
+    CacheKey,
+    ConfigTable,
+    GeometryOutcome,
+    TunedDispatch,
+    TuningCache,
+    TuningContext,
+    WorkloadProfile,
+    consolidated_stats,
+    export_bundle,
+    import_bundle,
+    platform_fingerprint,
+    verify_bundle,
+)
+from repro.tuning.bundle import main as bundle_main
+from repro.tuning.dispatch import DISPATCH_PATHS, STATS_SCHEMA
+
+# Two sites sharing hardware but not identity: the laptop the artifact
+# was tuned on, and the cluster it ships to.  The fingerprint strings
+# differ, so every import between them runs the revalidation path.
+SITE_A = Platform(name="export-sim", hardware=POD_SIM.hardware,
+                  mesh_shape=(1,), mesh_axes=("data",),
+                  native_features=frozenset({"pallas_interpret"}))
+SITE_B = Platform(name="cluster-sim", hardware=POD_SIM.hardware,
+                  mesh_shape=(1,), mesh_axes=("data",),
+                  native_features=frozenset({"pallas_interpret"}))
+
+_ABI = AbiString.make("scale", {"args": ["x"]})
+
+# Per-site block budget: SITE_A tolerates any block in the space, SITE_B
+# only small ones — UNLESS the live workload itself is large (feasibility
+# depends on the call's rows, so a config infeasible at its own bucket
+# can re-qualify for a bigger borrowing geometry: the demotion story).
+_BLOCK_BUDGET = {"export-sim": 64, "cluster-sim": 4}
+
+
+def _feasible(cfg, platform, args):
+    rows = args[0].shape[0]
+    return cfg["block"] <= max(_BLOCK_BUDGET.get(platform.name, 64), rows)
+
+
+def _synth(platform, shapes, dtype):
+    parts = [p for p in shapes.split(",") if p]
+    if len(parts) != 1:
+        return None          # scale takes exactly one tensor
+    try:
+        dims = tuple(int(d) for d in parts[0].split("x"))
+    except ValueError:
+        return None
+    return (jnp.zeros(dims, jnp.dtype(dtype)),)
+
+
+def _registry(major=1):
+    from repro.tuning import OpTuner
+
+    abi = AbiString.make("scale", {"args": ["x"]}, major=major)
+    reg = OpRegistry()
+    reg.register(OpImpl(abi=abi, kind=ImplKind.REFERENCE,
+                        fn=lambda x: x, provider="ref"))
+    tuner = OpTuner(op="scale", space={"block": (2, 16)},
+                    example_args=lambda platform: (jnp.zeros((4, 4)),),
+                    feasible=_feasible, args_from_shapes=_synth,
+                    iters=1, warmup=0)
+    reg.register(OpImpl(
+        abi=abi, kind=ImplKind.NATIVE,
+        fn=lambda x, config=None: x * (config.get("block", 1)
+                                       if config is not None else 1),
+        requires_feature="pallas_interpret", provider="fake-native",
+        tuner=tuner,
+    ))
+    return reg
+
+
+def _key(shapes, *, platform, dtype="float32", abi=str(_ABI)):
+    return CacheKey(abi=abi, platform=platform_fingerprint(platform),
+                    shapes=shapes, dtype=dtype)
+
+
+def _export_site_a(tmp_path, *, entries=(("8x8", 2), ("4x4", 16)),
+                   profile_weights=None):
+    """A warmed SITE_A: cache entries + profile + exported bundle."""
+    cache = TuningCache(tmp_path / "a-tuning.json")
+    for shapes, block in entries:
+        cache.put(_key(shapes, platform=SITE_A), BlockConfig.make(block=block),
+                  metrics={"best_us": 1.0})
+    cache.save()
+    profile = WorkloadProfile(tmp_path / "a-workload.json")
+    for shapes, weight in (profile_weights
+                           or [(s, i + 1) for i, (s, _) in enumerate(entries)]):
+        dims = tuple(int(d) for d in shapes.split("x"))
+        profile.record("scale", (jnp.zeros(dims),), weight=weight)
+    profile.save()
+    out, manifest = export_bundle(
+        tmp_path / "site-a.tgz", cache_path=cache.path, platform=SITE_A,
+        profile_path=profile.path)
+    return out, manifest
+
+
+def _repack(src, dst, mutate):
+    """Rewrite a bundle tarball with `mutate(members: dict[str, bytes])`
+    applied — the corruption-injection helper."""
+    members = {}
+    with tarfile.open(src, "r:gz") as tar:
+        for m in tar.getmembers():
+            members[m.name] = tar.extractfile(m).read()
+    mutate(members)
+    with tarfile.open(dst, "w:gz") as tar:
+        for name, blob in members.items():
+            info = tarfile.TarInfo(name)
+            info.size = len(blob)
+            tar.addfile(info, io.BytesIO(blob))
+    return dst
+
+
+# ------------------------------------------------------------- round trip --
+
+
+def test_export_manifest_schema_and_size_accounting(tmp_path):
+    out, manifest = _export_site_a(tmp_path)
+    assert manifest["schema"] == 1
+    assert manifest["kind"] == "repro-tuning-bundle"
+    fp = manifest["fingerprint"]
+    assert fp["platform"] == "export-sim" and fp["hardware"] == "cpu-host"
+    assert fp["backend"] == jax.default_backend()
+    assert fp["vmem_budget"] > 0 and "device_kind" in fp
+    assert manifest["abis"] == {"scale": str(_ABI)}
+    assert manifest["entries"]["count"] == 2
+    assert manifest["entries"]["total_bytes"] > 0
+    # the manifest's byte accounting agrees with the cache's own
+    cache = TuningCache.load(tmp_path / "a-tuning.json")
+    assert manifest["entries"]["total_bytes"] == cache.total_bytes()
+    with tarfile.open(out, "r:gz") as tar:
+        names = {m.name for m in tar.getmembers()}
+    assert names == {"manifest.json", "tuning.json", "workload.json"}
+
+
+def test_export_nothing_under_fingerprint_errors(tmp_path):
+    cache = TuningCache(tmp_path / "t.json")
+    cache.put(_key("8x8", platform=SITE_A), BlockConfig.make(block=2))
+    cache.save()
+    with pytest.raises(ValueError, match="nothing to export"):
+        export_bundle(tmp_path / "b.tgz", cache_path=cache.path,
+                      platform=SITE_B)
+
+
+def test_cross_site_import_feasible_first_class_infeasible_demoted(tmp_path):
+    """The acceptance loop: export A -> import B.  block=2 re-passes
+    feasibility on B (imported first-class), block=16 fails at its own
+    4x4 bucket (demoted — never bound raw) and the cache records both."""
+    out, _ = _export_site_a(tmp_path)
+    reg = _registry()
+    report = import_bundle(out, cache_path=tmp_path / "b-tuning.json",
+                           platform=SITE_B, registry=reg)
+    assert report.cross_site
+    assert report.counts() == {"imported": 1, "demoted": 1, "rejected": 0,
+                               "already-present": 0, "skipped": 0}
+    by_bucket = {r.shapes: r for r in report.results}
+    assert by_bucket["8x8"].status == "imported"
+    assert by_bucket["4x4"].status == "demoted"
+    assert "infeasible" in by_bucket["4x4"].reason
+
+    cache = TuningCache.load(tmp_path / "b-tuning.json")
+    fp_b = platform_fingerprint(SITE_B)
+    # imported entry is live under SITE_B's fingerprint...
+    good = CacheKey(abi=str(_ABI), platform=fp_b, shapes="8x8",
+                    dtype="float32")
+    assert cache.get(good, touch=False) == BlockConfig.make(block=2)
+    assert "bundle_origin" in cache.metrics(good)
+    # ...the demoted one exists but never binds first-class
+    bad = CacheKey(abi=str(_ABI), platform=fp_b, shapes="4x4",
+                   dtype="float32")
+    assert cache.get(bad, touch=False) is None
+    assert cache.is_demoted(bad)
+    assert cache.demoted_for(str(_ABI), fp_b) == {
+        ("4x4", "float32"): BlockConfig.make(block=16)}
+
+
+def test_cross_site_deploy_binds_imported_and_reports_demoted(tmp_path):
+    """A bind on the target: imported buckets dispatch exactly with zero
+    searches ("bundle-imported"), the demoted bucket appears in the
+    SwapReport as "bundle-demoted" and resolves only through the
+    validated penalized borrow — never exactly."""
+    out, _ = _export_site_a(tmp_path)
+    reg = _registry()
+    report = import_bundle(out, cache_path=tmp_path / "b-tuning.json",
+                           platform=SITE_B, registry=reg)
+    profile = WorkloadProfile(tmp_path / "b-workload.json")
+    profile.record("scale", (jnp.zeros((8, 8)),), weight=5)
+
+    cache = TuningCache.load(tmp_path / "b-tuning.json")
+    ctx = TuningContext(cache, SITE_B, profile=profile,
+                        search_on_miss=False, bundle_report=report)
+    binding = reg.bind(["scale"], SITE_B, native=True, freeze=False,
+                       tuning=ctx)
+    assert ctx.searches_spent == 0
+    rep = binding.reports[0]
+    statuses = {(g.shapes, g.status) for g in rep.geometries}
+    assert ("8x8", "bundle-imported") in statuses
+    assert ("4x4", "bundle-demoted") in statuses
+    assert "bundle-imported" in rep.tuning          # mixed(...) summary
+
+    table = binding.impl("scale").config
+    # feasible import: exact dispatch with its shipped config
+    cfg, how = table.resolve(shapes="8x8", dtype="float32")
+    assert (cfg["block"], how) == (2, "exact")
+    # demoted at its own bucket: block=16 fails validation for 4 rows on
+    # SITE_B, and the first-class 8x8 neighbour wins instead
+    cfg, how = table.resolve(shapes="4x4", dtype="float32")
+    assert how == "nearest" and cfg["block"] == 2
+    # live dispatch counts land on the tuned paths
+    dispatch = binding.impl("scale").fn
+    assert isinstance(dispatch, TunedDispatch)
+    binding["scale"](jnp.ones((8, 8)))
+    assert dispatch.stats["exact"] == 1
+
+
+def test_demoted_candidate_lends_out_when_it_requalifies(tmp_path):
+    """The near-config borrow: with no comparable first-class bucket, a
+    big live geometry re-passes the demoted config's feasibility check
+    and dispatches via the "demoted" path; a small one falls to default."""
+    # only the infeasible-on-B entry is rank-2 (plus a structurally
+    # incomparable rank-1 entry so the table is not empty of first-class)
+    out, _ = _export_site_a(tmp_path, entries=(("1024", 2), ("4x4", 16)),
+                            profile_weights=[("1024", 5)])
+    reg = _registry()
+    report = import_bundle(out, cache_path=tmp_path / "b-tuning.json",
+                           platform=SITE_B, registry=reg)
+    assert report.counts()["demoted"] == 1
+    profile = WorkloadProfile(tmp_path / "b-workload.json")
+    profile.record("scale", (jnp.zeros((1024,)),), weight=5)
+    cache = TuningCache.load(tmp_path / "b-tuning.json")
+    ctx = TuningContext(cache, SITE_B, profile=profile,
+                        search_on_miss=False, bundle_report=report)
+    binding = reg.bind(["scale"], SITE_B, native=True, freeze=False,
+                       tuning=ctx)
+    table = binding.impl("scale").config
+    # 64 rows >= block 16: the demoted config re-qualifies and is lent out
+    cfg, how = table.resolve(shapes="64x64", dtype="float32")
+    assert (cfg["block"], how) == (16, "demoted")
+    # 4 rows < block 16 and budget 4: validation fails, platform default
+    cfg, how = table.resolve(shapes="4x4", dtype="float32")
+    assert how == "default"
+    dispatch = binding.impl("scale").fn
+    binding["scale"](jnp.ones((64, 64)))
+    assert dispatch.stats["demoted"] == 1
+
+
+def test_local_search_upgrades_demoted_entry(tmp_path):
+    """A search-enabled bind on the target re-measures the demoted bucket
+    (it does NOT bind first-class) and the fresh put clears the flag."""
+    out, _ = _export_site_a(tmp_path)
+    reg = _registry()
+    import_bundle(out, cache_path=tmp_path / "b-tuning.json",
+                  platform=SITE_B, registry=reg)
+    profile = WorkloadProfile(tmp_path / "b-workload.json")
+    profile.record("scale", (jnp.zeros((4, 4)),), weight=5)
+    cache = TuningCache.load(tmp_path / "b-tuning.json")
+    ctx = TuningContext(cache, SITE_B, profile=profile)
+    binding = reg.bind(["scale"], SITE_B, native=True, freeze=False,
+                       tuning=ctx)
+    rep = binding.reports[0]
+    statuses = {g.shapes: g.status for g in rep.geometries
+                if g.status != "bundle-imported"}
+    assert statuses["4x4"] == "cache-miss-searched"     # re-measured here
+    key = CacheKey(abi=str(_ABI), platform=platform_fingerprint(SITE_B),
+                   shapes="4x4", dtype="float32")
+    assert not cache.is_demoted(key)                    # flag cleared
+    got = cache.get(key, touch=False)
+    assert got is not None and _feasible(got, SITE_B, (jnp.zeros((4, 4)),))
+
+
+def test_entries_for_undeclared_op_are_skipped_not_fatal(tmp_path):
+    """A target that binds no tunable native for a bundled op skips its
+    entries ('skipped') without failing the rest of the import."""
+    out, _ = _export_site_a(tmp_path)
+    bare = OpRegistry()
+    other = AbiString.make("other", {"args": ["x"]})
+    bare.register(OpImpl(abi=other, kind=ImplKind.REFERENCE,
+                         fn=lambda x: x, provider="ref"))
+    report = import_bundle(out, cache_path=tmp_path / "b.json",
+                           platform=SITE_B, registry=bare)
+    assert report.counts()["skipped"] == 2
+    assert "skipped" in report.describe()
+    assert not report.saved and not (tmp_path / "b.json").exists()
+
+
+def test_import_is_idempotent_and_skips_existing_local_state(tmp_path):
+    out, _ = _export_site_a(tmp_path)
+    reg = _registry()
+    cache_path = tmp_path / "b-tuning.json"
+    # the target already measured its own 8x8 winner: imports never
+    # clobber local measurements
+    local = TuningCache(cache_path)
+    local.put(_key("8x8", platform=SITE_B), BlockConfig.make(block=16))
+    local.save()
+
+    r1 = import_bundle(out, cache_path=cache_path, platform=SITE_B,
+                       registry=reg)
+    assert r1.counts()["already-present"] == 1 and r1.counts()["demoted"] == 1
+    assert TuningCache.load(cache_path).get(
+        _key("8x8", platform=SITE_B), touch=False) == BlockConfig.make(block=16)
+
+    before = cache_path.read_bytes()
+    r2 = import_bundle(out, cache_path=cache_path, platform=SITE_B,
+                       registry=reg)
+    assert not r2.saved
+    assert all(r.status == "already-present" for r in r2.results)
+    assert cache_path.read_bytes() == before            # byte-identical no-op
+
+
+def test_structurally_foreign_bucket_rejected_per_entry(tmp_path):
+    """A bucket that cannot match the op's signature is rejected (not
+    imported, not fatal) and surfaces as "bundle-rejected" in the bind."""
+    out, _ = _export_site_a(tmp_path, entries=(("8x8", 2), ("8x8,4x4", 16)),
+                            profile_weights=[("8x8", 5)])
+    reg = _registry()
+    report = import_bundle(out, cache_path=tmp_path / "b.json",
+                           platform=SITE_B, registry=reg)
+    c = report.counts()
+    assert c["imported"] == 1 and c["rejected"] == 1
+    rejected = next(r for r in report.results if r.status == "rejected")
+    assert rejected.shapes == "8x8,4x4"
+
+    cache = TuningCache.load(tmp_path / "b.json")
+    assert len(cache) == 1                               # nothing partial
+    ctx = TuningContext(cache, SITE_B, search_on_miss=False,
+                        bundle_report=report)
+    binding = reg.bind(["scale"], SITE_B, native=True, freeze=False,
+                       tuning=ctx)
+    statuses = {(g.shapes, g.status) for g in binding.reports[0].geometries}
+    assert ("8x8,4x4", "bundle-rejected") in statuses
+
+
+# ------------------------------------------------------ corruption cases --
+
+
+def _seeded_target(tmp_path):
+    """A target cache with pre-existing state, for byte-identity checks."""
+    cache_path = tmp_path / "target.json"
+    cache = TuningCache(cache_path)
+    cache.put(_key("32x32", platform=SITE_B), BlockConfig.make(block=2))
+    cache.save()
+    return cache_path, cache_path.read_bytes()
+
+
+@pytest.mark.parametrize("corrupt", ["truncated", "tampered-checksum",
+                                     "unknown-schema", "abi-major-mismatch",
+                                     "missing-manifest"])
+def test_corrupt_bundles_reject_atomically(tmp_path, corrupt):
+    """Every corruption case rejects the WHOLE bundle with the target
+    cache left byte-identical — never a partial write."""
+    out, _ = _export_site_a(tmp_path)
+    bad = tmp_path / "bad.tgz"
+    reg = _registry()
+
+    if corrupt == "truncated":
+        data = out.read_bytes()
+        bad.write_bytes(data[: len(data) // 2])
+    elif corrupt == "tampered-checksum":
+        def tamper(members):
+            cachefile = json.loads(members["tuning.json"])
+            for entry in cachefile["entries"].values():
+                entry["config"]["block"] = 999999     # poison the config
+            members["tuning.json"] = json.dumps(cachefile).encode()
+        _repack(out, bad, tamper)
+    elif corrupt == "unknown-schema":
+        def future(members):
+            manifest = json.loads(members["manifest.json"])
+            manifest["schema"] = 99
+            members["manifest.json"] = json.dumps(manifest).encode()
+        _repack(out, bad, future)
+    elif corrupt == "abi-major-mismatch":
+        bad = out                       # well-formed artifact...
+        reg = _registry(major=2)        # ...but the site moved to major 2
+    elif corrupt == "missing-manifest":
+        def strip(members):
+            del members["manifest.json"]
+        _repack(out, bad, strip)
+
+    cache_path, before = _seeded_target(tmp_path)
+    with pytest.raises(BundleFormatError):
+        import_bundle(bad, cache_path=cache_path, platform=SITE_B,
+                      registry=reg)
+    assert cache_path.read_bytes() == before
+
+
+def _rechecksum(members):
+    """Recompute the manifest checksums over (possibly mutated) members —
+    the attacker-grade tamper that internal-consistency checks must beat."""
+    import hashlib
+
+    manifest = json.loads(members["manifest.json"])
+    for name in ("tuning.json", "workload.json"):
+        if name in members:
+            manifest["checksums"][name] = hashlib.sha256(
+                members[name]).hexdigest()
+    members["manifest.json"] = json.dumps(manifest).encode()
+
+
+def _mutate_cachefile(members, fn):
+    cachefile = json.loads(members["tuning.json"])
+    fn(cachefile)
+    members["tuning.json"] = json.dumps(cachefile).encode()
+    _rechecksum(members)
+
+
+@pytest.mark.parametrize("case", ["wrong-kind", "cache-schema", "bad-key",
+                                  "foreign-fingerprint", "bad-config",
+                                  "no-abi-table", "missing-cache-member",
+                                  "profile-schema"])
+def test_internally_inconsistent_bundles_reject_atomically(tmp_path, case):
+    """Even a bundle whose checksums are VALID is rejected wholesale when
+    its internals disagree — wrong artifact kind, wrong member schema,
+    malformed/foreign entries, a stripped member or ABI table."""
+    out, _ = _export_site_a(tmp_path)
+    bad = tmp_path / "bad.tgz"
+
+    def mutate(members):
+        if case == "wrong-kind":
+            manifest = json.loads(members["manifest.json"])
+            manifest["kind"] = "not-a-tuning-bundle"
+            members["manifest.json"] = json.dumps(manifest).encode()
+        elif case == "cache-schema":
+            _mutate_cachefile(members, lambda c: c.update(schema=99))
+        elif case == "bad-key":
+            def rekey(c):
+                key, entry = next(iter(c["entries"].items()))
+                c["entries"]["only|three|parts"] = entry
+                del c["entries"][key]
+            _mutate_cachefile(members, rekey)
+        elif case == "foreign-fingerprint":
+            def relocate(c):
+                key, entry = next(iter(c["entries"].items()))
+                parts = key.split("|")
+                parts[1] = "somewhere-else/gpu-host/cuda"
+                c["entries"]["|".join(parts)] = entry
+                del c["entries"][key]
+            _mutate_cachefile(members, relocate)
+        elif case == "bad-config":
+            def poison(c):
+                for entry in c["entries"].values():
+                    entry["config"] = {"block": "not-an-int"}
+            _mutate_cachefile(members, poison)
+        elif case == "no-abi-table":
+            manifest = json.loads(members["manifest.json"])
+            del manifest["abis"]
+            members["manifest.json"] = json.dumps(manifest).encode()
+        elif case == "missing-cache-member":
+            del members["tuning.json"]
+            manifest = json.loads(members["manifest.json"])
+            del manifest["checksums"]["tuning.json"]
+            members["manifest.json"] = json.dumps(manifest).encode()
+        elif case == "profile-schema":
+            members["workload.json"] = json.dumps(
+                {"schema": 42, "counts": {}}).encode()
+            _rechecksum(members)
+
+    _repack(out, bad, mutate)
+    cache_path, before = _seeded_target(tmp_path)
+    with pytest.raises(BundleFormatError):
+        import_bundle(bad, cache_path=cache_path, platform=SITE_B,
+                      registry=_registry())
+    assert cache_path.read_bytes() == before
+
+
+def test_export_ops_filter_and_two_abi_cache_error(tmp_path):
+    """--ops restricts the artifact to named ops (cache AND profile); a
+    cache holding one op under two ABI strings refuses to export."""
+    cache = TuningCache(tmp_path / "t.json")
+    cache.put(_key("8x8", platform=SITE_A), BlockConfig.make(block=2))
+    other = AbiString.make("other", {"args": ["x"]})
+    cache.put(_key("4x4", platform=SITE_A, abi=str(other)),
+              BlockConfig.make(block=4))
+    cache.save()
+    profile = WorkloadProfile(tmp_path / "w.json")
+    profile.record("scale", (jnp.zeros((8, 8)),), weight=2)
+    profile.record("other", (jnp.zeros((4, 4)),), weight=1)
+    profile.save()
+    out, manifest = export_bundle(tmp_path / "scoped.tgz",
+                                  cache_path=cache.path, platform=SITE_A,
+                                  profile_path=profile.path, ops=["scale"])
+    assert manifest["abis"] == {"scale": str(_ABI)}
+    assert manifest["entries"]["count"] == 1
+    with tarfile.open(out, "r:gz") as tar:
+        counts = json.loads(tar.extractfile("workload.json").read())["counts"]
+    assert list(counts) == ["scale|8x8|float32"]     # other's traffic stayed
+
+    # one op under two ABI strings is a malformed cache, not an artifact
+    stale = _key("16x16", platform=SITE_A,
+                 abi=str(_ABI).replace("1:0", "1:1"))
+    cache.put(stale, BlockConfig.make(block=8))
+    cache.save()
+    with pytest.raises(BundleFormatError, match="two ABI strings"):
+        export_bundle(tmp_path / "x.tgz", cache_path=cache.path,
+                      platform=SITE_A)
+
+
+def test_tampered_entry_with_recomputed_checksum_still_rejected(tmp_path):
+    """An attacker-grade tamper (member AND checksum rewritten) cannot
+    smuggle an entry under a different ABI than the manifest declares —
+    internal consistency is checked member-against-manifest."""
+    out, _ = _export_site_a(tmp_path)
+    bad = tmp_path / "bad.tgz"
+
+    def smuggle(members):
+        import hashlib
+
+        cachefile = json.loads(members["tuning.json"])
+        key, entry = next(iter(cachefile["entries"].items()))
+        foreign = key.replace("scale/1:0", "scale/3:0")
+        cachefile["entries"][foreign] = entry
+        del cachefile["entries"][key]
+        blob = json.dumps(cachefile).encode()
+        members["tuning.json"] = blob
+        manifest = json.loads(members["manifest.json"])
+        manifest["checksums"]["tuning.json"] = hashlib.sha256(blob).hexdigest()
+        members["manifest.json"] = json.dumps(manifest).encode()
+
+    _repack(out, bad, smuggle)
+    cache_path, before = _seeded_target(tmp_path)
+    with pytest.raises(BundleFormatError):
+        import_bundle(bad, cache_path=cache_path, platform=SITE_B,
+                      registry=_registry())
+    assert cache_path.read_bytes() == before
+
+
+# ------------------------------------------------------------------ verify --
+
+
+def test_verify_round_trip_ok_with_demotions(tmp_path):
+    out, _ = _export_site_a(tmp_path)
+    code, lines = verify_bundle(out, platform=SITE_B, registry=_registry())
+    text = "\n".join(lines)
+    assert code == 0, text
+    assert "zero searches" in text and "demoted" in text
+
+
+def test_verify_flags_coverage_gap(tmp_path):
+    """A profile bucket the bundle never warmed means the target WOULD
+    cold-search: verify must fail, naming the bucket."""
+    out, _ = _export_site_a(
+        tmp_path, entries=(("8x8", 2),),
+        profile_weights=[("8x8", 5), ("16x16", 3)])   # 16x16 never warmed
+    code, lines = verify_bundle(out, platform=SITE_B, registry=_registry())
+    text = "\n".join(lines)
+    assert code == 1
+    assert "16x16" in text and "cold search" in text
+
+
+def test_verify_same_site_round_trip(tmp_path):
+    out, _ = _export_site_a(tmp_path)
+    code, lines = verify_bundle(out, platform=SITE_A, registry=_registry())
+    assert code == 0, "\n".join(lines)
+
+
+def test_verify_handles_partially_supported_bundle(tmp_path):
+    """Regression: a bundle carrying an op the target binds no tunable
+    native for must verify the rest and report, not crash on the skipped
+    op's missing binding."""
+    cache = TuningCache(tmp_path / "t.json")
+    cache.put(_key("8x8", platform=SITE_A), BlockConfig.make(block=2))
+    other = AbiString.make("other", {"args": ["x"]})
+    cache.put(_key("4x4", platform=SITE_A, abi=str(other)),
+              BlockConfig.make(block=2))
+    cache.save()
+    out, _ = export_bundle(tmp_path / "mixed.tgz", cache_path=cache.path,
+                           platform=SITE_A)
+    code, lines = verify_bundle(out, platform=SITE_B, registry=_registry())
+    text = "\n".join(lines)
+    assert code == 0, text                       # scale verified; other skipped
+    assert "skipped" in text
+
+
+def test_malformed_manifest_abi_rejects_not_crashes(tmp_path):
+    """Regression: a hand-edited abis table with an unparseable ABI string
+    must reject as BundleFormatError (so Runtime degrades to a cold
+    deploy), never escape as a raw AbiError."""
+    out, _ = _export_site_a(tmp_path)
+    bad = tmp_path / "bad.tgz"
+
+    def poison(members):
+        manifest = json.loads(members["manifest.json"])
+        manifest["abis"]["bogus_op"] = "not-an-abi"
+        members["manifest.json"] = json.dumps(manifest).encode()
+
+    _repack(out, bad, poison)
+    cache_path, before = _seeded_target(tmp_path)
+    with pytest.raises(BundleFormatError, match="malformed"):
+        import_bundle(bad, cache_path=cache_path, platform=SITE_B,
+                      registry=_registry())
+    assert cache_path.read_bytes() == before
+
+
+def test_dtype_agnostic_demoted_resolve_still_validates(tmp_path):
+    """Regression: the explicit-bucket (dtype=None) lookup must not hand
+    out a demoted config the feasibility check rejects — same promise as
+    the dtype'd path."""
+    rejected = []
+
+    def validate(config, shapes, dtype):
+        rejected.append((str(config), shapes, dtype))
+        return False
+
+    table = ConfigTable(
+        "op", [],
+        default=BlockConfig.make(block=1),
+        validate=validate,
+        demoted=[GeometryOutcome(shapes="4x4", dtype="float32",
+                                 status="bundle-demoted",
+                                 config=BlockConfig.make(block=16))],
+    )
+    cfg, how = table.resolve(shapes="8x8")       # no dtype given
+    assert how == "default" and cfg["block"] == 1
+    assert rejected == [("block=16", "8x8", "float32")]   # checked, refused
+
+
+def test_verify_fails_when_site_binds_no_bundled_op(tmp_path):
+    out, _ = _export_site_a(tmp_path)
+    bare = OpRegistry()
+    other = AbiString.make("other", {"args": ["x"]})
+    bare.register(OpImpl(abi=other, kind=ImplKind.REFERENCE,
+                         fn=lambda x: x, provider="ref"))
+    code, lines = verify_bundle(out, platform=SITE_B, registry=bare)
+    assert code == 1
+    assert "no tunable native" in "\n".join(lines)
+
+
+# ------------------------------------------------------------- runtime ----
+
+
+def _pod_sim_bundle(tmp_path):
+    """A real pod-sim artifact: warmed rmsnorm traffic, exported."""
+    from repro.tuning.warm import warm_cache
+
+    reg = register_all(OpRegistry())
+    profile = WorkloadProfile(tmp_path / "lap-workload.json")
+    w = jnp.zeros((64,))
+    profile.record("rmsnorm", (jnp.zeros((8, 64)), w), weight=4)
+    profile.record("rmsnorm", (jnp.zeros((48, 64)), w), weight=2)
+    profile.save()
+    cache = TuningCache(tmp_path / "lap-tuning.json")
+    warm_cache(profile, cache, POD_SIM, registry=reg)
+    cache.save()
+    out, _ = export_bundle(tmp_path / "laptop.tgz", cache_path=cache.path,
+                           platform=POD_SIM, profile_path=profile.path)
+    return out
+
+
+def test_runtime_env_auto_import_binds_bundle_entries(tmp_path):
+    """REPRO_TUNING_BUNDLE auto-imports before binding: the shipped
+    buckets bind as "bundle-imported" with zero searches paid for them,
+    and the import stats ride on the container."""
+    from repro.core.bundle import Bundle
+
+    out = _pod_sim_bundle(tmp_path)
+    host_env = {
+        "REPRO_PLATFORM": "pod-sim",
+        "REPRO_TUNING_CACHE": str(tmp_path / "site-tuning.json"),
+        "REPRO_WORKLOAD_PROFILE": str(tmp_path / "site-workload.json"),
+        "REPRO_TUNING_BUNDLE": str(out),
+        "REPRO_SEARCH_BUDGET": "0",
+    }
+    bundle = Bundle(name="app", tag="t", model_config={}, recipe={},
+                    required_ops={"rmsnorm": str(ABIS["rmsnorm"])}, env={})
+    rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c = rt.deploy(bundle, native_ops=True, autotune=True)
+    assert c.tuning_imports is not None
+    assert c.tuning_imports.counts()["imported"] == 2
+    rep = next(r for r in c.binding.reports if r.op == "rmsnorm")
+    imported = {g.shapes for g in rep.geometries
+                if g.status == "bundle-imported"}
+    assert {"8x64,64", "64x64,64"} <= imported
+    # size accounting shows up in the human-facing describe()
+    assert "state ~" in c.binding.describe()
+    # the allowlist forwards the bundle reference into the container env
+    assert c.env["REPRO_TUNING_BUNDLE"] == str(out)
+    # live traffic at a shipped bucket dispatches exactly
+    x = jnp.ones((8, 64)), jnp.ones((64,))
+    jax.block_until_ready(c.binding["rmsnorm"](*x))
+    assert c.binding.impl("rmsnorm").fn.stats["exact"] == 1
+    rt.cleanup()
+
+
+def test_runtime_rejected_bundle_degrades_to_cold_deploy(tmp_path):
+    """A corrupt artifact must not kill the deployment: the site cache
+    stays untouched and the deploy proceeds cold (env-triggered features
+    degrade, they do not error)."""
+    from repro.core.bundle import Bundle
+
+    out = _pod_sim_bundle(tmp_path)
+    data = out.read_bytes()
+    bad = tmp_path / "bad.tgz"
+    bad.write_bytes(data[: len(data) // 2])
+    host_env = {
+        "REPRO_PLATFORM": "pod-sim",
+        "REPRO_TUNING_CACHE": str(tmp_path / "site-tuning.json"),
+        "REPRO_WORKLOAD_PROFILE": str(tmp_path / "site-workload.json"),
+        "REPRO_TUNING_BUNDLE": str(bad),
+        "REPRO_SEARCH_BUDGET": "0",
+    }
+    bundle = Bundle(name="app", tag="t", model_config={}, recipe={},
+                    required_ops={"rmsnorm": str(ABIS["rmsnorm"])}, env={})
+    rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c = rt.deploy(bundle, native_ops=True, autotune=True)
+    assert c.tuning_imports is None
+    rep = next(r for r in c.binding.reports if r.op == "rmsnorm")
+    assert "bundle" not in rep.tuning
+    rt.cleanup()
+
+
+def test_run_bundle_carries_tuning_bundle_reference(tmp_path):
+    """core.Bundle.tuning_bundle travels with the run bundle (save/load,
+    layering) and the Runtime auto-imports it when env/kwarg are silent."""
+    from repro.core.bundle import Bundle
+
+    out = _pod_sim_bundle(tmp_path)
+    b = Bundle(name="app", tag="t", model_config={}, recipe={},
+               required_ops={"rmsnorm": str(ABIS["rmsnorm"])}, env={},
+               tuning_bundle=str(out))
+    p = b.save(tmp_path / "bundle.json")
+    loaded = Bundle.load(p)
+    assert loaded.tuning_bundle == str(out)
+    assert loaded.digest == b.digest
+    # layering: the child's reference wins; absent child inherits parent
+    base = Bundle(name="base", tag="v1", model_config={"a": 1}, recipe={},
+                  required_ops={}, env={}, tuning_bundle="base.tgz")
+    child = Bundle(name="app2", tag="t", model_config={}, recipe={},
+                   required_ops={}, env={}, base="base:v1")
+    assert child.flatten_onto(base).tuning_bundle == "base.tgz"
+
+    host_env = {
+        "REPRO_PLATFORM": "pod-sim",
+        "REPRO_TUNING_CACHE": str(tmp_path / "site-tuning.json"),
+        "REPRO_WORKLOAD_PROFILE": str(tmp_path / "site-workload.json"),
+        "REPRO_SEARCH_BUDGET": "0",
+    }
+    rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c = rt.deploy(loaded, native_ops=True, autotune=True)
+    assert c.tuning_imports is not None and c.tuning_imports.counts()["imported"] == 2
+    rt.cleanup()
+
+
+# ----------------------------------------------------------------- CLI ----
+
+
+def test_cli_export_import_verify_loop(tmp_path, capsys, monkeypatch):
+    monkeypatch.setenv("REPRO_PLATFORM", "pod-sim")
+    _ = _pod_sim_bundle(tmp_path)   # warms lap-tuning.json on pod-sim
+    out = tmp_path / "cli.tgz"
+    rc = bundle_main(["export", "--out", str(out),
+                      "--cache", str(tmp_path / "lap-tuning.json"),
+                      "--profile", str(tmp_path / "lap-workload.json"),
+                      "--platform", "pod-sim"])
+    assert rc == 0
+    assert "exported" in capsys.readouterr().out and out.is_file()
+
+    rc = bundle_main(["import", str(out),
+                      "--cache", str(tmp_path / "site.json"),
+                      "--platform", "pod-sim"])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "2 imported" in text and "updated" in text
+    # second import: explicit no-op
+    rc = bundle_main(["import", str(out),
+                      "--cache", str(tmp_path / "site.json"),
+                      "--platform", "pod-sim"])
+    assert rc == 0
+    assert "no-op import" in capsys.readouterr().out
+
+    rc = bundle_main(["verify", str(out), "--platform", "pod-sim"])
+    assert rc == 0
+    assert "zero searches" in capsys.readouterr().out
+
+
+def test_cli_rejects_corrupt_bundle_nonzero(tmp_path, capsys):
+    out = _pod_sim_bundle(tmp_path)
+    data = out.read_bytes()
+    bad = tmp_path / "bad.tgz"
+    bad.write_bytes(data[: len(data) // 2])
+    target = tmp_path / "site.json"
+    rc = bundle_main(["import", str(bad), "--cache", str(target),
+                      "--platform", "pod-sim"])
+    assert rc == 1
+    assert "not modified" in capsys.readouterr().out
+    assert not target.exists()
+
+    rc = bundle_main(["verify", str(bad), "--platform", "pod-sim"])
+    assert rc == 1
+    assert "rejected the bundle outright" in capsys.readouterr().out
+
+
+def test_cli_export_empty_cache_fails_cleanly(tmp_path, capsys):
+    rc = bundle_main(["export", "--out", str(tmp_path / "x.tgz"),
+                      "--cache", str(tmp_path / "missing.json"),
+                      "--platform", "pod-sim"])
+    assert rc == 1
+    assert "export failed" in capsys.readouterr().out
+
+
+# ------------------------------------------- consolidated stats schema ----
+
+
+def test_consolidated_stats_schema_is_pinned():
+    """Regression pin: the one stats dict serve/train print from always
+    carries exactly the schema keys — near-dtype, demotion, eviction and
+    bundle counters included — so no counter can silently drop out."""
+    table = ConfigTable(
+        "op",
+        [GeometryOutcome(shapes="8x8", dtype="float32", status="cache-hit",
+                         config=BlockConfig.make(block=2), bytes=100)],
+        default=BlockConfig.make(block=1),
+        demoted=[GeometryOutcome(shapes="4x4", dtype="float32",
+                                 status="bundle-demoted",
+                                 config=BlockConfig.make(block=16), bytes=50)],
+        max_entries=3,
+    )
+    dispatch = TunedDispatch(lambda x, config=None: x, table)
+    assert set(dispatch.stats) == set(DISPATCH_PATHS)
+
+    geometries = [
+        GeometryOutcome(shapes="8x8", dtype="float32",
+                        status="bundle-imported",
+                        config=BlockConfig.make(block=2)),
+        GeometryOutcome(shapes="4x4", dtype="float32",
+                        status="bundle-demoted",
+                        config=BlockConfig.make(block=16)),
+        GeometryOutcome(shapes="2x2", dtype="float32",
+                        status="bundle-rejected",
+                        config=BlockConfig.make(block=1)),
+        GeometryOutcome(shapes="64x64", dtype="float32",
+                        status="cache-evicted-lru",
+                        config=BlockConfig.make(block=4)),
+    ]
+    stats = consolidated_stats(dispatch, geometries)
+    assert set(stats) == STATS_SCHEMA               # the pin
+    assert stats["table-entries"] == 1 and stats["table-demoted"] == 1
+    assert stats["table-cap"] == 3 and stats["table-bytes"] == 150
+    assert stats["bundle-imported"] == 1 and stats["bundle-demoted"] == 1
+    assert stats["bundle-rejected"] == 1 and stats["evicted-lru"] == 1
+    # counting a resolution updates the consolidated view coherently
+    dispatch(jnp.ones((8, 8)))
+    assert consolidated_stats(dispatch, geometries)["exact"] == 1
+
+
+def test_serve_dispatch_printout_iterates_the_schema(tmp_path, capsys):
+    """The launcher printout is generated FROM the pinned schema: every
+    resolution path appears by name, plus table shape/bytes and any
+    nonzero lifecycle counters (bundle import stats included)."""
+    from repro.core.bundle import Bundle
+    from repro.launch.serve import print_dispatch_stats
+
+    out = _pod_sim_bundle(tmp_path)
+    host_env = {
+        "REPRO_PLATFORM": "pod-sim",
+        "REPRO_TUNING_CACHE": str(tmp_path / "site-tuning.json"),
+        "REPRO_WORKLOAD_PROFILE": str(tmp_path / "site-workload.json"),
+        "REPRO_TUNING_BUNDLE": str(out),
+        "REPRO_SEARCH_BUDGET": "0",
+    }
+    bundle = Bundle(name="app", tag="t", model_config={}, recipe={},
+                    required_ops={"rmsnorm": str(ABIS["rmsnorm"])}, env={})
+    rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c = rt.deploy(bundle, native_ops=True, autotune=True, profile=True)
+    jax.block_until_ready(c.binding["rmsnorm"](jnp.ones((8, 64)),
+                                               jnp.ones((64,))))
+    print_dispatch_stats(c)
+    text = capsys.readouterr().out
+    assert "tuning bundle [pod-sim/cpu-host/cpu]: " in text
+    assert "imported=2" in text
+    line = next(ln for ln in text.splitlines()
+                if ln.startswith("dispatch rmsnorm"))
+    for path in DISPATCH_PATHS:
+        assert f"{path}=" in line                 # schema-driven printout
+    assert "table 3" in line and "~" in line      # fullness (2 imported
+    # buckets + the canonical placeholder) and approximate bytes
+    assert "bundle-imported=2" in line            # lifecycle counter
+    rt.cleanup()
+
+
+def test_dispatch_paths_cover_every_resolution_outcome():
+    """Every `how` resolve() can return is a schema path (a new fallback
+    path must register itself or this trips)."""
+    table = ConfigTable(
+        "op",
+        [GeometryOutcome(shapes="8x8", dtype="float32", status="cache-hit",
+                         config=BlockConfig.make(block=2))],
+        default=BlockConfig.make(block=1),
+        demoted=[GeometryOutcome(shapes="4x4x4", dtype="float32",
+                                 status="bundle-demoted",
+                                 config=BlockConfig.make(block=16))],
+    )
+    hows = {
+        table.resolve(shapes="8x8", dtype="float32")[1],       # exact
+        table.resolve(shapes="16x16", dtype="float32")[1],     # nearest
+        table.resolve(shapes="16x16", dtype="bfloat16")[1],    # near-dtype
+        table.resolve(shapes="8x8x8", dtype="float32")[1],     # demoted
+        table.resolve(shapes="scalar", dtype="float32")[1],    # default
+    }
+    assert hows == {"exact", "nearest", "near-dtype", "demoted", "default"}
+    assert hows <= set(DISPATCH_PATHS)
+    # the dtype-agnostic (explicit bucket string) lookup reaches demoted
+    # candidates too, still behind every first-class one
+    assert table.resolve(shapes="8x8x8")[1] == "demoted"
+    assert table.resolve(shapes="16x16")[1] == "nearest"

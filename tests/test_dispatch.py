@@ -267,7 +267,7 @@ def test_dispatch_under_jit_distinct_geometries_no_retrace_blowup(tmp_path):
     assert isinstance(dispatch, TunedDispatch)
     # 2 compiled geometries -> exactly 2 resolutions despite 5 calls
     assert dispatch.stats == {"exact": 2, "nearest": 0, "near-dtype": 0,
-                              "default": 0, "explicit": 0}
+                              "demoted": 0, "default": 0, "explicit": 0}
     assert dispatch.hit_rate == 1.0
 
 

@@ -1,24 +1,40 @@
-"""Property-based invariants for geometry dispatch (hypothesis).
+"""Property-based invariants for geometry dispatch + tuning bundles.
 
 `bucket_distance` must behave like a metric on structure-matched buckets
 (symmetry, identity-is-zero) and return None — never a number — for
 structurally incomparable ones; `ConfigTable.resolve` must be consistent
 with it (the nearest-neighbour fallback really picks a minimum-distance
-bucket); and the dtype-crossing borrow must never hand out a config the
-borrowing dtype's feasibility check rejects.
+bucket); the dtype-crossing borrow must never hand out a config the
+borrowing dtype's feasibility check rejects; and a tuning-bundle
+export→import round trip of a randomly generated cache must be lossless
+when fingerprints match (entry set, configs, `last_used` recency order
+all preserved) and idempotent (a second import is a byte-level no-op).
 """
+
+import tempfile
+from pathlib import Path
 
 import pytest
 
 pytest.importorskip("hypothesis")
 
+import jax  # noqa: E402
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core.abi import AbiString  # noqa: E402
+from repro.core.platform import POD_SIM, Platform  # noqa: E402
+from repro.core.registry import ImplKind, OpImpl, OpRegistry  # noqa: E402
 from repro.tuning import (  # noqa: E402
     BlockConfig,
+    CacheKey,
     ConfigTable,
     GeometryOutcome,
+    OpTuner,
+    TuningCache,
     bucket_distance,
+    export_bundle,
+    import_bundle,
+    platform_fingerprint,
 )
 
 _dim = st.integers(min_value=0, max_value=10).map(lambda e: 2 ** e)
@@ -121,6 +137,104 @@ def test_borrowed_config_never_exceeds_vmem_for_borrowing_dtype(data, budget):
         assert all(not validate(BlockConfig.make(block=i + 1), query,
                                 "bfloat16")
                    for i in range(len(buckets)))
+
+
+# ------------------------------------------------- bundle round trip ------
+
+_FAKE_SIM = Platform(name="prop-sim", hardware=POD_SIM.hardware,
+                     mesh_shape=(1,), mesh_axes=("data",),
+                     native_features=frozenset({"pallas_interpret"}))
+_SCALE_ABI = AbiString.make("scale", {"args": ["x"]})
+
+
+def _struct_synth(platform, shapes, dtype):
+    """Allocation-free synthesizer: the import's structural check only
+    inspects shapes/dtypes, so ShapeDtypeStructs suffice."""
+    parts = [p for p in shapes.split(",") if p]
+    if len(parts) != 1 or parts[0] == "scalar":
+        return None
+    try:
+        dims = tuple(int(d) for d in parts[0].split("x"))
+    except ValueError:
+        return None
+    return (jax.ShapeDtypeStruct(dims, dtype),)
+
+
+def _scale_registry():
+    reg = OpRegistry()
+    reg.register(OpImpl(abi=_SCALE_ABI, kind=ImplKind.REFERENCE,
+                        fn=lambda x: x, provider="ref"))
+    reg.register(OpImpl(
+        abi=_SCALE_ABI, kind=ImplKind.NATIVE,
+        fn=lambda x, config=None: x,
+        requires_feature="pallas_interpret", provider="fake-native",
+        tuner=OpTuner(op="scale", space={"block": (2, 4)},
+                      example_args=lambda p: (jax.ShapeDtypeStruct((4, 4),
+                                                                   "float32"),),
+                      args_from_shapes=_struct_synth, iters=1, warmup=0),
+    ))
+    return reg
+
+
+_prop_dim = st.integers(min_value=0, max_value=5).map(lambda e: 2 ** e)
+_prop_bucket = st.lists(_prop_dim, min_size=1, max_size=2).map(
+    lambda dims: "x".join(str(d) for d in dims))
+_prop_geom = st.tuples(_prop_bucket,
+                       st.sampled_from(["float32", "bfloat16"]))
+_prop_entries = st.dictionaries(
+    _prop_geom, st.integers(min_value=1, max_value=64),
+    min_size=1, max_size=6,
+).map(lambda d: list(d.items()))
+
+
+@given(_prop_entries, st.randoms(use_true_random=False))
+@settings(max_examples=25, deadline=None)
+def test_bundle_round_trip_is_lossless_and_idempotent(entries, rng):
+    """Matching fingerprints => export→import preserves the entry set,
+    every config, and the `last_used` recency ORDER (absolute stamps are
+    re-issued, relative order is the LRU-visible property); a second
+    import of the same bundle changes nothing, byte for byte."""
+    rng.shuffle(entries)                       # insertion order IS the
+    reg = _scale_registry()                    # recency order under test
+    fp = platform_fingerprint(_FAKE_SIM)
+    with tempfile.TemporaryDirectory() as tmp:
+        tmp = Path(tmp)
+        cache = TuningCache(tmp / "a.json")
+        keys = []
+        for (shapes, dtype), block in entries:
+            key = CacheKey(abi=str(_SCALE_ABI), platform=fp,
+                           shapes=shapes, dtype=dtype)
+            cache.put(key, BlockConfig.make(block=block),
+                      metrics={"best_us": float(block)})
+            keys.append(key)
+        cache.save()
+        out, manifest = export_bundle(tmp / "a.tgz", cache_path=cache.path,
+                                      platform=_FAKE_SIM)
+        assert manifest["entries"]["count"] == len(entries)
+
+        report = import_bundle(out, cache_path=tmp / "b.json",
+                               platform=_FAKE_SIM, registry=reg)
+        assert not report.cross_site
+        assert report.counts()["imported"] == len(entries)
+        imported = TuningCache.load(tmp / "b.json")
+        # entry set and configs are preserved exactly
+        assert set(imported.raw_keys()) == set(cache.raw_keys())
+        for key, ((_, _), block) in zip(keys, entries):
+            assert imported.get(key, touch=False) == \
+                BlockConfig.make(block=block)
+            assert not imported.is_demoted(key)
+        # recency ORDER is preserved (stamps are re-issued monotonically)
+        order = sorted(keys, key=lambda k: cache.last_used(k))
+        order_b = sorted(keys, key=lambda k: imported.last_used(k))
+        assert [k.encode() for k in order] == [k.encode() for k in order_b]
+
+        # idempotence: the second import is a no-op, byte for byte
+        before = (tmp / "b.json").read_bytes()
+        again = import_bundle(out, cache_path=tmp / "b.json",
+                              platform=_FAKE_SIM, registry=reg)
+        assert not again.saved
+        assert all(r.status == "already-present" for r in again.results)
+        assert (tmp / "b.json").read_bytes() == before
 
 
 @given(_matched(n_min=2))
