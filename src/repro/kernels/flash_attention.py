@@ -8,9 +8,18 @@ HBM traffic.  Block shapes default to (128, head_dim): MXU-aligned and
 small enough that q/k/v tiles + scratch fit VMEM for head_dim <= 256.
 
 Causal blocks strictly above the diagonal are skipped with pl.when — for
-long sequences this halves the executed grid.  An optional kv_len scalar
-(SMEM) masks unwritten cache slots, which makes the same kernel serve
-decode (Sq == 1) against a partially filled cache.
+long sequences this halves the executed grid.  Two scalar rows ride in
+SMEM (prefetched, per batch element): `kv_len` masks unwritten cache
+slots and `q_start` dynamically re-anchors the causal diagonal.  Between
+them the same kernel serves all three serving geometries:
+
+  * prefill  — kv_len = Sk, q_start = Sk - Sq (the static diagonal);
+  * decode   — Sq == 1 against a partially filled cache, per-batch
+    kv_len = pos + 1 (continuous batching: every slot at its own
+    position in one call);
+  * chunked prefill — Sq == C chunk queries starting at global position
+    `q_start` against the cache: query i attends keys <= q_start + i,
+    keys past kv_len masked.
 """
 
 from __future__ import annotations
@@ -32,7 +41,7 @@ _NEG_INF = -1e30
 
 
 def _flash_kernel(
-    kvlen_ref,      # SMEM (1,) int32
+    meta_ref,       # SMEM (2, B) int32: row 0 kv_len, row 1 q_start
     q_ref,          # (1, bq, 1, dh)
     k_ref,          # (1, bk, 1, dh)
     v_ref,          # (1, bk, 1, dh)
@@ -46,10 +55,14 @@ def _flash_kernel(
     block_q: int,
     block_k: int,
     kv_blocks: int,
-    q_offset: int,  # sk - sq, aligns causal diagonal for prefill
+    q_offset: int,      # sk - sq: static diagonal for the skip heuristic
+    dyn_offset: bool,   # True when q_start is a traced value (chunk prefill)
 ):
+    bi = pl.program_id(0)
     iq = pl.program_id(2)
     ik = pl.program_id(3)
+    kvl = meta_ref[0, bi]
+    qs = meta_ref[1, bi]
 
     @pl.when(ik == 0)
     def _init():
@@ -60,10 +73,11 @@ def _flash_kernel(
     q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
     k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
 
-    # Skip fully-masked blocks (strictly above the causal diagonal).
-    run = jnp.bool_(True)
-    if causal:
-        run = (ik * block_k) <= (iq * block_q + q_offset + block_q - 1)
+    # Skip blocks that cannot contribute: past the written cache prefix,
+    # or (static diagonal only) strictly above the causal diagonal.
+    run = (ik * block_k) < kvl
+    if causal and not dyn_offset:
+        run = run & ((ik * block_k) <= (iq * block_q + q_offset + block_q - 1))
 
     @pl.when(run)
     def _body():
@@ -73,9 +87,9 @@ def _flash_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (bq, bk)
-        mask = k_pos < kvlen_ref[0]
+        mask = k_pos < kvl
         if causal:
-            mask = mask & (k_pos <= q_pos + q_offset)
+            mask = mask & (k_pos <= q_pos + qs)
         s = jnp.where(mask, s, _NEG_INF)
 
         m_prev = m_ref[...]
@@ -103,7 +117,8 @@ def flash_attention(
     q: jnp.ndarray,                  # (B, Sq, H, Dh)
     k: jnp.ndarray,                  # (B, Sk, KV, Dh)
     v: jnp.ndarray,
-    kv_len: jnp.ndarray | None = None,   # () int32; None -> Sk
+    kv_len: jnp.ndarray | None = None,   # () or (B,) int32; None -> Sk
+    q_start: jnp.ndarray | None = None,  # () or (B,) int32; None -> Sk - Sq
     *,
     causal: bool = True,
     scale: float | None = None,
@@ -126,7 +141,14 @@ def flash_attention(
     block_k = min(block_k, sk)
     q_blocks = pl.cdiv(sq, block_q)
     kv_blocks = pl.cdiv(sk, block_k)
-    kv_len = jnp.asarray(sk if kv_len is None else kv_len, jnp.int32).reshape(1)
+    dyn_offset = q_start is not None
+    kv_len = jnp.broadcast_to(
+        jnp.asarray(sk if kv_len is None else kv_len, jnp.int32), (b,)
+    )
+    q_start = jnp.broadcast_to(
+        jnp.asarray(sk - sq if q_start is None else q_start, jnp.int32), (b,)
+    )
+    meta = jnp.stack([kv_len, q_start])          # (2, B) in SMEM
 
     kernel = functools.partial(
         _flash_kernel,
@@ -136,6 +158,7 @@ def flash_attention(
         block_k=block_k,
         kv_blocks=kv_blocks,
         q_offset=sk - sq,
+        dyn_offset=dyn_offset,
     )
     grid = (b, h, q_blocks, kv_blocks)
     out = pl.pallas_call(
@@ -167,5 +190,5 @@ def flash_attention(
         ),
         out_shape=jax.ShapeDtypeStruct((b, sq, h, dh), q.dtype),
         interpret=interpret,
-    )(kv_len, q, k, v)
+    )(meta, q, k, v)
     return out

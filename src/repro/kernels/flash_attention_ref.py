@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["attention_ref", "decode_attention_ref"]
+__all__ = ["attention_ref", "chunk_attention_ref", "decode_attention_ref"]
 
 _NEG = -1e30
 
@@ -107,19 +107,55 @@ def decode_attention_ref(
 ) -> jnp.ndarray:
     """Single-token attention against a (possibly longer) cache.
 
-    q: (B, 1, H, Dh); caches: (B, Smax, KV, Dh); pos: () int32 — the index
-    of the new token; keys at positions > pos are masked (cache slots not
-    yet written).
+    q: (B, 1, H, Dh); caches: (B, Smax, KV, Dh); pos: () or (B,) int32 —
+    the index of the new token, per batch row when vector (continuous
+    batching: every slot at its own position); keys at positions > pos
+    are masked (cache slots not yet written).
     """
     b, _, h, dh = q.shape
     kv = k_cache.shape[2]
     group = h // kv
     scale = dh ** -0.5 if scale is None else scale
+    pos = jnp.asarray(pos)
+    lim = pos.reshape(-1, 1, 1, 1) if pos.ndim else pos
     qg = q.reshape(b, kv, group, dh)
     scores = jnp.einsum("bkgd,bskd->bkgs", qg * scale, k_cache).astype(jnp.float32)
-    valid = jnp.arange(k_cache.shape[1])[None, None, None, :] <= pos
+    valid = jnp.arange(k_cache.shape[1])[None, None, None, :] <= lim
     scores = jnp.where(valid, scores, -jnp.inf)
     p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
     p = p / p.sum(axis=-1, keepdims=True)
     out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
     return out.reshape(b, 1, h, dh)
+
+
+def chunk_attention_ref(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Chunked-prefill attention: C new queries against a partial cache.
+
+    q: (B, C, H, Dh) — the chunk's queries, already rotary-encoded at
+    global positions pos..pos+C-1; caches: (B, Smax, KV, Dh) with the
+    chunk's keys/values already written at those positions.  Query i
+    attends cache keys <= pos + i; everything later (unwritten slots,
+    future in-chunk keys) is masked.  pos: () or (B,) int32.
+    """
+    b, c, h, dh = q.shape
+    kv = k_cache.shape[2]
+    group = h // kv
+    scale = dh ** -0.5 if scale is None else scale
+    pos = jnp.asarray(pos)
+    base = pos.reshape(-1, 1) if pos.ndim else pos[None, None]
+    lim = base + jnp.arange(c)[None, :]                      # (B|1, C)
+    qg = q.reshape(b, c, kv, group, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k_cache).astype(jnp.float32)
+    valid = jnp.arange(k_cache.shape[1])[None, None, :] <= lim[..., None]  # (B|1, C, S)
+    scores = jnp.where(valid[:, None, None], scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, c, h, dh)

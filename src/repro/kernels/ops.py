@@ -20,7 +20,11 @@ import jax.numpy as jnp
 from repro.core.abi import AbiString
 from repro.core.registry import ImplKind, OpImpl, OpRegistry, global_registry
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.flash_attention_ref import attention_ref, decode_attention_ref
+from repro.kernels.flash_attention_ref import (
+    attention_ref,
+    chunk_attention_ref,
+    decode_attention_ref,
+)
 from repro.kernels.moe_gmm import moe_gmm
 from repro.kernels.moe_gmm_ref import moe_gmm_ref
 from repro.kernels.rmsnorm import rmsnorm
@@ -51,6 +55,11 @@ _SIGS = {
         "kwargs": ["scale:float?"],
         "semantics": "single-token attention, cache slots > pos masked",
     },
+    "chunk_attention": {
+        "args": ["q:[b,c,h,dh]", "k_cache:[b,smax,kv,dh]", "v_cache:[b,smax,kv,dh]", "pos:i32"],
+        "kwargs": ["scale:float?"],
+        "semantics": "chunked prefill: query i attends cache keys <= pos+i",
+    },
     "ssd_scan": {
         "args": ["x:[b,s,h,p]", "dt:[b,s,h]", "A:[h]", "B:[b,s,g,n]", "C:[b,s,g,n]"],
         "kwargs": ["chunk:int"],
@@ -78,7 +87,10 @@ _SIGS = {
 #   moe_gmm 2: reference is dropless below _EXACT_ROWS_MAX rows (the
 #              geometry-dependent capacity drop broke prefill/decode
 #              consistency — docs/kernels.md)
-_ABI_MINORS = {"moe_gmm": 2}
+#   decode_attention 1: pos may be (B,) as well as scalar — continuous
+#              batching decodes every slot at its own position in one
+#              call (the kernel grew per-batch kv_len rows in SMEM)
+_ABI_MINORS = {"moe_gmm": 2, "decode_attention": 1}
 
 ABIS: dict[str, AbiString] = {
     name: AbiString.make(name, sig, major=1, minor=_ABI_MINORS.get(name, 0))
@@ -107,6 +119,21 @@ def _ref_decode_attention(q, k_cache, v_cache, pos, *, scale=None):
     return decode_attention_ref(q, k_cache, v_cache, pos, scale=scale)
 
 
+def _native_chunk_attention(q, k_cache, v_cache, pos, *, scale=None,
+                            config=None, interpret=False):
+    # chunked prefill = flash with the causal diagonal re-anchored at pos:
+    # query i (global position pos+i) sees cache keys <= pos+i, and the
+    # kv_len mask hides slots past the chunk's own freshly written tail.
+    return flash_attention(
+        q, k_cache, v_cache, kv_len=pos + q.shape[1], q_start=pos,
+        causal=True, scale=scale, config=config, interpret=interpret,
+    )
+
+
+def _ref_chunk_attention(q, k_cache, v_cache, pos, *, scale=None):
+    return chunk_attention_ref(q, k_cache, v_cache, pos, scale=scale)
+
+
 def _ref_attention(q, k, v, *, causal=True, scale=None):
     # chunked (flash-in-jnp) automatically above 2k keys: same math, O(S)
     # live memory — the portable reference stays deployable at 32k.
@@ -118,6 +145,7 @@ _REFS = {
     "rmsnorm": rmsnorm_ref,
     "attention": _ref_attention,
     "decode_attention": _ref_decode_attention,
+    "chunk_attention": _ref_chunk_attention,
     "ssd_scan": ssd_scan_ref,
     "moe_gmm": moe_gmm_ref,
 }
@@ -126,6 +154,7 @@ _NATIVES = {
     "rmsnorm": functools.partial(rmsnorm, interpret=False),
     "attention": _native_attention,
     "decode_attention": _native_decode_attention,
+    "chunk_attention": _native_chunk_attention,
     "ssd_scan": functools.partial(ssd_scan, interpret=False),
     "moe_gmm": functools.partial(moe_gmm, interpret=False),
 }
@@ -137,6 +166,7 @@ _NATIVES_INTERPRET = {
     "rmsnorm": functools.partial(rmsnorm, interpret=True),
     "attention": functools.partial(_native_attention, interpret=True),
     "decode_attention": functools.partial(_native_decode_attention, interpret=True),
+    "chunk_attention": functools.partial(_native_chunk_attention, interpret=True),
     "ssd_scan": functools.partial(ssd_scan, interpret=True),
     "moe_gmm": functools.partial(moe_gmm, interpret=True),
 }
@@ -231,6 +261,34 @@ def _feasible_decode(cfg, platform, args):
     return bk <= smax and (2 * dh + 2 * bk * dh + bk + 2) * 4 <= _VMEM_BUDGET
 
 
+def _spec_chunk(platform):
+    # C-token chunk mid-way through a max_len cache — the serving
+    # prefill geometry (chunk C minor to batch, cache at full Smax)
+    b, c, smax, h, kv, dh = (1, 16, 64, 2, 2, 64) if _is_cpu(platform) \
+        else (1, 256, 4096, 16, 4, 128)
+    return (jax.ShapeDtypeStruct((b, c, h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, smax, kv, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, smax, kv, dh), jnp.float32),
+            smax // 2)
+
+
+def _example_chunk(platform):
+    sq, sk, sv, pos = _spec_chunk(platform)
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    return (jax.random.normal(ks[0], sq.shape, sq.dtype),
+            jax.random.normal(ks[1], sk.shape, sk.dtype),
+            jax.random.normal(ks[2], sv.shape, sv.dtype),
+            pos)
+
+
+def _feasible_chunk(cfg, platform, args):
+    c, dh = args[0].shape[1], args[0].shape[3]
+    smax = args[1].shape[1]
+    bq, bk = cfg["block_q"], cfg["block_k"]
+    vmem = (2 * bq * dh + 2 * bk * dh + bq * bk + 2 * bq) * 4
+    return bq <= c and bk <= smax and vmem <= _VMEM_BUDGET
+
+
 def _spec_ssd(platform):
     b, s, h, p, g, n = (1, 64, 2, 16, 1, 16) if _is_cpu(platform) else (2, 2048, 8, 64, 1, 64)
     return (jax.ShapeDtypeStruct((b, s, h, p), jnp.float32),
@@ -311,6 +369,13 @@ _TUNERS: dict[str, OpTuner] = {
         example_args=_example_decode, feasible=_feasible_decode,
         example_specs=_spec_decode,
     ),
+    "chunk_attention": OpTuner(
+        op="chunk_attention",
+        space={"block_q": (16, 32, 64, 128, 256),
+               "block_k": (16, 32, 64, 128, 256)},
+        example_args=_example_chunk, feasible=_feasible_chunk,
+        example_specs=_spec_chunk,
+    ),
     "ssd_scan": OpTuner(
         op="ssd_scan",
         space={"chunk": (8, 16, 32, 64, 128, 256)},
@@ -383,6 +448,19 @@ def _synth_decode(platform, shapes, dtype):
     return (q, k, v, parts[1][1] // 2)
 
 
+def _synth_chunk(platform, shapes, dtype):
+    # same bucket structure as decode: q/k_cache/v_cache (+ optional
+    # trailing "scalar" for a traced pos); resynthesize pos mid-cache
+    parts = _parse_bucket(shapes)
+    if parts and len(parts) == 4 and parts[3] == ():
+        parts = parts[:3]
+    if not parts or len(parts) != 3 or any(len(p) != 4 for p in parts):
+        return None
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q, k, v = (_normal(kk, p, dtype) for kk, p in zip(ks, parts))
+    return (q, k, v, parts[1][1] // 2)
+
+
 def _synth_ssd(platform, shapes, dtype):
     parts = _parse_bucket(shapes)
     if (not parts or len(parts) != 5 or len(parts[0]) != 4
@@ -418,6 +496,7 @@ _SYNTHS = {
     "rmsnorm": _synth_rmsnorm,
     "attention": _synth_attention,
     "decode_attention": _synth_decode,
+    "chunk_attention": _synth_chunk,
     "ssd_scan": _synth_ssd,
     "moe_gmm": _synth_moe,
 }

@@ -1,10 +1,45 @@
-"""Serving driver: prefill + batched decode with a continuous request queue.
+"""Production serving engine: chunked prefill + continuous batching.
 
-The serving analogue of the paper's deployment story: the same bundle that
-trained on the laptop serves on the pod — prefill fills the KV/SSM caches,
-then a batched decode loop streams tokens for every active request, with
-slot-based continuous batching (a finished request's slot is refilled from
-the queue without recompiling — static shapes throughout).
+The serving analogue of the paper's deployment story: the same bundle
+that trained on the laptop serves on the pod, with the two compiled
+paths a serving workload actually exercises —
+
+  * **chunked prefill** — `Model.prefill_into` advances ONE slot of the
+    batched cache by a fixed-width window of C prompt tokens per
+    compiled step.  Prompt ingestion costs ceil(prompt_len / C) compiled
+    steps instead of the O(prompt_len) whole-batch decode ticks the old
+    prefill-by-decode loop burned (kept as ``prefill_mode="decode"``,
+    the baseline row of benchmarks/table7_serving.py).
+  * **batched decode** — one token for every active slot per compiled
+    step, each slot at its own cache position (vector ``pos``), inactive
+    slots parked at max_len-1 with their recurrent state frozen
+    (``active`` mask).
+
+Scheduling is split from compilation so it can be unit-tested with fake
+clocks and fake engines:
+
+  * `Scheduler` — pure-python continuous batching: FCFS admission from a
+    bounded queue into fixed slots, a prefill/decode interleave ratio,
+    per-request accounting (TTFT, compiled-step counts).  No jax.
+  * `JaxEngine` — owns params/cache and the two jitted steps; counts
+    every compiled-step invocation (the table7 scoreboard's honesty
+    metric).
+  * `Server` — the facade main() drives: Scheduler + JaxEngine + the
+    request log.
+
+Request lifecycle (documented in docs/serving.md):
+
+    queued -> admitted (slot assigned) -> prefilling -> decoding -> done
+
+Admission control rejects instead of deadlocking: a request is admitted
+only if its prompt+generation budget fits the slot's cache window, and
+`submit` bounces requests once the queue is `queue_depth` deep.
+
+`--profile` / `--autotune` wire through both compiled paths unchanged:
+every op call goes through the container's binding, so prefill
+geometries (chunk_attention at C tokens) and decode geometries (Sq=1)
+each resolve their own tuned configs — `print_dispatch_stats` shows
+both after a run.
 """
 
 from __future__ import annotations
@@ -14,6 +49,7 @@ import dataclasses
 import time
 import types
 from collections import deque
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -26,25 +62,112 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import DeployOptions, make_deployment
 from repro.launch.train import make_bundle
 
-__all__ = ["Server", "main"]
+__all__ = ["Request", "Scheduler", "JaxEngine", "Server", "main"]
+
+# scheduler states (docs/serving.md state machine)
+QUEUED = "queued"
+PREFILLING = "prefilling"
+DECODING = "decoding"
+DONE = "done"
+
+# admission rejection reasons
+REJECT_QUEUE_FULL = "queue-full"
+REJECT_TOO_LONG = "too-long"
 
 
 @dataclasses.dataclass
 class Request:
+    """One generation request plus its complete serving record.
+
+    The scheduler fills in the lifecycle fields; the benchmark reads
+    them.  Timestamps come from the scheduler's injected clock, so a
+    fake clock makes TTFT accounting exactly reproducible in tests.
+
+    Attributes:
+      rid: caller-chosen id (echoed in emitted (rid, token) pairs).
+      prompt: (prompt_len,) int32 prompt tokens.
+      max_new: generation budget; the scheduler may clamp it to its
+        per-request cap at submit time.
+      tokens: generated tokens (greedy argmax), filled during serving.
+      state: queued -> prefilling -> decoding -> done.
+      slot: cache row while admitted, else None.
+      prefill_pos: prompt tokens ingested so far.
+      next_pos: cache position the next fed token will be written to.
+      submit_t / first_token_t / finish_t: clock readings; TTFT is
+        first_token_t - submit_t (first token falls out of the final
+        prefill chunk's logits on the chunked path, out of the first
+        decode tick on the baseline path).
+      prefill_steps / decode_steps: compiled steps this request consumed
+        — the regression-pinned invariant is prefill_steps ==
+        ceil(prompt_len / C) and decode_steps == max_new - 1 on the
+        chunked path.
+    """
+
     rid: int
-    prompt: np.ndarray          # (prompt_len,) int32
+    prompt: np.ndarray
     max_new: int
     tokens: list = dataclasses.field(default_factory=list)
-    done: bool = False
+    state: str = QUEUED
+    slot: int | None = None
+    prefill_pos: int = 0
+    next_pos: int = 0
+    submit_t: float | None = None
+    first_token_t: float | None = None
+    finish_t: float | None = None
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    order: int = -1     # FCFS sequence number, assigned at submit
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def done(self) -> bool:
+        return self.state == DONE
+
+    @property
+    def ttft(self) -> float | None:
+        if self.first_token_t is None or self.submit_t is None:
+            return None
+        return self.first_token_t - self.submit_t
 
 
-class Server:
-    """Fixed-slot batched decoder (static shapes; slots refilled in place)."""
+class JaxEngine:
+    """The compiled half of the server: params, cache, two jitted steps.
 
-    def __init__(self, cfg, container, *, slots: int, max_len: int):
+    Owns the batched cache (slots x max_len) and exposes exactly the two
+    operations the scheduler needs, both with static shapes so each
+    compiles once:
+
+      * prefill_step(slot, tokens, pos) — one prefill work unit.  In
+        ``chunked`` mode this is Model.prefill_into over a C-wide window
+        (slot/pos/n_valid traced — every request reuses one executable)
+        and returns the window's last-token logits.  In ``decode`` mode
+        (the baseline the old server implemented) it is ONE prompt token
+        pushed through the whole-batch decode step, logits discarded —
+        O(prompt_len) compiled ticks per request, kept so table7 can
+        price the difference.
+      * decode_step(tokens, pos, active) — one batched decode tick;
+        every row at its own position, inactive rows parked at
+        max_len-1 with recurrent state frozen.
+
+    ``prefill_calls`` / ``decode_calls`` count compiled-step dispatches;
+    the scoreboard derives per-request costs from the per-Request
+    counters and cross-checks the totals against these.
+    """
+
+    def __init__(self, cfg, container, *, slots: int, max_len: int,
+                 chunk: int = 16, prefill_mode: str = "chunked"):
+        if prefill_mode not in ("chunked", "decode"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if chunk < 1 or chunk > max_len:
+            raise ValueError(f"chunk {chunk} outside [1, max_len={max_len}]")
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
+        self.chunk = chunk
+        self.prefill_mode = prefill_mode
         shape = ShapeConfig("serve", max_len, slots, "decode")
         self.dep = make_deployment(
             cfg, shape, container.mesh,
@@ -55,55 +178,248 @@ class Server:
         params = self.model.init(jax.random.PRNGKey(0))
         self.params = jax.device_put(params, self.dep.param_sharding)
         self.cache = self.model.init_cache(slots, max_len)
-        self.pos = np.zeros(slots, np.int32)          # per-slot write position
-        self.active: list[Request | None] = [None] * slots
-        self.queue: deque[Request] = deque()
+        self._prefill = jax.jit(self.model.prefill_into)
         self._decode = jax.jit(self.model.decode)
+        self.prefill_calls = 0
+        self.decode_calls = 0
 
-    def submit(self, req: Request) -> None:
+    # -- prefill ----------------------------------------------------------
+    @property
+    def prefill_unit(self) -> int:
+        """Prompt tokens ingested per prefill_step call."""
+        return self.chunk if self.prefill_mode == "chunked" else 1
+
+    def prefill_step(self, slot: int, tokens: np.ndarray, pos: int):
+        """Ingest one prefill unit into `slot` at cache position `pos`.
+
+        tokens: (n,) int32 with 1 <= n <= prefill_unit.  Returns the
+        logits (vocab,) of tokens[-1] in chunked mode, None in decode
+        (baseline) mode — mirroring the old server, which discarded
+        them and re-fed the last prompt token at position L to recover
+        them, both wasting a tick AND conditioning the first generated
+        token on a duplicated context token.  table7's baseline row
+        prices the tick; tests/test_serving.py pins the replay.
+        """
+        n = int(tokens.shape[0])
+        if self.prefill_mode == "chunked":
+            buf = np.zeros((1, self.chunk), np.int32)
+            buf[0, :n] = tokens
+            logits, self.cache = self._prefill(
+                self.params, jnp.asarray(buf), self.cache,
+                jnp.int32(slot), jnp.int32(pos), jnp.int32(n),
+            )
+            self.prefill_calls += 1
+            return np.asarray(logits[0])
+        # baseline: one whole-batch decode tick per prompt token
+        assert n == 1
+        tok = np.zeros((self.slots, 1), np.int32)
+        tok[slot, 0] = int(tokens[0])
+        posv = np.full(self.slots, self.max_len - 1, np.int32)
+        posv[slot] = pos
+        act = np.zeros(self.slots, bool)
+        act[slot] = True
+        _, self.cache = self._decode(
+            self.params, jnp.asarray(tok), self.cache,
+            jnp.asarray(posv), jnp.asarray(act),
+        )
+        self.decode_calls += 1
+        return None
+
+    # -- decode -----------------------------------------------------------
+    def decode_step(self, tokens: np.ndarray, pos: np.ndarray,
+                    active: np.ndarray) -> np.ndarray:
+        """One batched decode tick.  tokens (slots, 1), pos (slots,),
+        active (slots,) bool; returns (slots, vocab) logits (garbage on
+        inactive rows)."""
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache,
+            jnp.asarray(pos), jnp.asarray(active),
+        )
+        self.decode_calls += 1
+        return np.asarray(logits)
+
+
+class Scheduler:
+    """Continuous batching policy: pure python, deterministic, no jax.
+
+    One `tick()` is the scheduling quantum:
+
+      1. **admit** — pop FCFS from the queue into free slots (requests
+         were budget-checked at submit; admission just assigns slots).
+      2. **prefill** — run up to `interleave` prefill work units, FCFS
+         across prefilling requests.  The interleave ratio is the
+         latency knob: higher drains prompts faster (better TTFT under
+         prefill backlog), lower keeps decode ticks flowing (better
+         per-token latency for running requests).
+      3. **decode** — one batched decode tick if anything is decoding.
+
+    Admission control (at `submit`):
+      * queue bounded at `queue_depth` — excess rejected (queue-full);
+      * `max_new` clamped to `max_new_cap`;
+      * the prompt+generation budget must fit one slot's cache window:
+        prompt_len + max_new <= max_len AND every chunk's C-wide write
+        window stays in bounds (ceil(prompt_len/C)*C <= max_len); the
+        baseline path needs one extra slot for its duplicated last
+        prompt token.  Unfit requests are rejected (too-long), never
+        queued — a queued request is guaranteed servable.
+
+    The clock is injected so tests can drive TTFT accounting with a
+    deterministic fake; the engine is injected so policy tests need no
+    compiled model at all.
+    """
+
+    def __init__(self, engine, *, queue_depth: int = 64,
+                 max_new_cap: int = 1 << 30, interleave: int = 2,
+                 clock: Callable[[], float] = time.monotonic):
+        self.engine = engine
+        self.queue_depth = queue_depth
+        self.max_new_cap = max_new_cap
+        self.interleave = max(1, interleave)
+        self.clock = clock
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * engine.slots
+        self.rejected: dict[str, int] = {}
+        self.submitted = 0
+        self.completed = 0
+
+    # -- admission --------------------------------------------------------
+    def _budget(self, prompt_len: int, max_new: int) -> int:
+        """Highest cache position + 1 this request can touch."""
+        c = self.engine.prefill_unit
+        chunks_end = -(-prompt_len // c) * c       # last chunk's write window
+        gen_end = prompt_len + max_new
+        if self.engine.prefill_mode == "decode":
+            gen_end += 1                           # baseline re-feeds last token
+        return max(chunks_end, gen_end)
+
+    def submit(self, req: Request) -> bool:
+        """Admission-checked enqueue; returns False (and records why)
+        when the request is rejected."""
+        self.submitted += 1
+        req.max_new = min(req.max_new, self.max_new_cap)
+        if req.prompt_len < 1 or self._budget(req.prompt_len, req.max_new) > self.engine.max_len:
+            self.rejected[REJECT_TOO_LONG] = self.rejected.get(REJECT_TOO_LONG, 0) + 1
+            return False
+        if len(self.queue) >= self.queue_depth:
+            self.rejected[REJECT_QUEUE_FULL] = self.rejected.get(REJECT_QUEUE_FULL, 0) + 1
+            return False
+        req.order = self.submitted
+        req.submit_t = self.clock()
+        req.state = QUEUED
         self.queue.append(req)
+        return True
 
-    def _fill_slots(self) -> None:
-        for s in range(self.slots):
+    def _admit(self) -> None:
+        for s in range(self.engine.slots):
             if self.active[s] is None and self.queue:
                 req = self.queue.popleft()
-                # prefill-by-decode: feed prompt tokens through the decode
-                # path into this slot's cache region (single-slot serving
-                # keeps one compiled step; a production server would batch
-                # prompt prefill separately).
+                req.slot = s
+                req.state = PREFILLING
+                req.prefill_pos = 0
                 self.active[s] = req
-                self.pos[s] = 0
-                for t in req.prompt:
-                    self._step_slot(s, int(t))
 
-    def _step_slot(self, slot: int, token: int) -> int:
-        tok = np.zeros((self.slots, 1), np.int32)
-        tok[slot, 0] = token
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(tok), self.cache, jnp.int32(self.pos[slot])
-        )
-        self.pos[slot] += 1
-        return int(jnp.argmax(logits[slot]))
+    # -- lifecycle helpers ------------------------------------------------
+    def _emit(self, req: Request, token: int, out: list) -> None:
+        if req.first_token_t is None:
+            req.first_token_t = self.clock()
+        req.tokens.append(token)
+        out.append((req.rid, token))
+        if len(req.tokens) >= req.max_new:
+            self._finish(req)
+
+    def _finish(self, req: Request) -> None:
+        req.state = DONE
+        req.finish_t = self.clock()
+        self.active[req.slot] = None
+        req.slot = None
+        self.completed += 1
+
+    # -- the quantum ------------------------------------------------------
+    def tick(self) -> list[tuple[int, int]]:
+        """Admit, prefill up to `interleave` units, one decode tick.
+        Returns the (rid, token) pairs emitted this quantum."""
+        self._admit()
+        out: list[tuple[int, int]] = []
+
+        for _ in range(self.interleave):
+            req = min(
+                (r for r in self.active if r is not None and r.state == PREFILLING),
+                key=lambda r: r.order, default=None,
+            )
+            if req is None:
+                break
+            n = min(self.engine.prefill_unit, req.prompt_len - req.prefill_pos)
+            window = req.prompt[req.prefill_pos : req.prefill_pos + n]
+            logits = self.engine.prefill_step(req.slot, window, req.prefill_pos)
+            req.prefill_steps += 1
+            req.prefill_pos += n
+            if req.prefill_pos >= req.prompt_len:
+                req.next_pos = req.prompt_len
+                req.state = DECODING
+                if logits is not None:
+                    # chunked path: the final chunk's logits ARE the first
+                    # token — no decode tick spent re-feeding the prompt
+                    self._emit(req, int(np.argmax(logits)), out)
+
+        decoding = [r for r in self.active if r is not None and r.state == DECODING]
+        if decoding:
+            tok = np.zeros((self.engine.slots, 1), np.int32)
+            pos = np.full(self.engine.slots, self.engine.max_len - 1, np.int32)
+            act = np.zeros(self.engine.slots, bool)
+            for r in decoding:
+                # baseline seeds from the re-fed last prompt token (its
+                # prefill discarded the logits); chunked always has tokens
+                tok[r.slot, 0] = r.tokens[-1] if r.tokens else int(r.prompt[-1])
+                pos[r.slot] = r.next_pos
+                act[r.slot] = True
+            logits = self.engine.decode_step(tok, pos, act)
+            for r in decoding:
+                r.decode_steps += 1
+                r.next_pos += 1
+                self._emit(r, int(np.argmax(logits[r.slot])), out)
+        return out
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.active)
+
+
+class Server:
+    """Scheduler + JaxEngine + request log — what main() and the
+    benchmark drive.  `submit` admission-checks and records, `run`
+    ticks until idle, `requests` holds every Request (accepted or not)
+    with its full serving record."""
+
+    def __init__(self, cfg, container, *, slots: int, max_len: int,
+                 chunk: int = 16, prefill_mode: str = "chunked",
+                 queue_depth: int = 64, max_new_cap: int = 1 << 30,
+                 interleave: int = 2,
+                 clock: Callable[[], float] = time.monotonic):
+        self.engine = JaxEngine(cfg, container, slots=slots, max_len=max_len,
+                                chunk=chunk, prefill_mode=prefill_mode)
+        self.scheduler = Scheduler(self.engine, queue_depth=queue_depth,
+                                   max_new_cap=max_new_cap,
+                                   interleave=interleave, clock=clock)
+        self.requests: list[Request] = []
+
+    def submit(self, req: Request) -> bool:
+        self.requests.append(req)
+        return self.scheduler.submit(req)
 
     def step(self) -> list[tuple[int, int]]:
-        """One decode tick across all active slots; returns (rid, token)."""
-        self._fill_slots()
-        emitted = []
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
-            last = req.tokens[-1] if req.tokens else int(req.prompt[-1])
-            nxt = self._step_slot(s, last)
-            req.tokens.append(nxt)
-            emitted.append((req.rid, nxt))
-            if len(req.tokens) >= req.max_new or self.pos[s] >= self.max_len - 1:
-                req.done = True
-                self.active[s] = None
-        return emitted
+        return self.scheduler.tick()
 
-    def drain(self) -> None:
-        while self.queue or any(self.active):
+    def run(self, max_ticks: int = 1 << 20) -> None:
+        """Tick until every accepted request completes."""
+        ticks = 0
+        while not self.scheduler.idle:
             self.step()
+            ticks += 1
+            if ticks > max_ticks:
+                raise RuntimeError("scheduler failed to drain (livelock?)")
+
+    # old name, kept for callers of the previous server
+    drain = run
 
 
 def main(argv=None) -> int:
@@ -113,6 +429,19 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk width C: each compiled prefill step "
+                         "ingests C prompt tokens into one slot")
+    ap.add_argument("--prefill-mode", choices=("chunked", "decode"),
+                    default="chunked",
+                    help="'decode' replays the old prefill-by-decode loop "
+                         "(O(prompt_len) whole-batch ticks) as a baseline")
+    ap.add_argument("--queue-depth", type=int, default=64,
+                    help="admission control: submits beyond this queue depth "
+                         "are rejected, not buffered")
+    ap.add_argument("--interleave", type=int, default=2,
+                    help="prefill work units per scheduler tick (the "
+                         "prefill/decode interleave ratio)")
     ap.add_argument("--native-ops", action="store_true",
                     help="swap in native kernels where the platform has them "
                          "(or set REPRO_NATIVE_OPS=1; references have no "
@@ -145,17 +474,31 @@ def main(argv=None) -> int:
                                tuning_bundle=args.tuning_bundle)
     cfg = get_config(args.arch).reduced()
 
-    server = Server(cfg, container, slots=args.slots, max_len=args.max_len)
+    server = Server(cfg, container, slots=args.slots, max_len=args.max_len,
+                    chunk=args.chunk, prefill_mode=args.prefill_mode,
+                    queue_depth=args.queue_depth)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(2, 6)).astype(np.int32)
         server.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
-    server.drain()
+    server.run()
     dt = time.time() - t0
-    total_tokens = args.requests * args.max_new
-    print(f"served {args.requests} requests / {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)")
+
+    done = [r for r in server.requests if r.done]
+    total_tokens = sum(len(r.tokens) for r in done)
+    ttfts = sorted(r.ttft for r in done)
+    print(f"served {len(done)} requests / {total_tokens} tokens "
+          f"in {dt:.2f}s ({total_tokens / max(dt, 1e-9):.1f} tok/s, "
+          f"prefill_mode={args.prefill_mode})")
+    if ttfts:
+        print(f"TTFT p50 {ttfts[len(ttfts) // 2] * 1e3:.1f}ms "
+              f"max {ttfts[-1] * 1e3:.1f}ms | compiled steps: "
+              f"prefill={server.engine.prefill_calls} "
+              f"decode={server.engine.decode_calls}")
+    if server.scheduler.rejected:
+        print("rejected: " + " ".join(
+            f"{k}={v}" for k, v in sorted(server.scheduler.rejected.items())))
     if container.workload is not None:
         print(f"captured {len(container.workload)} op geometries -> "
               f"{container.workload.path} (warm with: python -m repro.tuning.warm)")

@@ -25,6 +25,7 @@ __all__ = [
     "attention_schema",
     "attention_apply",
     "attention_decode",
+    "attention_chunk",
     "mlp_schema",
     "mlp_apply",
     "sinusoidal_positions",
@@ -210,11 +211,23 @@ def _mask_padded_heads(out: jnp.ndarray, real_group: tuple[int, int] | None):
     return out * mask[:, None].astype(out.dtype)
 
 
+def _cache_write(buf: jnp.ndarray, upd: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """Write `upd` (B, S, KV, Dh) into `buf` at seq offset `pos` — per batch
+    row when pos is (B,) (continuous batching: every slot at its own
+    position), one shared offset when pos is scalar."""
+    upd = upd.astype(buf.dtype)
+    if pos.ndim:
+        return jax.vmap(
+            lambda b, u, p: jax.lax.dynamic_update_slice_in_dim(b, u, p, axis=0)
+        )(buf, upd, pos)
+    return jax.lax.dynamic_update_slice_in_dim(buf, upd, pos, axis=1)
+
+
 def attention_decode(
     params,
     x: jnp.ndarray,                      # (B, 1, D)
     cache: dict[str, jnp.ndarray],       # k/v: (B, Smax, KV, Dh)
-    pos: jnp.ndarray,                    # () int32 — index of the new token
+    pos: jnp.ndarray,                    # () or (B,) int32 — new token index
     cfg: ModelConfig,
     binding,
     *,
@@ -224,11 +237,12 @@ def attention_decode(
     real_group: tuple[int, int] | None = None,
 ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     """One-token attention against the cache; writes the new k/v (self only)."""
+    rope_pos = pos[None] if pos.ndim == 0 else pos[:, None]
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     if cfg.qkv_bias:
         q = q + params["bq"]
     if use_rope:
-        q = rotary(q, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
+        q = rotary(q, rope_pos, cfg.rope_theta)
     if pctx is not None and pctx.active:
         q = pctx.constrain_heads(q)
     if cross:
@@ -242,9 +256,9 @@ def attention_decode(
         if cfg.qkv_bias:
             k, v = k + params["bk"], v + params["bv"]
         if use_rope:
-            k = rotary(k, pos[None] if pos.ndim == 0 else pos, cfg.rope_theta)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+            k = rotary(k, rope_pos, cfg.rope_theta)
+        k_cache = _cache_write(cache["k"], k, pos)
+        v_cache = _cache_write(cache["v"], v, pos)
         out = binding["decode_attention"](q, k_cache, v_cache, pos)
         new_cache = {"k": k_cache, "v": v_cache}
     out = _mask_padded_heads(out, real_group)
@@ -252,6 +266,50 @@ def attention_decode(
         out = pctx.constrain_heads(out)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, new_cache
+
+
+def attention_chunk(
+    params,
+    x: jnp.ndarray,                      # (B, C, D) — chunk of prompt
+    cache: dict[str, jnp.ndarray],       # k/v: (B, Smax, KV, Dh)
+    pos: jnp.ndarray,                    # () int32 — chunk's global start
+    cfg: ModelConfig,
+    binding,
+    *,
+    use_rope: bool = True,
+    pctx: "ParallelCtx | None" = None,
+    real_group: tuple[int, int] | None = None,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Chunked-prefill attention: C prompt tokens at global positions
+    pos..pos+C-1 against the partially filled cache.
+
+    Writes the chunk's k/v into the cache window [pos, pos+C) and attends
+    via binding["chunk_attention"] (query i sees cache keys <= pos+i).
+    Positions past the prompt's true end carry garbage k/v, but every
+    later query — in-chunk (causal mask) or decode (its own write lands
+    first) — sees those slots only after they are overwritten, so no
+    masking is needed here; the SSM path is where padding needs care.
+    """
+    c = x.shape[1]
+    chunk_pos = pos + jnp.arange(c)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if use_rope:
+        q = rotary(q, chunk_pos, cfg.rope_theta)
+        k = rotary(k, chunk_pos, cfg.rope_theta)
+    if pctx is not None and pctx.active:
+        q = pctx.constrain_heads(q)
+    k_cache = _cache_write(cache["k"], k, pos)
+    v_cache = _cache_write(cache["v"], v, pos)
+    out = binding["chunk_attention"](q, k_cache, v_cache, pos)
+    out = _mask_padded_heads(out, real_group)
+    if pctx is not None and pctx.active:
+        out = pctx.constrain_heads(out)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k_cache, "v": v_cache}
 
 
 # --------------------------------------------------------------------------- #

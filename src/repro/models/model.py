@@ -29,7 +29,13 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import layers as L
 from repro.models.moe import moe_apply, moe_schema
 from repro.models.schema import LeafSpec, abstract_params, init_params, map_leaves
-from repro.models.ssm import ssm_apply, ssm_decode, ssm_init_cache_shapes, ssm_schema
+from repro.models.ssm import (
+    ssm_apply,
+    ssm_decode,
+    ssm_init_cache_shapes,
+    ssm_prefill_chunk,
+    ssm_schema,
+)
 
 __all__ = ["Model", "build_model"]
 
@@ -206,7 +212,8 @@ class Model:
     # ------------------------------------------------------------------ #
     # layer application
     # ------------------------------------------------------------------ #
-    def _layer(self, j, lp, x, mode, lc, pos, enc_out, positions, aux):
+    def _layer(self, j, lp, x, mode, lc, pos, enc_out, positions, aux,
+               n_valid=None, active=None):
         cfg, binding = self.cfg, self.binding
         new_cache: Tree = {}
         h = L.norm_apply(lp["pre_norm"], x, cfg, binding)
@@ -214,6 +221,12 @@ class Model:
         if cfg.is_attn_layer(j):
             if mode == "decode":
                 y, kv = L.attention_decode(
+                    lp["attn"], h, {"k": lc["k"], "v": lc["v"]}, pos, cfg, binding,
+                    use_rope=self.use_rope, pctx=self.pctx, real_group=rg,
+                )
+                new_cache.update(kv)
+            elif mode == "chunk":
+                y, kv = L.attention_chunk(
                     lp["attn"], h, {"k": lc["k"], "v": lc["v"]}, pos, cfg, binding,
                     use_rope=self.use_rope, pctx=self.pctx, real_group=rg,
                 )
@@ -230,6 +243,22 @@ class Model:
         else:
             if mode == "decode":
                 y, sc = ssm_decode(lp["ssm"], h, {"state": lc["state"], "conv": lc["conv"]}, cfg)
+                if active is not None:
+                    # inactive slots must not advance: unlike KV (whose
+                    # parked write is harmless), the SSM recurrence would
+                    # fold the dummy token into the state irreversibly
+                    sc = {
+                        "state": jnp.where(active[:, None, None, None],
+                                           sc["state"], lc["state"]),
+                        "conv": jnp.where(active[:, None, None],
+                                          sc["conv"], lc["conv"]),
+                    }
+                new_cache.update(sc)
+            elif mode == "chunk":
+                y, sc = ssm_prefill_chunk(
+                    lp["ssm"], h, {"state": lc["state"], "conv": lc["conv"]},
+                    pos, n_valid, cfg, binding,
+                )
                 new_cache.update(sc)
             elif mode == "prefill":
                 y, sc = ssm_apply(lp["ssm"], h, cfg, binding, return_state=True)
@@ -275,13 +304,13 @@ class Model:
                     y = L.mlp_apply(lp["mlp"], h, cfg)
                 x = x + y
         x = self.pctx.constrain_residual(x)
-        return x, (new_cache if mode in ("prefill", "decode") else None), aux
+        return x, (new_cache if mode in ("prefill", "decode", "chunk") else None), aux
 
     # ------------------------------------------------------------------ #
     # decoder stack
     # ------------------------------------------------------------------ #
     def _decoder(self, params, x, mode, cache=None, pos=None, enc_out=None,
-                 positions=None):
+                 positions=None, n_valid=None, active=None):
         cfg = self.cfg
         p = self.period
         unroll = self.num_blocks if self.scan_unroll else 1
@@ -309,12 +338,14 @@ class Model:
             )
             return x, new_cache, aux
 
-        if mode == "decode":
+        if mode in ("decode", "chunk"):
             # deployment mode: cache rides in the CARRY and is updated in
             # place with dynamic_update_slice — XLA keeps while-loop
             # carries aliased, so decode never materializes a second full
             # KV cache (the xs->ys formulation cannot alias across the
             # loop boundary; measured +5.4 GB temp on qwen2-72b decode_32k).
+            # Chunked prefill reuses the same formulation: C tokens instead
+            # of 1, same in-place cache discipline.
             def dec_block(carry, bp):
                 x, aux, cache_st, i = carry
                 new_cache = cache_st
@@ -326,7 +357,8 @@ class Model:
                         new_cache[f"p{j}"],
                     )
                     x, nc, aux = self._layer(
-                        j, bp[f"p{j}"], x, mode, lc, pos, enc_out, positions, aux
+                        j, bp[f"p{j}"], x, mode, lc, pos, enc_out, positions, aux,
+                        n_valid=n_valid, active=active,
                     )
                     new_cache = dict(new_cache)
                     new_cache[f"p{j}"] = jax.tree.map(
@@ -499,11 +531,69 @@ class Model:
         logits = self._logits(params, x[:, -1:, :])[:, 0]
         return logits, cache
 
-    def decode(self, params, token, cache, pos):
-        """token: (B, 1) int32; pos: () int32; cache from prefill/init."""
+    def prefill_into(self, params, tokens, cache, slot, pos, n_valid=None):
+        """Chunked prefill: advance ONE slot of a batched cache by C tokens.
+
+        The compiled unit of prompt ingestion — a fixed-shape step the
+        scheduler calls ceil(prompt_len / C) times per request, instead of
+        O(prompt_len) whole-batch decode ticks.  Compiles once per chunk
+        width C; slot / pos / n_valid are traced, so every request reuses
+        the same executable.
+
+        Args:
+          tokens: (1, C) int32 — the chunk, right-padded to C.
+          cache: batched cache from `init_cache(batch, max_len)`; only the
+            `slot` row is read or written.
+          slot: () int32 — batch row to fill.
+          pos: () int32 — global position of tokens[:, 0] (0 for the first
+            chunk; the caller must guarantee pos + C <= max_len, or the
+            in-bounds-clamped cache write would corrupt neighbor slots).
+          n_valid: () int32 — real tokens in this chunk (defaults to C);
+            < C only for the prompt's final partial chunk.  At pos == 0
+            stale slot state (KV garbage, SSM state, conv tail) is
+            neutralized inside the step — slot reuse needs no reset pass.
+
+        Returns (logits (1, vocab) for token n_valid-1, updated cache).
+        The logits seed the request's first generated token: sampling from
+        them replaces the decode tick the old prefill-by-decode loop burned
+        re-feeding the last prompt token.
+        """
+        cfg = self.cfg
+        if cfg.is_enc_dec or cfg.modality == "vision":
+            raise NotImplementedError("chunked prefill supports text decoders only")
+        if n_valid is None:
+            n_valid = tokens.shape[1]
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        slot = jnp.asarray(slot, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        row = jax.tree.map(
+            lambda buf: jax.lax.dynamic_slice_in_dim(buf, slot, 1, axis=1), cache
+        )
+        x = self._embed(params, tokens)
+        x, new_row, _ = self._decoder(params, x, "chunk", cache=row, pos=pos,
+                                      n_valid=n_valid)
+        x = L.norm_apply(params["final_norm"], x, cfg, self.binding)
+        last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        logits = self._logits(params, last)[:, 0]
+        cache = jax.tree.map(
+            lambda buf, upd: jax.lax.dynamic_update_slice_in_dim(
+                buf, upd.astype(buf.dtype), slot, axis=1
+            ),
+            cache, new_row,
+        )
+        return logits, cache
+
+    def decode(self, params, token, cache, pos, active=None):
+        """token: (B, 1) int32; pos: () or (B,) int32 — per-slot positions
+        under continuous batching; active: optional (B,) bool — rows whose
+        recurrent (SSM) state may advance.  Inactive rows keep their state;
+        their KV write lands wherever the scheduler parks pos (by
+        convention max_len-1, a slot admission never lets live data reach).
+        """
         cfg = self.cfg
         x = self._embed(params, token, offset=pos)
-        x, new_cache, _ = self._decoder(params, x, "decode", cache=cache, pos=pos)
+        x, new_cache, _ = self._decoder(params, x, "decode", cache=cache, pos=pos,
+                                        active=active)
         x = L.norm_apply(params["final_norm"], x, cfg, self.binding)
         logits = self._logits(params, x)[:, 0]
         return logits, new_cache

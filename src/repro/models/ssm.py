@@ -21,7 +21,13 @@ from repro.configs.base import ModelConfig
 from repro.kernels.ssd_scan_ref import ssd_decode_step_ref
 from repro.models.schema import LeafSpec
 
-__all__ = ["ssm_schema", "ssm_apply", "ssm_decode", "ssm_init_cache_shapes"]
+__all__ = [
+    "ssm_schema",
+    "ssm_apply",
+    "ssm_decode",
+    "ssm_prefill_chunk",
+    "ssm_init_cache_shapes",
+]
 
 _NGROUPS = 1  # B/C shared across heads (mamba2 default ngroups=1)
 
@@ -128,6 +134,78 @@ def ssm_init_cache_shapes(cfg: ModelConfig, batch: int):
         "state": ((batch, h, n, p), "float32"),
         "conv": ((batch, cfg.ssm_conv - 1, cfg.ssm_d_inner), cfg.dtype),
     }
+
+
+def ssm_prefill_chunk(
+    params,
+    x: jnp.ndarray,        # (B, C, D) — chunk of prompt at positions pos..
+    cache: dict[str, jnp.ndarray],
+    pos: jnp.ndarray,      # () int32 — chunk's global start position
+    n_valid: jnp.ndarray,  # () int32 — real tokens in this chunk (<= C)
+    cfg: ModelConfig,
+    binding,
+):
+    """C-token state advance for chunked prefill.
+
+    The SSD recurrence is *linear* in the state, so continuing from the
+    cached state needs no special kernel: run the chunk's scan from a
+    zero state via the bound op, then add the initial state's closed-form
+    contribution —
+
+        y_t      += C_t . (exp(cumsum(dt*A)_t) * state0)
+        state_out = scan_final + exp(cumsum(dt*A)_C) * state0
+
+    Padding (n_valid < C, the prompt's final partial chunk) is absorbed
+    by clamping dt to 0 at padded steps: decay exp(0*A) = 1 and input
+    contribution dt*B*x = 0, so the state is bit-exactly unchanged there.
+    The conv window is reconstructed from [cached tail | chunk inputs]
+    and the new tail sliced at n_valid, so partial chunks hand the next
+    chunk the same window a contiguous prefill would have.  At pos == 0
+    the cached state/tail are slot leftovers from the previous request
+    and are zeroed instead of consumed.
+    """
+    b, c, _ = x.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    k = cfg.ssm_conv
+    z, xs, bm, cm, dt = _projections(params, x)
+
+    fresh = pos > 0
+    tail = jnp.where(fresh, cache["conv"].astype(xs.dtype), 0)
+    state0 = jnp.where(fresh, cache["state"].astype(jnp.float32), 0)
+
+    # causal conv over [tail | chunk]: position t of the chunk sees ext
+    # window [t, t+k) — identical to a whole-sequence conv at pos+t
+    ext = jnp.concatenate([tail, xs], axis=1)          # (B, k-1+C, Din)
+    y = jnp.zeros_like(xs, dtype=jnp.float32)
+    for i in range(k):
+        y = y + ext[:, i : i + c, :].astype(jnp.float32) * params["conv_w"][i].astype(jnp.float32)
+    xc = jax.nn.silu(y + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+    xh = xc.reshape(b, c, h, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    dt = dt * (jnp.arange(c)[None, :, None] < n_valid)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    bmg = bm.reshape(b, c, _NGROUPS, n)
+    cmg = cm.reshape(b, c, _NGROUPS, n)
+
+    tuned = getattr(binding, "tuned_config", lambda name, shapes=None: None)(
+        "ssd_scan", (xh, dt, a, bmg, cmg))
+    chunk = tuned["chunk"] if tuned is not None and "chunk" in tuned else cfg.ssm_chunk
+    chunk = min(chunk, c)
+    if c % chunk:
+        chunk = math.gcd(chunk, c)
+    y, state = binding["ssd_scan"](xh, dt, a, bmg, cmg, chunk=chunk)
+
+    decay = jnp.exp(jnp.cumsum(dt * a[None, None, :], axis=1))   # (B, C, H)
+    y = y + jnp.einsum("btn,bth,bhnp->bthp", cmg[:, :, 0], decay, state0).astype(y.dtype)
+    state = state + decay[:, -1][..., None, None] * state0
+
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, c, h * p)
+    y = _rms(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    new_tail = jax.lax.dynamic_slice_in_dim(ext, n_valid, k - 1, axis=1)
+    return out, {"state": state, "conv": new_tail.astype(cache["conv"].dtype)}
 
 
 def ssm_decode(

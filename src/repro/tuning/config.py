@@ -84,6 +84,7 @@ _OP_DEFAULTS: dict[str, BlockConfig] = {
     "rmsnorm": BlockConfig.make(block_rows=256),
     "attention": BlockConfig.make(block_q=128, block_k=128),
     "decode_attention": BlockConfig.make(block_q=128, block_k=128),
+    "chunk_attention": BlockConfig.make(block_q=128, block_k=128),
     "ssd_scan": BlockConfig.make(chunk=128),
     "moe_gmm": BlockConfig.make(block_m=128, block_n=128, block_k=2048),
 }
@@ -96,6 +97,7 @@ _PLATFORM_DEFAULTS: dict[tuple[str, str], BlockConfig] = {
     ("pod-sim", "rmsnorm"): BlockConfig.make(block_rows=64),
     ("pod-sim", "attention"): BlockConfig.make(block_q=32, block_k=32),
     ("pod-sim", "decode_attention"): BlockConfig.make(block_q=32, block_k=32),
+    ("pod-sim", "chunk_attention"): BlockConfig.make(block_q=32, block_k=32),
     ("pod-sim", "ssd_scan"): BlockConfig.make(chunk=32),
     ("pod-sim", "moe_gmm"): BlockConfig.make(block_m=32, block_n=32, block_k=64),
 }

@@ -368,7 +368,7 @@ def test_tuning_context_without_profile_uses_canonical(tmp_path):
 
 
 @pytest.mark.parametrize("op", ["rmsnorm", "attention", "decode_attention",
-                                "ssd_scan", "moe_gmm"])
+                                "chunk_attention", "ssd_scan", "moe_gmm"])
 def test_synthesizers_roundtrip_canonical_bucket(op):
     """Every op's args_from_shapes must rebuild args whose bucket equals the
     recorded one — otherwise warm would persist under a key deploys never
