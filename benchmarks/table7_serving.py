@@ -25,11 +25,29 @@ On this CPU container the kernels run in interpret mode (pod-sim), so
 absolute latencies are simulation-host numbers; the *ratios* — steps per
 prompt, chunked vs baseline TTFT — are the portable result.
 
+``--paged`` adds a third run over the same request set: the paged KV
+cache (page size = C, per-slot block tables) serving MORE slots from the
+SAME cache-memory budget the contiguous chunked run reserved — the pool
+holds slots * max_len tokens total, but admission budgets in pages
+actually needed, so short requests are no longer starved by whole-window
+reservations.  Its scoreboard adds:
+
+  table7/paged/peak_active      max concurrently admitted requests — the
+                                admission-under-memory-pressure metric;
+                                --smoke asserts it strictly exceeds the
+                                contiguous chunked run's
+  table7/paged/fragmentation    1 - used/allocated pages (mean over
+                                ticks): pages reserved for generation
+                                headroom but not yet written
+
 ``--smoke`` (CLI) runs a tiny workload through both modes and exits
 non-zero unless every accepted request completes, the chunked path's
 per-request compiled-step counts match the pinned invariants
 (prefill_steps == ceil(prompt_len/C), decode_steps == max_new - 1), and
 chunked p50 TTFT beats the prefill-by-decode baseline — the CI guard.
+With ``--paged`` it additionally asserts the paged run emits the SAME
+tokens per request as contiguous chunked, admits strictly more
+concurrent requests, and stays within 10% of chunked's p50 TTFT.
 ``--json PATH`` writes the full scoreboard for the CI artifact.
 """
 
@@ -86,9 +104,19 @@ def serve_once(cfg, container, reqs: list[Request], *, mode: str,
     other starts decoding: prefill-on-a-decode-produced-cache is a
     distinct compilation (the decode step's output shardings), and a
     warmup that never interleaves would leave it to the measured run.
+
+    mode "paged" serves from the SAME cache-memory budget the contiguous
+    chunked run reserved (slots * max_len cache tokens, counting the
+    park page) spread over twice the slots — whether more of those slots
+    actually run concurrently is then purely the admission policy's
+    doing, which is the comparison the paged scoreboard prices.
     """
-    server = Server(cfg, container, slots=slots, max_len=max_len,
-                    chunk=chunk, prefill_mode=mode, interleave=interleave)
+    paged = mode == "paged"
+    n_slots = 2 * slots if paged else slots
+    num_pages = slots * max_len // chunk if paged else None
+    server = Server(cfg, container, slots=n_slots, max_len=max_len,
+                    chunk=chunk, prefill_mode="chunked" if paged else mode,
+                    interleave=interleave, paged=paged, num_pages=num_pages)
     warm_rng = np.random.default_rng(0)
     for plen in (chunk, min(3 * chunk + 1, max_len - 4)):
         prompt = warm_rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
@@ -97,6 +125,8 @@ def serve_once(cfg, container, reqs: list[Request], *, mode: str,
     server.requests.clear()
     server.engine.prefill_calls = 0
     server.engine.decode_calls = 0
+    server.scheduler.peak_active = 0
+    server.scheduler.page_samples.clear()
 
     t0 = time.monotonic()
     for r in reqs:
@@ -111,13 +141,15 @@ def serve_once(cfg, container, reqs: list[Request], *, mode: str,
         for r in done if len(r.tokens) > 1
     ]
     tokens = sum(len(r.tokens) for r in done)
-    return {
+    board = {
         "mode": mode,
-        "chunk": chunk if mode == "chunked" else 1,
+        "chunk": 1 if mode == "decode" else chunk,
+        "slots": n_slots,
         "submitted": len(reqs),
         "completed": len(done),
         "tokens": tokens,
         "wall_s": wall,
+        "peak_active": server.scheduler.peak_active,
         "ttft_p50_ms": _percentile(ttfts, 50) * 1e3,
         "ttft_p99_ms": _percentile(ttfts, 99) * 1e3,
         "per_token_ms": (sum(per_tok) / len(per_tok)) * 1e3 if per_tok else 0.0,
@@ -128,10 +160,20 @@ def serve_once(cfg, container, reqs: list[Request], *, mode: str,
         "per_request": [
             {"rid": r.rid, "prompt_len": r.prompt_len, "max_new": r.max_new,
              "prefill_steps": r.prefill_steps, "decode_steps": r.decode_steps,
-             "ttft_ms": r.ttft * 1e3}
+             "ttft_ms": r.ttft * 1e3, "tokens": list(r.tokens)}
             for r in done
         ],
     }
+    if paged:
+        samples = server.scheduler.page_samples or [(0, 0)]
+        alloc_mean = sum(a for a, _ in samples) / len(samples)
+        used_mean = sum(u for _, u in samples) / len(samples)
+        board["num_pages"] = server.engine.pool.num_pages
+        board["pages_allocated_mean"] = alloc_mean
+        board["pages_used_mean"] = used_mean
+        board["fragmentation"] = (1.0 - used_mean / alloc_mean
+                                  if alloc_mean else 0.0)
+    return board
 
 
 def goodput(board: dict, slo_s: float) -> float:
@@ -153,7 +195,7 @@ def check_invariants(boards: dict, chunk: int, max_new: int) -> list[str]:
                          f"requests completed")
         for pr in board["per_request"]:
             ln = pr["prompt_len"]
-            if mode == "chunked":
+            if mode in ("chunked", "paged"):
                 want_p, want_d = -(-ln // chunk), pr["max_new"] - 1
             else:
                 want_p, want_d = ln, pr["max_new"]
@@ -174,6 +216,23 @@ def check_invariants(boards: dict, chunk: int, max_new: int) -> list[str]:
     if ch["ttft_p50_ms"] >= boards["decode"]["ttft_p50_ms"]:
         fails.append(f"chunked p50 TTFT {ch['ttft_p50_ms']:.1f}ms not below "
                      f"baseline {boards['decode']['ttft_p50_ms']:.1f}ms")
+    if "paged" in boards:
+        pg = boards["paged"]
+        by_rid = {pr["rid"]: pr["tokens"] for pr in ch["per_request"]}
+        for pr in pg["per_request"]:
+            if pr["tokens"] != by_rid.get(pr["rid"]):
+                fails.append(f"paged rid={pr['rid']}: tokens diverge from "
+                             f"contiguous chunked")
+        if pg["peak_active"] <= ch["peak_active"]:
+            fails.append(f"paged peak_active {pg['peak_active']} not above "
+                         f"contiguous {ch['peak_active']} under the same "
+                         f"cache-memory budget")
+        # 10% relative + 5ms absolute: pod-sim TTFTs are single-digit ms,
+        # where scheduler wall-clock jitter swamps a pure relative bound;
+        # on real hardware (tens-to-hundreds of ms) the 10% term binds
+        if pg["ttft_p50_ms"] > 1.1 * ch["ttft_p50_ms"] + 5.0:
+            fails.append(f"paged p50 TTFT {pg['ttft_p50_ms']:.1f}ms regresses "
+                         f">10%+5ms over chunked {ch['ttft_p50_ms']:.1f}ms")
     return fails
 
 
@@ -189,6 +248,9 @@ def main(argv=None) -> int:
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="TTFT SLO for the goodput rows (default: the "
                          "baseline run's own p50 TTFT)")
+    ap.add_argument("--paged", action="store_true",
+                    help="add a paged-KV-cache run (2x slots from the same "
+                         "cache-memory budget) to the scoreboard")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload + compiled-step/TTFT assertions "
                          "(the CI guard)")
@@ -206,8 +268,9 @@ def main(argv=None) -> int:
     reqs = make_requests(args.requests, vocab=cfg.vocab_size,
                          chunk=args.chunk, max_new=args.max_new)
 
+    modes = _MODES + (("paged",) if args.paged else ())
     boards = {}
-    for mode in _MODES:
+    for mode in modes:
         boards[mode] = serve_once(
             cfg, container,
             [Request(rid=r.rid, prompt=r.prompt.copy(), max_new=r.max_new)
@@ -219,7 +282,7 @@ def main(argv=None) -> int:
     slo_s = (args.slo_ms / 1e3 if args.slo_ms is not None
              else boards["decode"]["ttft_p50_ms"] / 1e3)
     print("name,value,derived")
-    for mode in _MODES:
+    for mode in modes:
         b = boards[mode]
         b["slo_ms"] = slo_s * 1e3
         b["goodput_tok_s"] = goodput(b, slo_s)
@@ -234,10 +297,22 @@ def main(argv=None) -> int:
         print(f"table7/{mode}/prefill_steps,{b['prefill_steps_mean']:.2f},"
               f"compiled_prefill={b['engine_prefill_calls']};"
               f"compiled_decode={b['engine_decode_calls']}")
+        if mode == "paged":
+            print(f"table7/paged/peak_active,{b['peak_active']},"
+                  f"slots={b['slots']};pool={b['num_pages']}x{b['chunk']}tok;"
+                  f"contiguous_peak={boards['chunked']['peak_active']}")
+            print(f"table7/paged/fragmentation,{b['fragmentation']:.2f},"
+                  f"pages_alloc_mean={b['pages_allocated_mean']:.1f};"
+                  f"pages_used_mean={b['pages_used_mean']:.1f}")
     speedup = (boards["decode"]["ttft_p50_ms"]
                / max(boards["chunked"]["ttft_p50_ms"], 1e-9))
     print(f"table7/summary/ttft_p50_speedup,{speedup:.2f},"
           f"chunked_vs_prefill_by_decode")
+    if args.paged:
+        ratio = (boards["paged"]["peak_active"]
+                 / max(boards["chunked"]["peak_active"], 1))
+        print(f"table7/summary/paged_admission_gain,{ratio:.2f},"
+              f"peak_active_paged_vs_contiguous_same_memory")
 
     if args.json:
         with open(args.json, "w") as fh:
@@ -252,9 +327,13 @@ def main(argv=None) -> int:
         print(f"FAIL: {f}")
     if fails:
         return 1
-    print("OK: all requests completed in both modes; chunked prefill paid "
-          "ceil(L/C) compiled steps per request and beat the "
-          "prefill-by-decode baseline's p50 TTFT")
+    msg = ("OK: all requests completed in both modes; chunked prefill paid "
+           "ceil(L/C) compiled steps per request and beat the "
+           "prefill-by-decode baseline's p50 TTFT")
+    if args.paged:
+        msg += ("; paged admission served strictly more concurrent requests "
+                "from the same cache-memory budget with identical tokens")
+    print(msg)
     return 0
 
 

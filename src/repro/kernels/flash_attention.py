@@ -20,11 +20,25 @@ them the same kernel serves all three serving geometries:
   * chunked prefill — Sq == C chunk queries starting at global position
     `q_start` against the cache: query i attends keys <= q_start + i,
     keys past kv_len masked.
+
+**Paged KV cache** (``block_tables`` + ``page_size``): k/v may instead be
+page *pools* of shape (P, page, KV, Dh) addressed through a per-batch
+block table (B, nblocks) — logical position p of row b lives in page
+``block_tables[b, p // page]`` at offset ``p % page``.  The table rides
+in the same SMEM meta as kv_len/q_start (rows 2.., transposed to
+(nblocks, B)) and the k/v BlockSpec index maps resolve the physical page
+per grid step, so the DMA itself performs the gather — the kernel body
+is unchanged, masking stays in logical coordinates.  block_k is clamped
+to divide the page (gcd) so no tile ever straddles a page boundary.
+Unallocated table entries must still hold a valid page index (the
+serving engine points them at a reserved park page): their DMAs are
+issued even when the kv_len mask discards every lane.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -91,6 +105,10 @@ def _flash_kernel(
         if causal:
             mask = mask & (k_pos <= q_pos + qs)
         s = jnp.where(mask, s, _NEG_INF)
+        # rows past kv_len may be out-of-bounds tile padding (garbage, NaN
+        # in interpret mode); p is 0 there but 0 * NaN = NaN, so zero v too
+        k_row = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k, 1), 0)
+        v = jnp.where(k_row < kvl, v, 0.0)
 
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
@@ -111,11 +129,11 @@ def _flash_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "scale", "block_q", "block_k", "config",
-                     "interpret"),
+                     "interpret", "page_size"),
 )
 def flash_attention(
     q: jnp.ndarray,                  # (B, Sq, H, Dh)
-    k: jnp.ndarray,                  # (B, Sk, KV, Dh)
+    k: jnp.ndarray,                  # (B, Sk, KV, Dh) | paged (P, page, KV, Dh)
     v: jnp.ndarray,
     kv_len: jnp.ndarray | None = None,   # () or (B,) int32; None -> Sk
     q_start: jnp.ndarray | None = None,  # () or (B,) int32; None -> Sk - Sq
@@ -126,6 +144,8 @@ def flash_attention(
     block_k: int | None = None,
     config: BlockConfig | None = None,
     interpret: bool = False,
+    block_tables: jnp.ndarray | None = None,  # (B, nblocks) int32 page ids
+    page_size: int | None = None,             # tokens per page; None -> k.shape[1]
 ) -> jnp.ndarray:
     cfg = config if config is not None else _DEFAULTS
     if block_q is None:
@@ -133,12 +153,24 @@ def flash_attention(
     if block_k is None:
         block_k = cfg.get("block_k", _DEFAULTS["block_k"])
     b, sq, h, dh = q.shape
-    sk, kv = k.shape[1], k.shape[2]
+    paged = block_tables is not None
+    if paged:
+        page = k.shape[1] if page_size is None else page_size
+        assert k.shape[1] == page, f"pool page {k.shape[1]} != page_size {page}"
+        nblocks = block_tables.shape[1]
+        sk = nblocks * page                  # logical KV extent
+    else:
+        sk = k.shape[1]
+    kv = k.shape[2]
     assert h % kv == 0, f"GQA requires H % KV == 0, got {h} % {kv}"
     group = h // kv
     scale = dh ** -0.5 if scale is None else scale
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
+    if paged:
+        # a k/v tile must never straddle a page boundary: the index map
+        # resolves ONE physical page per grid step
+        block_k = math.gcd(min(block_k, page), page)
     q_blocks = pl.cdiv(sq, block_q)
     kv_blocks = pl.cdiv(sk, block_k)
     dyn_offset = q_start is not None
@@ -149,6 +181,12 @@ def flash_attention(
         jnp.asarray(sk - sq if q_start is None else q_start, jnp.int32), (b,)
     )
     meta = jnp.stack([kv_len, q_start])          # (2, B) in SMEM
+    if paged:
+        # block-table rows ride below kv_len/q_start: meta[2 + j, bi] is
+        # the physical page of row bi's j-th logical block
+        meta = jnp.concatenate(
+            [meta, block_tables.astype(jnp.int32).T], axis=0
+        )                                        # (2 + nblocks, B)
 
     kernel = functools.partial(
         _flash_kernel,
@@ -160,6 +198,23 @@ def flash_attention(
         q_offset=sk - sq,
         dyn_offset=dyn_offset,
     )
+    if paged:
+        bpp = page // block_k                    # k-tiles per page
+
+        def kv_spec():
+            return pl.BlockSpec(
+                (1, block_k, 1, dh),
+                # logical k-block ik lives in page meta[2 + ik // bpp, bi],
+                # tile ik % bpp within it — the DMA performs the gather
+                lambda bi, hi, iq, ik, m: (m[2 + ik // bpp, bi], ik % bpp,
+                                           hi // group, 0),
+            )
+    else:
+        def kv_spec():
+            return pl.BlockSpec(
+                (1, block_k, 1, dh),
+                lambda bi, hi, iq, ik, kvl: (bi, ik, hi // group, 0),
+            )
     grid = (b, h, q_blocks, kv_blocks)
     out = pl.pallas_call(
         kernel,
@@ -170,14 +225,8 @@ def flash_attention(
                 pl.BlockSpec(
                     (1, block_q, 1, dh), lambda bi, hi, iq, ik, kvl: (bi, iq, hi, 0)
                 ),
-                pl.BlockSpec(
-                    (1, block_k, 1, dh),
-                    lambda bi, hi, iq, ik, kvl: (bi, ik, hi // group, 0),
-                ),
-                pl.BlockSpec(
-                    (1, block_k, 1, dh),
-                    lambda bi, hi, iq, ik, kvl: (bi, ik, hi // group, 0),
-                ),
+                kv_spec(),
+                kv_spec(),
             ],
             out_specs=pl.BlockSpec(
                 (1, block_q, 1, dh), lambda bi, hi, iq, ik, kvl: (bi, iq, hi, 0)

@@ -97,11 +97,21 @@ def attention_ref(
     return _plain(q, k, v, causal, scale)
 
 
+def _gather_pages(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    """(P, page, KV, Dh) pool + (B, nblocks) table -> the logical
+    (B, nblocks*page, KV, Dh) cache each batch row sees — the jnp oracle
+    of the gather the Pallas index maps perform via DMA."""
+    b, n = block_table.shape
+    page = pool.shape[1]
+    return pool[block_table].reshape(b, n * page, *pool.shape[2:])
+
+
 def decode_attention_ref(
     q: jnp.ndarray,
     k_cache: jnp.ndarray,
     v_cache: jnp.ndarray,
     pos: jnp.ndarray,
+    block_table: jnp.ndarray | None = None,
     *,
     scale: float | None = None,
 ) -> jnp.ndarray:
@@ -110,8 +120,13 @@ def decode_attention_ref(
     q: (B, 1, H, Dh); caches: (B, Smax, KV, Dh); pos: () or (B,) int32 —
     the index of the new token, per batch row when vector (continuous
     batching: every slot at its own position); keys at positions > pos
-    are masked (cache slots not yet written).
+    are masked (cache slots not yet written).  With `block_table`
+    ((B, nblocks) int32) the caches are page pools (P, page, KV, Dh) and
+    each row's logical cache is gathered through its table row first.
     """
+    if block_table is not None:
+        k_cache = _gather_pages(k_cache, block_table)
+        v_cache = _gather_pages(v_cache, block_table)
     b, _, h, dh = q.shape
     kv = k_cache.shape[2]
     group = h // kv
@@ -133,6 +148,7 @@ def chunk_attention_ref(
     k_cache: jnp.ndarray,
     v_cache: jnp.ndarray,
     pos: jnp.ndarray,
+    block_table: jnp.ndarray | None = None,
     *,
     scale: float | None = None,
 ) -> jnp.ndarray:
@@ -142,8 +158,13 @@ def chunk_attention_ref(
     global positions pos..pos+C-1; caches: (B, Smax, KV, Dh) with the
     chunk's keys/values already written at those positions.  Query i
     attends cache keys <= pos + i; everything later (unwritten slots,
-    future in-chunk keys) is masked.  pos: () or (B,) int32.
+    future in-chunk keys) is masked.  pos: () or (B,) int32.  With
+    `block_table` ((B, nblocks) int32) the caches are page pools
+    (P, page, KV, Dh), gathered per row as in `decode_attention_ref`.
     """
+    if block_table is not None:
+        k_cache = _gather_pages(k_cache, block_table)
+        v_cache = _gather_pages(v_cache, block_table)
     b, c, h, dh = q.shape
     kv = k_cache.shape[2]
     group = h // kv

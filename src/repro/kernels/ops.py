@@ -90,7 +90,12 @@ _SIGS = {
 #   decode_attention 1: pos may be (B,) as well as scalar — continuous
 #              batching decodes every slot at its own position in one
 #              call (the kernel grew per-batch kv_len rows in SMEM)
-_ABI_MINORS = {"moe_gmm": 2, "decode_attention": 1}
+#   decode_attention 2 / chunk_attention 1: optional trailing
+#              block_tables arg — k/v may be page pools (P, page, KV, Dh)
+#              gathered through a per-batch block table; the kernel grew
+#              per-batch block-index rows in the same SMEM meta
+#              (docs/kernels.md "block-gather meta ABI")
+_ABI_MINORS = {"moe_gmm": 2, "decode_attention": 2, "chunk_attention": 1}
 
 ABIS: dict[str, AbiString] = {
     name: AbiString.make(name, sig, major=1, minor=_ABI_MINORS.get(name, 0))
@@ -106,32 +111,42 @@ def _native_attention(q, k, v, *, causal=True, scale=None, config=None,
                            interpret=interpret)
 
 
-def _native_decode_attention(q, k_cache, v_cache, pos, *, scale=None,
-                             config=None, interpret=False):
-    # decode = flash with Sq=1 over the written prefix of the cache
+def _native_decode_attention(q, k_cache, v_cache, pos, block_tables=None, *,
+                             scale=None, config=None, interpret=False):
+    # decode = flash with Sq=1 over the written prefix of the cache; with
+    # block_tables the caches are page pools and the kernel's index maps
+    # gather pages (page size = the pool's second dim)
+    page = k_cache.shape[1] if block_tables is not None else None
     return flash_attention(
         q, k_cache, v_cache, kv_len=pos + 1, causal=False, scale=scale,
         config=config, interpret=interpret,
+        block_tables=block_tables, page_size=page,
     )
 
 
-def _ref_decode_attention(q, k_cache, v_cache, pos, *, scale=None):
-    return decode_attention_ref(q, k_cache, v_cache, pos, scale=scale)
+def _ref_decode_attention(q, k_cache, v_cache, pos, block_tables=None, *,
+                          scale=None):
+    return decode_attention_ref(q, k_cache, v_cache, pos, block_tables,
+                                scale=scale)
 
 
-def _native_chunk_attention(q, k_cache, v_cache, pos, *, scale=None,
-                            config=None, interpret=False):
+def _native_chunk_attention(q, k_cache, v_cache, pos, block_tables=None, *,
+                            scale=None, config=None, interpret=False):
     # chunked prefill = flash with the causal diagonal re-anchored at pos:
     # query i (global position pos+i) sees cache keys <= pos+i, and the
     # kv_len mask hides slots past the chunk's own freshly written tail.
+    page = k_cache.shape[1] if block_tables is not None else None
     return flash_attention(
         q, k_cache, v_cache, kv_len=pos + q.shape[1], q_start=pos,
         causal=True, scale=scale, config=config, interpret=interpret,
+        block_tables=block_tables, page_size=page,
     )
 
 
-def _ref_chunk_attention(q, k_cache, v_cache, pos, *, scale=None):
-    return chunk_attention_ref(q, k_cache, v_cache, pos, scale=scale)
+def _ref_chunk_attention(q, k_cache, v_cache, pos, block_tables=None, *,
+                         scale=None):
+    return chunk_attention_ref(q, k_cache, v_cache, pos, block_tables,
+                               scale=scale)
 
 
 def _ref_attention(q, k, v, *, causal=True, scale=None):
@@ -255,9 +270,30 @@ def _example_decode(platform):
             pos)
 
 
+def _paged_geom(args):
+    """(page, logical_smax) when args carry a block table, else None.
+
+    The bucket validator rebuilds scalar parts as python ints, so an
+    array-ness check (has .shape, rank 2) is the paged discriminator —
+    a contiguous call's 5th arg is the scalar pos / absent."""
+    if len(args) >= 5:
+        shp = getattr(args[4], "shape", None)
+        if shp is not None and len(shp) == 2:
+            page = args[1].shape[1]
+            return page, shp[1] * page
+    return None
+
+
 def _feasible_decode(cfg, platform, args):
     smax, dh = args[1].shape[1], args[1].shape[3]
     bk = cfg["block_k"]
+    paged = _paged_geom(args)
+    if paged is not None:
+        page, smax = paged
+        # block_k > page would be gcd-clamped to the page size inside the
+        # kernel — reject so distinct configs never alias one measurement
+        if bk > page:
+            return False
     return bk <= smax and (2 * dh + 2 * bk * dh + bk + 2) * 4 <= _VMEM_BUDGET
 
 
@@ -285,6 +321,11 @@ def _feasible_chunk(cfg, platform, args):
     c, dh = args[0].shape[1], args[0].shape[3]
     smax = args[1].shape[1]
     bq, bk = cfg["block_q"], cfg["block_k"]
+    paged = _paged_geom(args)
+    if paged is not None:
+        page, smax = paged
+        if bk > page:
+            return False
     vmem = (2 * bq * dh + 2 * bk * dh + bq * bk + 2 * bq) * 4
     return bq <= c and bk <= smax and vmem <= _VMEM_BUDGET
 
@@ -433,31 +474,62 @@ def _synth_attention(platform, shapes, dtype):
     return tuple(_normal(k, p, dtype) for k, p in zip(ks, parts))
 
 
-def _synth_decode(platform, shapes, dtype):
-    # pos carries no geometry: recorded as a trailing "scalar" part when
-    # traffic ran under jit (traced 0-d array), absent when it was a
-    # python int (the canonical example) — accept both and resynthesize
-    # it mid-cache
+def _attn_cache_parts(shapes):
+    """Normalize a decode/chunk attention bucket to its array parts.
+
+    Returns [q, k_cache, v_cache] (contiguous) or [q, pool_k, pool_v,
+    block_table] (paged); pos carries no geometry — recorded as a
+    "scalar" part (traced 0-d), a 1-d (B,) vector (continuous batching),
+    or absent (python int) — drop it whichever way it appears.  The
+    block table is always 2-d, so rank disambiguates."""
     parts = _parse_bucket(shapes)
-    if parts and len(parts) == 4 and parts[3] == ():
-        parts = parts[:3]
-    if not parts or len(parts) != 3 or any(len(p) != 4 for p in parts):
+    if not parts:
         return None
-    ks = jax.random.split(jax.random.PRNGKey(2), 3)
-    q, k, v = (_normal(kk, p, dtype) for kk, p in zip(ks, parts))
+    if len(parts) in (4, 5) and len(parts[3]) <= 1:
+        parts = parts[:3] + parts[4:]
+    if len(parts) == 3 and all(len(p) == 4 for p in parts):
+        return parts
+    if (len(parts) == 4 and all(len(p) == 4 for p in parts[:3])
+            and len(parts[3]) == 2):
+        return parts
+    return None
+
+
+def _synth_decode(platform, shapes, dtype):
+    parts = _attn_cache_parts(shapes)
+    if parts is None:
+        return None
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q, k, v = (_normal(kk, p, dtype) for kk, p in zip(ks, parts[:3]))
+    if len(parts) == 4:
+        npages, page = parts[1][0], parts[1][1]
+        b, nblocks = parts[3]
+        bt = jax.random.randint(ks[3], (b, nblocks), 0, max(npages, 1),
+                                jnp.int32)
+        return (q, k, v, (nblocks * page) // 2, bt)
     return (q, k, v, parts[1][1] // 2)
 
 
 def _synth_chunk(platform, shapes, dtype):
     # same bucket structure as decode: q/k_cache/v_cache (+ optional
-    # trailing "scalar" for a traced pos); resynthesize pos mid-cache
-    parts = _parse_bucket(shapes)
-    if parts and len(parts) == 4 and parts[3] == ():
-        parts = parts[:3]
-    if not parts or len(parts) != 3 or any(len(p) != 4 for p in parts):
+    # trailing "scalar" for a traced pos, + block table when paged);
+    # resynthesize pos mid-cache
+    parts = _attn_cache_parts(shapes)
+    if parts is None:
         return None
-    ks = jax.random.split(jax.random.PRNGKey(5), 3)
-    q, k, v = (_normal(kk, p, dtype) for kk, p in zip(ks, parts))
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    q, k, v = (_normal(kk, p, dtype) for kk, p in zip(ks, parts[:3]))
+    c = parts[0][1]
+    if len(parts) == 4:
+        npages, page = parts[1][0], parts[1][1]
+        b, nblocks = parts[3]
+        logical = nblocks * page
+        if logical < c:
+            return None      # chunk cannot fit the logical window
+        bt = jax.random.randint(ks[3], (b, nblocks), 0, max(npages, 1),
+                                jnp.int32)
+        pos = max(0, min(logical - c, logical // 2))
+        return (q, k, v, pos, bt)
     return (q, k, v, parts[1][1] // 2)
 
 

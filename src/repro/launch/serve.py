@@ -62,7 +62,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import DeployOptions, make_deployment
 from repro.launch.train import make_bundle
 
-__all__ = ["Request", "Scheduler", "JaxEngine", "Server", "main"]
+__all__ = ["BlockAllocator", "PagedPool", "Request", "Scheduler", "JaxEngine",
+           "Server", "main"]
 
 # scheduler states (docs/serving.md state machine)
 QUEUED = "queued"
@@ -133,6 +134,94 @@ class Request:
         return self.first_token_t - self.submit_t
 
 
+class BlockAllocator:
+    """Pure-python page bookkeeping for the paged KV cache.
+
+    All-or-nothing allocation: `alloc(owner, n)` hands out n pages or
+    None (never a partial grant — a half-provisioned request could not
+    be admitted anyway), `free(owner)` returns every page the owner
+    held.  Reserved pages (the park page) are never handed out.  The
+    invariants the hypothesis suite pins (tests/test_block_allocator.py):
+    no page is owned twice, free returns exactly what alloc granted, and
+    pages-in-use never exceeds the pool.
+    """
+
+    def __init__(self, num_pages: int, *, reserved: int = 0):
+        if num_pages <= reserved:
+            raise ValueError(f"pool of {num_pages} pages with {reserved} reserved")
+        self.num_pages = num_pages
+        self.reserved = tuple(range(reserved))
+        # stack of free page ids; pop() from the end -> lowest index first
+        self._free = list(range(num_pages - 1, reserved - 1, -1))
+        self.owned: dict[int, list[int]] = {}
+
+    @property
+    def capacity(self) -> int:
+        return self.num_pages - len(self.reserved)
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        return self.capacity - len(self._free)
+
+    def alloc(self, owner, n: int) -> list[int] | None:
+        if owner in self.owned:
+            raise ValueError(f"owner {owner!r} already holds pages")
+        if n < 1:
+            raise ValueError(f"alloc of {n} pages")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self.owned[owner] = pages
+        return list(pages)
+
+    def free(self, owner) -> list[int]:
+        pages = self.owned.pop(owner, [])
+        self._free.extend(pages)
+        return list(pages)
+
+
+class PagedPool:
+    """BlockAllocator + per-slot block tables — the paged cache's map.
+
+    Page size equals the prefill chunk C, so each compiled prefill step
+    fills exactly one page.  Page 0 is reserved as the *park page*:
+    inactive slots keep an all-zero table row, so their parked decode
+    writes land there and their (masked, discarded) gathers read from
+    there — the table never holds an out-of-pool index.  The default
+    pool size (1 park + slots x max_blocks) matches the contiguous
+    layout's capacity; pass `num_pages` to serve under memory pressure.
+    """
+
+    PARK = 0
+
+    def __init__(self, slots: int, max_len: int, page_size: int,
+                 num_pages: int | None = None):
+        self.page_size = page_size
+        self.max_blocks = -(-max_len // page_size)
+        self.num_pages = (1 + slots * self.max_blocks
+                          if num_pages is None else num_pages)
+        self.allocator = BlockAllocator(self.num_pages, reserved=1)
+        self.block_tables = np.zeros((slots, self.max_blocks), np.int32)
+
+    def alloc(self, owner, n: int) -> list[int] | None:
+        return self.allocator.alloc(owner, n)
+
+    def free(self, owner) -> list[int]:
+        return self.allocator.free(owner)
+
+    def assign(self, slot: int, pages: list[int]) -> None:
+        row = np.zeros(self.max_blocks, np.int32)
+        row[: len(pages)] = pages
+        self.block_tables[slot] = row
+
+    def release(self, slot: int) -> None:
+        self.block_tables[slot] = self.PARK
+
+
 class JaxEngine:
     """The compiled half of the server: params, cache, two jitted steps.
 
@@ -155,19 +244,30 @@ class JaxEngine:
     ``prefill_calls`` / ``decode_calls`` count compiled-step dispatches;
     the scoreboard derives per-request costs from the per-Request
     counters and cross-checks the totals against these.
+
+    With ``paged=True`` the cache k/v are page *pools* (page size = C)
+    addressed through ``self.pool``'s per-slot block tables; the
+    scheduler drives the allocator (admission in pages actually needed)
+    and this engine just threads the tables into both compiled steps.
+    Paged mode requires chunked prefill — the page-per-chunk invariant
+    is what keeps every prefill write inside one page.
     """
 
     def __init__(self, cfg, container, *, slots: int, max_len: int,
-                 chunk: int = 16, prefill_mode: str = "chunked"):
+                 chunk: int = 16, prefill_mode: str = "chunked",
+                 paged: bool = False, num_pages: int | None = None):
         if prefill_mode not in ("chunked", "decode"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         if chunk < 1 or chunk > max_len:
             raise ValueError(f"chunk {chunk} outside [1, max_len={max_len}]")
+        if paged and prefill_mode != "chunked":
+            raise ValueError("paged cache requires prefill_mode='chunked'")
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.chunk = chunk
         self.prefill_mode = prefill_mode
+        self.paged = paged
         shape = ShapeConfig("serve", max_len, slots, "decode")
         self.dep = make_deployment(
             cfg, shape, container.mesh,
@@ -177,7 +277,14 @@ class JaxEngine:
         self.model = self.dep.model
         params = self.model.init(jax.random.PRNGKey(0))
         self.params = jax.device_put(params, self.dep.param_sharding)
-        self.cache = self.model.init_cache(slots, max_len)
+        if paged:
+            self.pool = PagedPool(slots, max_len, chunk, num_pages)
+            self.cache = self.model.init_paged_cache(
+                self.pool.num_pages, chunk, slots
+            )
+        else:
+            self.pool = None
+            self.cache = self.model.init_cache(slots, max_len)
         self._prefill = jax.jit(self.model.prefill_into)
         self._decode = jax.jit(self.model.decode)
         self.prefill_calls = 0
@@ -204,9 +311,12 @@ class JaxEngine:
         if self.prefill_mode == "chunked":
             buf = np.zeros((1, self.chunk), np.int32)
             buf[0, :n] = tokens
+            extra = ()
+            if self.paged:
+                extra = (jnp.asarray(self.pool.block_tables[slot]),)
             logits, self.cache = self._prefill(
                 self.params, jnp.asarray(buf), self.cache,
-                jnp.int32(slot), jnp.int32(pos), jnp.int32(n),
+                jnp.int32(slot), jnp.int32(pos), jnp.int32(n), *extra,
             )
             self.prefill_calls += 1
             return np.asarray(logits[0])
@@ -231,9 +341,12 @@ class JaxEngine:
         """One batched decode tick.  tokens (slots, 1), pos (slots,),
         active (slots,) bool; returns (slots, vocab) logits (garbage on
         inactive rows)."""
+        extra = ()
+        if self.paged:
+            extra = (jnp.asarray(self.pool.block_tables),)
         logits, self.cache = self._decode(
             self.params, jnp.asarray(tokens), self.cache,
-            jnp.asarray(pos), jnp.asarray(active),
+            jnp.asarray(pos), jnp.asarray(active), *extra,
         )
         self.decode_calls += 1
         return np.asarray(logits)
@@ -256,12 +369,20 @@ class Scheduler:
     Admission control (at `submit`):
       * queue bounded at `queue_depth` — excess rejected (queue-full);
       * `max_new` clamped to `max_new_cap`;
-      * the prompt+generation budget must fit one slot's cache window:
-        prompt_len + max_new <= max_len AND every chunk's C-wide write
-        window stays in bounds (ceil(prompt_len/C)*C <= max_len); the
-        baseline path needs one extra slot for its duplicated last
+      * **contiguous**: the prompt+generation budget must fit one slot's
+        cache window: prompt_len + max_new <= max_len AND every chunk's
+        C-wide write window stays in bounds (ceil(prompt_len/C)*C <=
+        max_len — conservative: the whole window is reserved up front);
+        the baseline path needs one extra slot for its duplicated last
         prompt token.  Unfit requests are rejected (too-long), never
         queued — a queued request is guaranteed servable.
+      * **paged**: the budget is counted in *pages actually needed*
+        (ceil(budget / page)); a request is rejected only when that can
+        never be satisfied (more pages than the block table holds or
+        than exist in the pool).  A satisfiable request that finds the
+        pool momentarily exhausted *queues* — `_admit` allocates pages
+        FCFS and stops at the first request the pool cannot serve yet,
+        so it admits as soon as a completion frees pages.
 
     The clock is injected so tests can drive TTFT accounting with a
     deterministic fake; the engine is injected so policy tests need no
@@ -272,6 +393,7 @@ class Scheduler:
                  max_new_cap: int = 1 << 30, interleave: int = 2,
                  clock: Callable[[], float] = time.monotonic):
         self.engine = engine
+        self.paged = bool(getattr(engine, "paged", False))
         self.queue_depth = queue_depth
         self.max_new_cap = max_new_cap
         self.interleave = max(1, interleave)
@@ -281,6 +403,10 @@ class Scheduler:
         self.rejected: dict[str, int] = {}
         self.submitted = 0
         self.completed = 0
+        self.peak_active = 0
+        # (pages allocated, pages holding written tokens) per tick — the
+        # fragmentation series the table7 --paged scoreboard reports
+        self.page_samples: list[tuple[int, int]] = []
 
     # -- admission --------------------------------------------------------
     def _budget(self, prompt_len: int, max_new: int) -> int:
@@ -292,12 +418,25 @@ class Scheduler:
             gen_end += 1                           # baseline re-feeds last token
         return max(chunks_end, gen_end)
 
+    def _pages_needed(self, prompt_len: int, max_new: int) -> int:
+        return -(-self._budget(prompt_len, max_new)
+                 // self.engine.pool.page_size)
+
     def submit(self, req: Request) -> bool:
         """Admission-checked enqueue; returns False (and records why)
         when the request is rejected."""
         self.submitted += 1
         req.max_new = min(req.max_new, self.max_new_cap)
-        if req.prompt_len < 1 or self._budget(req.prompt_len, req.max_new) > self.engine.max_len:
+        if self.paged:
+            pool = self.engine.pool
+            unfit = (req.prompt_len < 1
+                     or self._pages_needed(req.prompt_len, req.max_new)
+                     > min(pool.max_blocks, pool.allocator.capacity))
+        else:
+            unfit = (req.prompt_len < 1
+                     or self._budget(req.prompt_len, req.max_new)
+                     > self.engine.max_len)
+        if unfit:
             self.rejected[REJECT_TOO_LONG] = self.rejected.get(REJECT_TOO_LONG, 0) + 1
             return False
         if len(self.queue) >= self.queue_depth:
@@ -311,12 +450,27 @@ class Scheduler:
 
     def _admit(self) -> None:
         for s in range(self.engine.slots):
-            if self.active[s] is None and self.queue:
+            if not self.queue:
+                break
+            if self.active[s] is not None:
+                continue
+            if self.paged:
+                # FCFS in pages: allocate head-of-line's pages or wait —
+                # skipping ahead would starve long requests forever
+                req = self.queue[0]
+                pages = self.engine.pool.alloc(
+                    req.order, self._pages_needed(req.prompt_len, req.max_new)
+                )
+                if pages is None:
+                    break                          # out of pages: stay queued
+                self.queue.popleft()
+                self.engine.pool.assign(s, pages)
+            else:
                 req = self.queue.popleft()
-                req.slot = s
-                req.state = PREFILLING
-                req.prefill_pos = 0
-                self.active[s] = req
+            req.slot = s
+            req.state = PREFILLING
+            req.prefill_pos = 0
+            self.active[s] = req
 
     # -- lifecycle helpers ------------------------------------------------
     def _emit(self, req: Request, token: int, out: list) -> None:
@@ -330,6 +484,9 @@ class Scheduler:
     def _finish(self, req: Request) -> None:
         req.state = DONE
         req.finish_t = self.clock()
+        if self.paged:
+            self.engine.pool.free(req.order)
+            self.engine.pool.release(req.slot)
         self.active[req.slot] = None
         req.slot = None
         self.completed += 1
@@ -339,6 +496,9 @@ class Scheduler:
         """Admit, prefill up to `interleave` units, one decode tick.
         Returns the (rid, token) pairs emitted this quantum."""
         self._admit()
+        self.peak_active = max(
+            self.peak_active, sum(r is not None for r in self.active)
+        )
         out: list[tuple[int, int]] = []
 
         for _ in range(self.interleave):
@@ -377,6 +537,14 @@ class Scheduler:
                 r.decode_steps += 1
                 r.next_pos += 1
                 self._emit(r, int(np.argmax(logits[r.slot])), out)
+        if self.paged:
+            page = self.engine.pool.page_size
+            used = sum(
+                -(-(r.prefill_pos if r.state == PREFILLING else r.next_pos)
+                  // page)
+                for r in self.active if r is not None
+            )
+            self.page_samples.append((self.engine.pool.allocator.used, used))
         return out
 
     @property
@@ -393,10 +561,12 @@ class Server:
     def __init__(self, cfg, container, *, slots: int, max_len: int,
                  chunk: int = 16, prefill_mode: str = "chunked",
                  queue_depth: int = 64, max_new_cap: int = 1 << 30,
-                 interleave: int = 2,
+                 interleave: int = 2, paged: bool = False,
+                 num_pages: int | None = None,
                  clock: Callable[[], float] = time.monotonic):
         self.engine = JaxEngine(cfg, container, slots=slots, max_len=max_len,
-                                chunk=chunk, prefill_mode=prefill_mode)
+                                chunk=chunk, prefill_mode=prefill_mode,
+                                paged=paged, num_pages=num_pages)
         self.scheduler = Scheduler(self.engine, queue_depth=queue_depth,
                                    max_new_cap=max_new_cap,
                                    interleave=interleave, clock=clock)
@@ -436,6 +606,14 @@ def main(argv=None) -> int:
                     default="chunked",
                     help="'decode' replays the old prefill-by-decode loop "
                          "(O(prompt_len) whole-batch ticks) as a baseline")
+    ap.add_argument("--paged", action="store_true",
+                    help="page the KV cache (page size = --chunk) with "
+                         "per-slot block tables; admission budgets in pages "
+                         "actually needed (requires chunked prefill)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged pool size incl. the reserved park page "
+                         "(default: 1 + slots * ceil(max_len/chunk), the "
+                         "contiguous layout's capacity)")
     ap.add_argument("--queue-depth", type=int, default=64,
                     help="admission control: submits beyond this queue depth "
                          "are rejected, not buffered")
@@ -476,7 +654,8 @@ def main(argv=None) -> int:
 
     server = Server(cfg, container, slots=args.slots, max_len=args.max_len,
                     chunk=args.chunk, prefill_mode=args.prefill_mode,
-                    queue_depth=args.queue_depth)
+                    queue_depth=args.queue_depth, paged=args.paged,
+                    num_pages=args.num_pages)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for rid in range(args.requests):
@@ -499,6 +678,17 @@ def main(argv=None) -> int:
     if server.scheduler.rejected:
         print("rejected: " + " ".join(
             f"{k}={v}" for k, v in sorted(server.scheduler.rejected.items())))
+    if args.paged:
+        pool = server.engine.pool
+        samples = server.scheduler.page_samples or [(0, 0)]
+        alloc_mean = sum(a for a, _ in samples) / len(samples)
+        used_mean = sum(u for _, u in samples) / len(samples)
+        frag = 1.0 - used_mean / alloc_mean if alloc_mean else 0.0
+        print(f"paged pool: {pool.num_pages} pages x {pool.page_size} tokens "
+              f"(park+{pool.allocator.capacity}) | "
+              f"peak_active={server.scheduler.peak_active} | "
+              f"pages allocated/used mean {alloc_mean:.1f}/{used_mean:.1f} "
+              f"(fragmentation {frag:.0%})")
     if container.workload is not None:
         print(f"captured {len(container.workload)} op geometries -> "
               f"{container.workload.path} (warm with: python -m repro.tuning.warm)")

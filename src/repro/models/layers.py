@@ -223,6 +223,23 @@ def _cache_write(buf: jnp.ndarray, upd: jnp.ndarray, pos: jnp.ndarray) -> jnp.nd
     return jax.lax.dynamic_update_slice_in_dim(buf, upd, pos, axis=1)
 
 
+def _paged_decode_write(
+    pool: jnp.ndarray,           # (P, page, KV, Dh)
+    upd: jnp.ndarray,            # (B, 1, KV, Dh)
+    pos: jnp.ndarray,            # () or (B,) int32
+    block_tables: jnp.ndarray,   # (B, nblocks) int32
+) -> jnp.ndarray:
+    """Scatter each row's new token into its page: logical position p of
+    row b lands in page block_tables[b, p // page] at offset p % page.
+    Parked rows (table row all zeros) write into the reserved park page —
+    harmless garbage, their logits are discarded by the active mask."""
+    b = upd.shape[0]
+    page = pool.shape[1]
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    phys = block_tables[jnp.arange(b), posv // page]
+    return pool.at[phys, posv % page].set(upd[:, 0].astype(pool.dtype))
+
+
 def attention_decode(
     params,
     x: jnp.ndarray,                      # (B, 1, D)
@@ -235,8 +252,13 @@ def attention_decode(
     cross: bool = False,
     pctx: "ParallelCtx | None" = None,
     real_group: tuple[int, int] | None = None,
+    block_tables: jnp.ndarray | None = None,   # (B, nblocks) — paged cache
 ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
-    """One-token attention against the cache; writes the new k/v (self only)."""
+    """One-token attention against the cache; writes the new k/v (self only).
+
+    With `block_tables` the cache k/v are page pools (P, page, KV, Dh)
+    shared by all slots; the write scatters through the table and the op
+    gathers through it (paged decode_attention ABI)."""
     rope_pos = pos[None] if pos.ndim == 0 else pos[:, None]
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     if cfg.qkv_bias:
@@ -257,9 +279,15 @@ def attention_decode(
             k, v = k + params["bk"], v + params["bv"]
         if use_rope:
             k = rotary(k, rope_pos, cfg.rope_theta)
-        k_cache = _cache_write(cache["k"], k, pos)
-        v_cache = _cache_write(cache["v"], v, pos)
-        out = binding["decode_attention"](q, k_cache, v_cache, pos)
+        if block_tables is not None:
+            k_cache = _paged_decode_write(cache["k"], k, pos, block_tables)
+            v_cache = _paged_decode_write(cache["v"], v, pos, block_tables)
+            out = binding["decode_attention"](q, k_cache, v_cache, pos,
+                                              block_tables)
+        else:
+            k_cache = _cache_write(cache["k"], k, pos)
+            v_cache = _cache_write(cache["v"], v, pos)
+            out = binding["decode_attention"](q, k_cache, v_cache, pos)
         new_cache = {"k": k_cache, "v": v_cache}
     out = _mask_padded_heads(out, real_group)
     if pctx is not None and pctx.active:
@@ -279,6 +307,7 @@ def attention_chunk(
     use_rope: bool = True,
     pctx: "ParallelCtx | None" = None,
     real_group: tuple[int, int] | None = None,
+    block_tables: jnp.ndarray | None = None,   # (nblocks,) — this slot's row
 ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     """Chunked-prefill attention: C prompt tokens at global positions
     pos..pos+C-1 against the partially filled cache.
@@ -289,6 +318,11 @@ def attention_chunk(
     later query — in-chunk (causal mask) or decode (its own write lands
     first) — sees those slots only after they are overwritten, so no
     masking is needed here; the SSM path is where padding needs care.
+
+    With `block_tables` (the prefilling slot's (nblocks,) table row,
+    B == 1) the cache k/v are page pools and the serving invariant
+    page == C makes the chunk's write exactly one page: the chunk at
+    global position pos fills page block_tables[pos // page] whole.
     """
     c = x.shape[1]
     chunk_pos = pos + jnp.arange(c)
@@ -302,9 +336,22 @@ def attention_chunk(
         k = rotary(k, chunk_pos, cfg.rope_theta)
     if pctx is not None and pctx.active:
         q = pctx.constrain_heads(q)
-    k_cache = _cache_write(cache["k"], k, pos)
-    v_cache = _cache_write(cache["v"], v, pos)
-    out = binding["chunk_attention"](q, k_cache, v_cache, pos)
+    if block_tables is not None:
+        page = cache["k"].shape[1]
+        assert c == page, f"paged prefill requires chunk == page, {c} != {page}"
+        blk = jax.lax.dynamic_index_in_dim(
+            jnp.asarray(block_tables, jnp.int32), pos // page, keepdims=False
+        )
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (blk, 0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (blk, 0, 0, 0))
+        out = binding["chunk_attention"](q, k_cache, v_cache, pos,
+                                         block_tables[None])
+    else:
+        k_cache = _cache_write(cache["k"], k, pos)
+        v_cache = _cache_write(cache["v"], v, pos)
+        out = binding["chunk_attention"](q, k_cache, v_cache, pos)
     out = _mask_padded_heads(out, real_group)
     if pctx is not None and pctx.active:
         out = pctx.constrain_heads(out)

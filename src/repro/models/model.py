@@ -196,24 +196,58 @@ class Model:
             out[f"p{j}"] = entry
         return out
 
-    def abstract_cache(self, batch: int, max_len: int) -> Tree:
-        def conv(t):
-            if isinstance(t, tuple) and len(t) == 2 and isinstance(t[0], tuple):
-                return jax.ShapeDtypeStruct(t[0], jnp.dtype(t[1]))
-            return {k: conv(v) for k, v in t.items()}
+    @staticmethod
+    def _to_abstract(t):
+        if isinstance(t, tuple) and len(t) == 2 and isinstance(t[0], tuple):
+            return jax.ShapeDtypeStruct(t[0], jnp.dtype(t[1]))
+        return {k: Model._to_abstract(v) for k, v in t.items()}
 
-        return conv(self.cache_shapes(batch, max_len))
+    def abstract_cache(self, batch: int, max_len: int) -> Tree:
+        return self._to_abstract(self.cache_shapes(batch, max_len))
 
     def init_cache(self, batch: int, max_len: int) -> Tree:
         return jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), self.abstract_cache(batch, max_len)
         )
 
+    def paged_cache_shapes(self, num_pages: int, page_size: int, slots: int) -> Tree:
+        """Paged-cache entry shapes: attention k/v become page *pools*
+        (nb, num_pages, page_size, KV, Dh) shared by all slots and
+        addressed through per-slot block tables; recurrent (SSM) state is
+        O(1) per slot and stays slot-indexed exactly as in `cache_shapes`.
+        """
+        cfg = self.cfg
+        if cfg.is_enc_dec or cfg.modality == "vision":
+            raise NotImplementedError("paged cache supports text decoders only")
+        nb = self.num_blocks
+        out: Tree = {}
+        for j in range(self.period):
+            entry: Tree = {}
+            if cfg.is_attn_layer(j):
+                kv_shape = (nb, num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+                entry["k"] = (kv_shape, cfg.dtype)
+                entry["v"] = (kv_shape, cfg.dtype)
+            else:
+                ss = ssm_init_cache_shapes(cfg, slots)
+                entry["state"] = ((nb,) + ss["state"][0], ss["state"][1])
+                entry["conv"] = ((nb,) + ss["conv"][0], ss["conv"][1])
+            out[f"p{j}"] = entry
+        return out
+
+    def abstract_paged_cache(self, num_pages: int, page_size: int, slots: int) -> Tree:
+        return self._to_abstract(self.paged_cache_shapes(num_pages, page_size, slots))
+
+    def init_paged_cache(self, num_pages: int, page_size: int, slots: int) -> Tree:
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.abstract_paged_cache(num_pages, page_size, slots),
+        )
+
     # ------------------------------------------------------------------ #
     # layer application
     # ------------------------------------------------------------------ #
     def _layer(self, j, lp, x, mode, lc, pos, enc_out, positions, aux,
-               n_valid=None, active=None):
+               n_valid=None, active=None, block_tables=None):
         cfg, binding = self.cfg, self.binding
         new_cache: Tree = {}
         h = L.norm_apply(lp["pre_norm"], x, cfg, binding)
@@ -223,12 +257,14 @@ class Model:
                 y, kv = L.attention_decode(
                     lp["attn"], h, {"k": lc["k"], "v": lc["v"]}, pos, cfg, binding,
                     use_rope=self.use_rope, pctx=self.pctx, real_group=rg,
+                    block_tables=block_tables,
                 )
                 new_cache.update(kv)
             elif mode == "chunk":
                 y, kv = L.attention_chunk(
                     lp["attn"], h, {"k": lc["k"], "v": lc["v"]}, pos, cfg, binding,
                     use_rope=self.use_rope, pctx=self.pctx, real_group=rg,
+                    block_tables=block_tables,
                 )
                 new_cache.update(kv)
             else:
@@ -310,7 +346,7 @@ class Model:
     # decoder stack
     # ------------------------------------------------------------------ #
     def _decoder(self, params, x, mode, cache=None, pos=None, enc_out=None,
-                 positions=None, n_valid=None, active=None):
+                 positions=None, n_valid=None, active=None, block_tables=None):
         cfg = self.cfg
         p = self.period
         unroll = self.num_blocks if self.scan_unroll else 1
@@ -358,7 +394,7 @@ class Model:
                     )
                     x, nc, aux = self._layer(
                         j, bp[f"p{j}"], x, mode, lc, pos, enc_out, positions, aux,
-                        n_valid=n_valid, active=active,
+                        n_valid=n_valid, active=active, block_tables=block_tables,
                     )
                     new_cache = dict(new_cache)
                     new_cache[f"p{j}"] = jax.tree.map(
@@ -531,7 +567,8 @@ class Model:
         logits = self._logits(params, x[:, -1:, :])[:, 0]
         return logits, cache
 
-    def prefill_into(self, params, tokens, cache, slot, pos, n_valid=None):
+    def prefill_into(self, params, tokens, cache, slot, pos, n_valid=None,
+                     block_row=None):
         """Chunked prefill: advance ONE slot of a batched cache by C tokens.
 
         The compiled unit of prompt ingestion — a fixed-shape step the
@@ -557,6 +594,12 @@ class Model:
         The logits seed the request's first generated token: sampling from
         them replaces the decode tick the old prefill-by-decode loop burned
         re-feeding the last prompt token.
+
+        With `block_row` (this slot's (nblocks,) int32 block-table row)
+        the cache is paged (`init_paged_cache`): the k/v pools are shared
+        by all slots, so they are passed to the decoder whole and written
+        back whole — only the per-slot recurrent (SSM) leaves are sliced
+        and scattered at `slot` as in the contiguous path.
         """
         cfg = self.cfg
         if cfg.is_enc_dec or cfg.modality == "vision":
@@ -566,34 +609,61 @@ class Model:
         n_valid = jnp.asarray(n_valid, jnp.int32)
         slot = jnp.asarray(slot, jnp.int32)
         pos = jnp.asarray(pos, jnp.int32)
-        row = jax.tree.map(
-            lambda buf: jax.lax.dynamic_slice_in_dim(buf, slot, 1, axis=1), cache
-        )
+        paged = block_row is not None
+        if paged:
+            row = {
+                pj: {
+                    name: (buf if name in ("k", "v")
+                           else jax.lax.dynamic_slice_in_dim(buf, slot, 1, axis=1))
+                    for name, buf in entry.items()
+                }
+                for pj, entry in cache.items()
+            }
+        else:
+            row = jax.tree.map(
+                lambda buf: jax.lax.dynamic_slice_in_dim(buf, slot, 1, axis=1),
+                cache,
+            )
         x = self._embed(params, tokens)
         x, new_row, _ = self._decoder(params, x, "chunk", cache=row, pos=pos,
-                                      n_valid=n_valid)
+                                      n_valid=n_valid, block_tables=block_row)
         x = L.norm_apply(params["final_norm"], x, cfg, self.binding)
         last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
         logits = self._logits(params, last)[:, 0]
-        cache = jax.tree.map(
-            lambda buf, upd: jax.lax.dynamic_update_slice_in_dim(
-                buf, upd.astype(buf.dtype), slot, axis=1
-            ),
-            cache, new_row,
-        )
+        if paged:
+            cache = {
+                pj: {
+                    name: (upd.astype(cache[pj][name].dtype)
+                           if name in ("k", "v")
+                           else jax.lax.dynamic_update_slice_in_dim(
+                               cache[pj][name], upd.astype(cache[pj][name].dtype),
+                               slot, axis=1))
+                    for name, upd in entry.items()
+                }
+                for pj, entry in new_row.items()
+            }
+        else:
+            cache = jax.tree.map(
+                lambda buf, upd: jax.lax.dynamic_update_slice_in_dim(
+                    buf, upd.astype(buf.dtype), slot, axis=1
+                ),
+                cache, new_row,
+            )
         return logits, cache
 
-    def decode(self, params, token, cache, pos, active=None):
+    def decode(self, params, token, cache, pos, active=None, block_tables=None):
         """token: (B, 1) int32; pos: () or (B,) int32 — per-slot positions
         under continuous batching; active: optional (B,) bool — rows whose
         recurrent (SSM) state may advance.  Inactive rows keep their state;
         their KV write lands wherever the scheduler parks pos (by
-        convention max_len-1, a slot admission never lets live data reach).
+        convention max_len-1, a slot admission never lets live data reach;
+        paged: table row all zeros, the write lands in the park page).
+        block_tables: optional (B, nblocks) int32 — the cache is paged.
         """
         cfg = self.cfg
         x = self._embed(params, token, offset=pos)
         x, new_cache, _ = self._decoder(params, x, "decode", cache=cache, pos=pos,
-                                        active=active)
+                                        active=active, block_tables=block_tables)
         x = L.norm_apply(params["final_norm"], x, cfg, self.binding)
         logits = self._logits(params, x)[:, 0]
         return logits, new_cache

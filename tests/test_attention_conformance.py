@@ -1,0 +1,326 @@
+"""Attention conformance grid: ref vs pallas over dtype x shape x layout.
+
+Modeled on the xformers memory-efficient-attention test matrix: one
+parametrized grid sweeps every attention entry point (`flash_attention`
+prefill, `chunk_attention`, `decode_attention`) over
+
+  * dtype (fp32 / bf16, per-dtype tolerances),
+  * seq/kv geometry — including ragged Sq < Sk, non-multiple-of-block
+    tails, and GQA group widths,
+  * causal diagonals and dynamic q_start offsets,
+  * kv_len padding masks (unwritten cache slots),
+  * contiguous vs paged layout (page pools + shuffled block tables,
+    poisoned park page),
+
+against a single fp32 masked-softmax oracle.  Every geometry is also
+round-tripped through the tuner synthesizer (`bucket_shapes` ->
+`args_from_shapes`), pinning that autotune/dispatch/bundles can rebuild
+a workload for every shape the serving paths emit — paged ones included.
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.platform import POD_SIM
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention_ref import (
+    chunk_attention_ref,
+    decode_attention_ref,
+)
+from repro.kernels.ops import _NATIVES_INTERPRET, tuners
+from repro.tuning import bucket_shapes
+from repro.tuning.config import BlockConfig
+
+TOLS = {"float32": 2e-5, "bfloat16": 2e-2}
+DTYPES = tuple(TOLS)
+POISON = 50.0     # park-page fill: loud if it ever leaks into an output
+
+
+def _mk(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.dtype(dtype))
+
+
+def _oracle(q, k, v, kv_len=None, q_start=None, causal=True):
+    """fp32 masked-softmax oracle of the flash kernel's exact semantics:
+    query i (global position q_start + i) sees keys j with j < kv_len
+    and, when causal, j <= q_start + i."""
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    scale = dh ** -0.5
+    kv_len = jnp.broadcast_to(
+        jnp.asarray(sk if kv_len is None else kv_len, jnp.int32), (b,))
+    q_start = jnp.broadcast_to(
+        jnp.asarray(sk - sq if q_start is None else q_start, jnp.int32), (b,))
+    qg = (q.reshape(b, sq, kv, group, dh) * scale).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    ki = jnp.arange(sk)
+    mask = ki[None, :] < kv_len[:, None]                       # (B, Sk)
+    mask = mask[:, None, :]                                    # (B, 1, Sk)
+    if causal:
+        qi = jnp.arange(sq)[None, :, None] + q_start[:, None, None]
+        mask = mask & (ki[None, None, :] <= qi)                # (B, Sq, Sk)
+    else:
+        mask = jnp.broadcast_to(mask, (b, sq, sk))
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def _paged_layout(k, v, page, seed=0):
+    """Scatter a contiguous (B, S, KV, Dh) cache into page pools through a
+    SHUFFLED permutation block table, so a kernel that ignores the table
+    (or mixes up rows) cannot pass by accident.  Page 0 is the reserved
+    park page, poisoned with a loud constant."""
+    b, s = k.shape[:2]
+    assert s % page == 0
+    n = s // page
+    npages = 1 + b * n
+    perm = np.random.default_rng(seed).permutation(np.arange(1, npages))
+    bt = jnp.asarray(perm.reshape(b, n), jnp.int32)
+    pool_shape = (npages, page) + k.shape[2:]
+    pool_k = jnp.full(pool_shape, POISON, k.dtype)
+    pool_v = jnp.full(pool_shape, POISON, v.dtype)
+    kb = k.reshape(b, n, page, *k.shape[2:]).reshape(b * n, page, *k.shape[2:])
+    vb = v.reshape(b, n, page, *v.shape[2:]).reshape(b * n, page, *v.shape[2:])
+    pool_k = pool_k.at[bt.reshape(-1)].set(kb)
+    pool_v = pool_v.at[bt.reshape(-1)].set(vb)
+    return pool_k, pool_v, bt
+
+
+def _close(got, want, dtype, scale=1):
+    tol = scale * TOLS[dtype]
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# flash (prefill): geometry x causal x kv_len padding x layout
+# ---------------------------------------------------------------------------
+
+# (b, sq, sk, h, kv, dh) — ragged Sq < Sk, tails off the 8-wide blocks,
+# GQA groups, and page-divisible extents for the paged variants
+FLASH_GEOMS = [
+    (1, 8, 8, 2, 2, 8),        # square, block-exact
+    (2, 7, 19, 2, 1, 8),       # ragged + non-multiple-of-block tails
+    (1, 30, 30, 2, 2, 8),      # multi-block with tail
+    (1, 5, 40, 4, 2, 16),      # short queries vs long cache, GQA group 2
+]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("pad", [0, 3])
+@pytest.mark.parametrize("geom", FLASH_GEOMS, ids=lambda g: "x".join(map(str, g)))
+def test_flash_grid(geom, pad, causal, dtype):
+    b, sq, sk, h, kv, dh = geom
+    ks = jax.random.split(jax.random.PRNGKey(hash(geom) & 0xFFFF), 3)
+    q = _mk(ks[0], (b, sq, h, dh), dtype)
+    k = _mk(ks[1], (b, sk, kv, dh), dtype)
+    v = _mk(ks[2], (b, sk, kv, dh), dtype)
+    kv_len = None if pad == 0 else jnp.asarray(sk - pad, jnp.int32)
+    out = flash_attention(q, k, v, kv_len=kv_len, causal=causal,
+                          block_q=8, block_k=8, interpret=True)
+    want = _oracle(q, k, v, kv_len=kv_len, causal=causal)
+    _close(out, want, dtype, scale=5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("geom", [(1, 8, 8, 2, 2, 8), (1, 5, 40, 4, 2, 16)],
+                         ids=lambda g: "x".join(map(str, g)))
+def test_flash_paged_matches_contiguous(geom, dtype):
+    """Paged flash through a shuffled permutation table must equal the
+    contiguous kernel bit-for-bit-ish — same math, different DMA route."""
+    b, sq, sk, h, kv, dh = geom
+    page = 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _mk(ks[0], (b, sq, h, dh), dtype)
+    k = _mk(ks[1], (b, sk, kv, dh), dtype)
+    v = _mk(ks[2], (b, sk, kv, dh), dtype)
+    kv_len = jnp.asarray(sk - 2, jnp.int32)
+    cont = flash_attention(q, k, v, kv_len=kv_len, causal=True,
+                           block_q=8, block_k=8, interpret=True)
+    pool_k, pool_v, bt = _paged_layout(k, v, page)
+    paged = flash_attention(q, pool_k, pool_v, kv_len=kv_len, causal=True,
+                            block_q=8, block_k=8, interpret=True,
+                            block_tables=bt, page_size=page)
+    _close(paged, cont, dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: pos offsets x padding x layout
+# ---------------------------------------------------------------------------
+
+# (b, smax, h, kv, dh, pos) — scalar and per-row vector positions,
+# non-power-of-two extents, first/last-slot edges
+DECODE_GEOMS = [
+    (2, 32, 2, 2, 8, (5, 17)),
+    (1, 24, 2, 1, 8, 10),
+    (3, 48, 4, 2, 16, (0, 47, 20)),
+]
+
+
+def _decode_args(geom, dtype):
+    b, smax, h, kv, dh, pos = geom
+    ks = jax.random.split(jax.random.PRNGKey(smax), 3)
+    q = _mk(ks[0], (b, 1, h, dh), dtype)
+    k = _mk(ks[1], (b, smax, kv, dh), dtype)
+    v = _mk(ks[2], (b, smax, kv, dh), dtype)
+    posv = jnp.asarray(pos, jnp.int32)
+    return q, k, v, posv
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("geom", DECODE_GEOMS, ids=lambda g: f"smax{g[1]}b{g[0]}")
+def test_decode_grid(geom, layout, dtype):
+    q, k, v, pos = _decode_args(geom, dtype)
+    want = decode_attention_ref(q, k, v, pos)   # pinned against _oracle below
+    if layout == "paged":
+        page = 8
+        pool_k, pool_v, bt = _paged_layout(k, v, page)
+        out = _NATIVES_INTERPRET["decode_attention"](q, pool_k, pool_v, pos, bt)
+        ref = decode_attention_ref(q, pool_k, pool_v, pos, bt)
+        _close(ref, want, dtype)                # ref gather == logical cache
+    else:
+        out = _NATIVES_INTERPRET["decode_attention"](q, k, v, pos)
+    _close(out, want, dtype, scale=5)
+
+
+def test_decode_ref_matches_oracle():
+    """The decode ref itself is pinned to the flash oracle (kv_len=pos+1,
+    non-causal) so the grid above is anchored to one ground truth."""
+    q, k, v, pos = _decode_args(DECODE_GEOMS[0], "float32")
+    want = _oracle(q, k, v, kv_len=pos + 1, causal=False)
+    _close(decode_attention_ref(q, k, v, pos), want, "float32")
+
+
+# ---------------------------------------------------------------------------
+# chunk_attention: q_start offsets x tails x layout
+# ---------------------------------------------------------------------------
+
+# (c, smax, h, kv, dh, pos) — chunk at the window start, mid-cache, and
+# at a non-multiple-of-block offset; B == 1 (the serving prefill shape)
+CHUNK_GEOMS = [
+    (8, 32, 2, 2, 8, 8),
+    (16, 48, 2, 1, 8, 16),
+    (8, 24, 4, 2, 16, 0),
+]
+
+
+def _chunk_args(geom, dtype):
+    c, smax, h, kv, dh, pos = geom
+    ks = jax.random.split(jax.random.PRNGKey(c + smax), 3)
+    q = _mk(ks[0], (1, c, h, dh), dtype)
+    k = _mk(ks[1], (1, smax, kv, dh), dtype)
+    v = _mk(ks[2], (1, smax, kv, dh), dtype)
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("geom", CHUNK_GEOMS, ids=lambda g: f"c{g[0]}pos{g[5]}")
+def test_chunk_grid(geom, layout, dtype):
+    q, k, v, pos = _chunk_args(geom, dtype)
+    want = chunk_attention_ref(q, k, v, pos)
+    if layout == "paged":
+        page = geom[0]                          # serving invariant: page == C
+        pool_k, pool_v, bt = _paged_layout(k, v, page)
+        out = _NATIVES_INTERPRET["chunk_attention"](q, pool_k, pool_v, pos, bt)
+        _close(chunk_attention_ref(q, pool_k, pool_v, pos, bt), want, dtype)
+    else:
+        out = _NATIVES_INTERPRET["chunk_attention"](q, k, v, pos)
+    _close(out, want, dtype, scale=5)
+
+
+def test_chunk_ref_matches_oracle():
+    """chunk_attention == flash with the diagonal re-anchored at pos and
+    kv_len = pos + C."""
+    q, k, v, pos = _chunk_args(CHUNK_GEOMS[0], "float32")
+    want = _oracle(q, k, v, kv_len=pos + q.shape[1], q_start=pos, causal=True)
+    _close(chunk_attention_ref(q, k, v, pos), want, "float32")
+
+
+def test_paged_park_page_is_inert():
+    """Zero (park) block-table entries past the written prefix must not
+    leak the park page's poison into the output: the kv_len mask discards
+    those lanes even though their DMAs are issued."""
+    q, k, v, pos = _decode_args((2, 32, 2, 2, 8, (5, 9)), "float32")
+    pool_k, pool_v, bt = _paged_layout(k, v, 8)
+    bt = bt.at[:, 2:].set(0)                    # park everything past page 1
+    out = _NATIVES_INTERPRET["decode_attention"](q, pool_k, pool_v, pos, bt)
+    want = decode_attention_ref(q, k, v, pos)   # pos < 16: logical prefix only
+    assert np.all(np.isfinite(np.asarray(out)))
+    _close(out, want, "float32", scale=5)
+
+
+# ---------------------------------------------------------------------------
+# tuner synthesizer round-trip: every grid geometry must be rebuildable
+# ---------------------------------------------------------------------------
+
+def _no_scalars(shapes: str) -> str:
+    """pos is traced in recorded traffic ('scalar'/1-d part) but a python
+    int in synthesized args (invisible to bucket_shapes) — compare the
+    array parts only."""
+    return ",".join(p for p in shapes.split(",")
+                    if p and p != "scalar" and "x" in p)
+
+
+def _roundtrip(op, args, expect_feasible=True):
+    t = tuners()[op]
+    shapes, dtype = bucket_shapes(args)
+    synth = t.args_from_shapes(POD_SIM, shapes, dtype)
+    assert synth is not None, f"{op}: no synth for bucket {shapes}"
+    shapes2, dtype2 = bucket_shapes(synth)
+    assert _no_scalars(shapes2) == _no_scalars(shapes), (shapes2, shapes)
+    assert dtype2 == dtype
+    feasible = [
+        cfg for cfg in (
+            BlockConfig.make(**dict(zip(t.space, vals)))
+            for vals in itertools.product(*t.space.values()))
+        if t.feasible(cfg, POD_SIM, synth)
+    ]
+    if expect_feasible:
+        assert feasible, f"{op}: no feasible config for bucket {shapes}"
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("geom", DECODE_GEOMS, ids=lambda g: f"smax{g[1]}b{g[0]}")
+def test_decode_synth_roundtrip(geom, layout, dtype):
+    q, k, v, pos = _decode_args(geom, dtype)
+    if layout == "paged":
+        page = 16                               # >= the space's smallest bk
+        pool_k, pool_v, bt = _paged_layout(
+            jnp.tile(k, (1, -(-32 // k.shape[1]), 1, 1))[:, :32],
+            jnp.tile(v, (1, -(-32 // v.shape[1]), 1, 1))[:, :32], page)
+        _roundtrip("decode_attention", (q, pool_k, pool_v, pos, bt))
+    else:
+        _roundtrip("decode_attention", (q, k, v, pos))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("geom", CHUNK_GEOMS, ids=lambda g: f"c{g[0]}pos{g[5]}")
+def test_chunk_synth_roundtrip(geom, layout, dtype):
+    q, k, v, pos = _chunk_args(geom, dtype)
+    # the chunk space's smallest block_q is 16: c=8 buckets synthesize
+    # fine but legitimately have no feasible tuning config
+    ok = geom[0] >= 16
+    if layout == "paged":
+        page = max(geom[0], 16)
+        s = -(-k.shape[1] // page) * page
+        pool_k, pool_v, bt = _paged_layout(
+            jnp.pad(k, ((0, 0), (0, s - k.shape[1]), (0, 0), (0, 0))),
+            jnp.pad(v, ((0, 0), (0, s - v.shape[1]), (0, 0), (0, 0))), page)
+        _roundtrip("chunk_attention", (q, pool_k, pool_v, pos, bt),
+                   expect_feasible=ok)
+    else:
+        _roundtrip("chunk_attention", (q, k, v, pos), expect_feasible=ok)

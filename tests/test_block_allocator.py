@@ -1,0 +1,161 @@
+"""Property suite for the paged KV-cache page pool.
+
+`BlockAllocator` is the only mutable bookkeeping between the Scheduler
+and the physical cache pools — an aliasing bug here silently corrupts
+another request's KV state.  Random alloc/free traces check the
+invariants that make paging safe:
+
+  * no page is ever owned by two requests (or handed out twice),
+  * reserved (park) pages are never allocated,
+  * free() returns exactly the pages alloc() handed out, and they
+    become reallocatable,
+  * used + available == capacity at every step,
+  * a failed (oversubscribed) alloc changes nothing.
+
+The trace checker always runs against deterministic seeded traces; when
+hypothesis is installed (it is a declared dev dependency but not in
+every container image) the same checker is additionally driven by a
+shrinking fuzzer.  `PagedPool` assign/release round-trips are checked
+on top: block-table rows hold the owned pages zero-padded with the
+park page.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.launch.serve import BlockAllocator, PagedPool
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def check_trace(num_pages, reserved, steps):
+    """Replay an alloc/free trace against a shadow model, asserting the
+    allocator invariants after every step."""
+    if num_pages <= reserved:
+        with pytest.raises(ValueError):
+            BlockAllocator(num_pages, reserved=reserved)
+        return
+    alloc = BlockAllocator(num_pages, reserved=reserved)
+    held: dict[int, list[int]] = {}
+    for step in steps:
+        if step[0] == "free":
+            owner = step[1]
+            got = alloc.free(owner)
+            assert sorted(got) == sorted(held.pop(owner, []))
+        else:
+            owner, n = step
+            if owner in held:
+                with pytest.raises(ValueError):
+                    alloc.alloc(owner, n)
+                continue
+            before = alloc.available
+            pages = alloc.alloc(owner, n)
+            if pages is None:
+                assert n > before
+                assert alloc.available == before   # failed alloc is a no-op
+            else:
+                assert len(pages) == n
+                held[owner] = list(pages)
+        # global invariants after every step
+        flat = [p for ps in held.values() for p in ps]
+        assert len(flat) == len(set(flat)), "page owned twice"
+        assert not set(flat) & set(alloc.reserved), "park page leased out"
+        assert all(0 <= p < alloc.num_pages for p in flat)
+        assert alloc.used == len(flat)
+        assert alloc.used + alloc.available == alloc.capacity
+        assert alloc.owned == held
+    # drain: everything comes back and the pool is whole again
+    for owner in list(held):
+        alloc.free(owner)
+        held.pop(owner)
+    assert alloc.available == alloc.capacity
+
+
+def _random_trace(rng, length=40):
+    steps = []
+    for _ in range(rng.randrange(length + 1)):
+        if rng.random() < 0.35:
+            steps.append(("free", rng.randrange(8)))
+        else:
+            steps.append((rng.randrange(8), rng.randrange(1, 7)))
+    return steps
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_allocator_invariants_seeded(seed):
+    rng = random.Random(seed)
+    num_pages = rng.randrange(2, 25)
+    reserved = rng.randrange(0, 4)
+    check_trace(num_pages, reserved, _random_trace(rng))
+
+
+if HAVE_HYPOTHESIS:
+    _steps = st.lists(
+        st.one_of(
+            st.tuples(st.integers(0, 7), st.integers(1, 6)),
+            st.tuples(st.just("free"), st.integers(0, 7)),
+        ),
+        max_size=40,
+    )
+
+    @settings(max_examples=200, deadline=None)
+    @given(num_pages=st.integers(2, 24), reserved=st.integers(0, 3),
+           steps=_steps)
+    def test_allocator_invariants_fuzzed(num_pages, reserved, steps):
+        check_trace(num_pages, reserved, steps)
+
+
+def test_alloc_rejects_bad_requests():
+    alloc = BlockAllocator(4, reserved=1)
+    with pytest.raises(ValueError):
+        alloc.alloc(0, 0)
+    alloc.alloc(0, 2)
+    with pytest.raises(ValueError):
+        alloc.alloc(0, 1)          # owner already holds pages
+    assert alloc.free(99) == []    # unknown owner: harmless no-op
+
+
+def test_free_makes_pages_reallocatable():
+    alloc = BlockAllocator(5, reserved=1)
+    first = alloc.alloc("a", 4)
+    assert first is not None and alloc.available == 0
+    assert alloc.alloc("b", 1) is None
+    alloc.free("a")
+    second = alloc.alloc("b", 4)
+    assert sorted(second) == sorted(first)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_paged_pool_tables_point_at_owned_pages(seed):
+    rng = random.Random(100 + seed)
+    slots = rng.randrange(1, 5)
+    max_len = rng.randrange(4, 33)
+    page = rng.choice([2, 4, 8])
+    pool = PagedPool(slots, max_len, page)
+    assert pool.block_tables.shape == (slots, pool.max_blocks)
+    live: dict[int, list[int]] = {}
+    for slot in range(slots):
+        n = rng.randrange(1, pool.max_blocks + 1)
+        pages = pool.alloc(slot, n)
+        if pages is None:
+            continue
+        pool.assign(slot, pages)
+        live[slot] = list(pages)
+        row = pool.block_tables[slot]
+        assert list(row[:n]) == list(pages)
+        assert np.all(row[n:] == PagedPool.PARK), "tail not parked"
+        assert PagedPool.PARK not in pages
+    # rows of distinct slots never share a physical page
+    flat = [p for ps in live.values() for p in ps]
+    assert len(flat) == len(set(flat))
+    for slot in list(live):
+        pool.free(slot)
+        pool.release(slot)
+        assert np.all(pool.block_tables[slot] == PagedPool.PARK)
+    assert pool.allocator.available == pool.allocator.capacity

@@ -30,6 +30,7 @@ from repro.launch.serve import (
     PREFILLING,
     REJECT_QUEUE_FULL,
     REJECT_TOO_LONG,
+    PagedPool,
     Request,
     Scheduler,
     Server,
@@ -157,12 +158,16 @@ class FakeEngine:
     vocab = 16
 
     def __init__(self, *, slots=2, max_len=32, chunk=4,
-                 prefill_mode="chunked", clock=None):
+                 prefill_mode="chunked", clock=None, paged=False,
+                 num_pages=None):
         self.slots = slots
         self.max_len = max_len
         self.chunk = chunk
         self.prefill_mode = prefill_mode
         self.clock = clock
+        self.paged = paged
+        if paged:
+            self.pool = PagedPool(slots, max_len, chunk, num_pages)
         self.log = []
 
     @property
@@ -346,6 +351,111 @@ def test_modes_generate_identical_tokens():
 
 
 # ---------------------------------------------------------------------------
+# policy: paged admission — budgets in pages, queue on pressure
+# ---------------------------------------------------------------------------
+
+def test_paged_budget_accepts_what_contiguous_rejects():
+    """Regression pin for the contiguous budget's conservatism AND the
+    paged fix.  L=17, C=8, max_len=18: the last chunk's C-wide write
+    window ends at ceil(17/8)*8 = 24 > 18, so the contiguous path must
+    keep rejecting (its slot really would overflow).  The paged path
+    counts pages: ceil(24/8) = 3 pages == the block table's 3 rows, so
+    the same request is admitted and served."""
+    cont = Scheduler(FakeEngine(chunk=8, max_len=18))
+    assert not cont.submit(_mk(0, 17, max_new=1))
+    assert cont.rejected[REJECT_TOO_LONG] == 1
+
+    paged = Scheduler(FakeEngine(chunk=8, max_len=18, paged=True))
+    req = _mk(0, 17, max_new=1)
+    assert paged.submit(req)
+    _drain(paged)
+    assert req.done and len(req.tokens) == 1
+    # never-satisfiable still bounced at submit, not queued
+    assert not paged.submit(_mk(1, 30, max_new=10))   # 5 pages > 3 rows
+    assert not paged.submit(_mk(2, 0))                # empty prompt
+    assert paged.rejected[REJECT_TOO_LONG] == 2
+
+
+def test_paged_short_runs_alongside_long():
+    """Pages are the admission currency: a long request holding most of
+    the pool does not block a short one whose pages still fit — both
+    run concurrently in separate slots."""
+    eng = FakeEngine(slots=2, chunk=4, max_len=16, paged=True)
+    sched = Scheduler(eng)
+    long_req = _mk(0, 12, max_new=4)      # budget 16 -> 4 pages
+    short_req = _mk(1, 4, max_new=1)      # ceil(max(4, 5)/4) = 2 pages
+    assert sched.submit(long_req) and sched.submit(short_req)
+    sched.tick()
+    assert long_req.slot is not None and short_req.slot is not None
+    assert eng.pool.allocator.used == 6
+    _drain(sched)
+    assert sched.peak_active == 2
+    assert long_req.tokens and short_req.tokens
+    assert eng.pool.allocator.available == eng.pool.allocator.capacity
+
+
+def test_paged_out_of_pages_queues_then_admits():
+    """Pool exhaustion is back-pressure, not rejection: a satisfiable
+    request that finds no free pages stays queued — even with a free
+    slot — and is admitted as soon as a completion frees pages."""
+    eng = FakeEngine(slots=2, chunk=4, max_len=16, paged=True,
+                     num_pages=1 + 5)     # park + 5: one long OR one short
+    sched = Scheduler(eng)
+    long_req = _mk(0, 12, max_new=1)      # budget 13 -> 4 pages
+    short_req = _mk(1, 4, max_new=1)      # 2 pages > the 1 page left
+    assert sched.submit(long_req)
+    assert sched.submit(short_req)        # accepted: satisfiable, queues
+    sched.tick()
+    assert long_req.slot is not None
+    assert short_req.slot is None and sched.queue, "short must wait, not reject"
+    assert sched.rejected == {}
+    while not long_req.done:
+        sched.tick()
+    _drain(sched)
+    assert short_req.done and len(short_req.tokens) == 1
+    assert eng.pool.allocator.available == eng.pool.allocator.capacity
+
+
+def test_paged_admission_is_head_of_line():
+    """FCFS in pages: when the head of the queue cannot get its pages,
+    later (smaller) requests must NOT jump ahead even though they would
+    fit and a slot is free — skipping would starve long requests."""
+    eng = FakeEngine(slots=2, chunk=4, max_len=16, paged=True,
+                     num_pages=1 + 5)
+    sched = Scheduler(eng)
+    first = _mk(0, 12, max_new=4)         # 4 pages, holds the pool a while
+    second = _mk(1, 12, max_new=1)        # 4 pages: cannot fit alongside
+    tiny = _mk(2, 3, max_new=1)           # 1 page: would fit — must wait
+    for r in (first, second, tiny):
+        assert sched.submit(r)
+    sched.tick()
+    assert first.slot is not None
+    assert second.slot is None and tiny.slot is None
+    assert [r.rid for r in sched.queue] == [1, 2]
+    _drain(sched)
+    assert first.finish_t <= second.finish_t <= tiny.finish_t
+
+
+def test_paged_mode_generates_identical_tokens_and_samples_pages():
+    """The paged scheduler is a pure layout change: same greedy chains
+    as the contiguous chunked path, with the fragmentation series
+    (allocated vs written pages) recorded every tick."""
+    outs = {}
+    for paged in (False, True):
+        eng = FakeEngine(slots=2, chunk=4, paged=paged)
+        sched = Scheduler(eng)
+        reqs = [_mk(0, 5, 4), _mk(1, 8, 3), _mk(2, 3, 2)]
+        for r in reqs:
+            assert sched.submit(r)
+        _drain(sched)
+        outs[paged] = {r.rid: list(r.tokens) for r in reqs}
+    assert outs[True] == outs[False]
+    assert sched.page_samples, "paged runs must record the page series"
+    assert all(used <= alloc for alloc, used in sched.page_samples)
+    assert np.all(eng.pool.block_tables == PagedPool.PARK)   # fully released
+
+
+# ---------------------------------------------------------------------------
 # end-to-end: real Server on the pod-sim deployment
 # ---------------------------------------------------------------------------
 
@@ -413,6 +523,36 @@ def test_e2e_serving_matches_unbatched_reference(served_container):
         assert r.prefill_steps == math.ceil(r.prompt_len / 4)
         assert r.decode_steps == r.max_new - 1
         assert r.finish_t >= r.first_token_t >= r.submit_t
+        assert r.tokens == _reference_tokens(model, params, r.prompt, r.max_new)
+
+
+def test_e2e_paged_matches_contiguous(served_container):
+    """The paged cache is a layout, not a policy: the same traffic served
+    through page pools + block tables must emit exactly the contiguous
+    chunked path's tokens (== the unbatched reference), and the pool
+    must be fully drained when the server goes idle."""
+    cfg, container = served_container
+    rng = np.random.default_rng(11)
+    lens = [4, 6, 9, 3]
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in lens]
+    tokens = {}
+    for paged in (False, True):
+        server = Server(cfg, container, slots=2, max_len=32, chunk=4,
+                        prefill_mode="chunked", paged=paged)
+        for rid, p in enumerate(prompts):
+            assert server.submit(Request(rid=rid, prompt=p.copy(), max_new=3))
+        server.run()
+        assert all(r.done for r in server.requests)
+        tokens[paged] = {r.rid: list(r.tokens) for r in server.requests}
+        if paged:
+            pool = server.engine.pool
+            assert pool.allocator.available == pool.allocator.capacity
+            assert np.all(pool.block_tables == PagedPool.PARK)
+            assert server.scheduler.page_samples
+    assert tokens[True] == tokens[False]
+    model, params = server.engine.model, server.engine.params
+    for r in server.requests:
         assert r.tokens == _reference_tokens(model, params, r.prompt, r.max_new)
 
 
