@@ -49,6 +49,42 @@ With ``--paged`` it additionally asserts the paged run emits the SAME
 tokens per request as contiguous chunked, admits strictly more
 concurrent requests, and stays within 10% of chunked's p50 TTFT.
 ``--json PATH`` writes the full scoreboard for the CI artifact.
+
+``--fleet`` replaces the single-host comparison with the disaggregated
+serving-fleet storm (repro.serving, docs/fleet.md), priced end to end
+through the paper's portability loop:
+
+  1. *capture* — one single-host paged chunked run with autotune +
+     profile on (REPRO_PLATFORM=pod-sim, fresh site cache); its tokens
+     are the reference every fleet run must reproduce, and its cache +
+     workload profile are warmed (repro.tuning.warm) and exported as a
+     portable tuning bundle (repro.tuning.bundle).
+  2. *static*  — a 1-prefill + N-decode fleet on a fake tick clock,
+     every replica deployed into a FRESH site cache that warm-starts
+     from the bundle.  Mid-run the busiest decode replica is killed;
+     the supervisor detects the silence and the fleet re-prefills the
+     lost requests, but with ``rescale=False`` the capacity is never
+     replaced.
+  3. *elastic* — the same storm with rescaling on: the controller
+     provisions replacement decode replicas whose deploys bind
+     "bundle-imported" with zero searches (the §III claim: portable
+     site artifacts make elastic capacity cheap).
+
+Scoreboard rows (latencies in deterministic fleet ticks, not wall ms):
+
+  table7/fleet-<run>/e2e_p50_ticks   median submit->finish latency
+  table7/fleet-<run>/goodput_tok_tick tokens/tick counting ONLY requests
+                                     whose e2e latency met the SLO
+                                     (default: the static run's own p50)
+  table7/fleet-<run>/drain_ticks     ticks until the fleet drained
+  table7/fleet-elastic/provisioned   replicas added during the storm
+
+``--fleet --smoke`` exits non-zero unless both fleet runs emit tokens
+identical to the capture run, the kill was recovered in both, elastic
+goodput-under-SLO strictly exceeds static, and every provisioned
+replica bound bundle-imported entries with zero cold searches.  The
+elastic run's event log (rescale decisions, warm-start dispatch lines)
+is printed for the CI fleet-smoke job to grep.
 """
 
 from __future__ import annotations
@@ -236,6 +272,313 @@ def check_invariants(boards: dict, chunk: int, max_new: int) -> list[str]:
     return fails
 
 
+# ------------------------------------------------------------------ fleet --
+class TickClock:
+    """Deterministic fleet clock: one unit per scheduler tick."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float = 1.0) -> None:
+        self.t += dt
+
+
+def warm_start_stats(container) -> dict[str, int]:
+    """How this deploy's dispatch tables were populated: geometries that
+    arrived via the tuning bundle vs searches paid at bind time.  The
+    ElasticController logs this dict verbatim when it provisions a
+    replica — "searched=0" is the bundle warm-start claim."""
+    imported = searched = 0
+    for report in container.binding.reports:
+        for g in report.geometries:
+            if g.status == "bundle-imported":
+                imported += 1
+            elif g.status in ("cache-miss-searched", "cache-expired-searched"):
+                searched += 1
+    return {"bundle-imported": imported, "searched": searched}
+
+
+def fleet_capture(args, cfg, arch_bundle, workdir,
+                  reqs: list[Request]) -> tuple[dict, str, str]:
+    """The portability loop's producer half: serve once on a single host
+    with autotune + profile capture, warm the cache against the recorded
+    traffic, and export the site's tuned state as a portable bundle.
+
+    The serving geometry (slots, max_len, chunk, paged) matches the
+    fleet replicas exactly, so the captured buckets are the ones every
+    replica deploy will dispatch — and the run's tokens are the
+    reference the fleet must reproduce."""
+    from repro.tuning import warm
+    from repro.tuning.bundle import export_bundle
+
+    cache0 = str(workdir / "capture-cache.json")
+    profile = str(workdir / "workload-profile.json")
+    bundle_path = str(workdir / "site-bundle.tgz")
+    runtime = Runtime(host_env={"REPRO_PLATFORM": "pod-sim",
+                                "REPRO_TUNING_CACHE": cache0,
+                                "REPRO_WORKLOAD_PROFILE": profile})
+    container = runtime.deploy(arch_bundle, mesh=make_host_mesh(data=1),
+                               native_ops=True, autotune=True, profile=True)
+    platform = container.platform
+    server = Server(cfg, container, slots=args.slots, max_len=args.max_len,
+                    chunk=args.chunk, prefill_mode="chunked",
+                    interleave=args.interleave, paged=True)
+    t0 = time.monotonic()
+    for r in reqs:
+        if not server.submit(Request(rid=r.rid, prompt=r.prompt.copy(),
+                                     max_new=r.max_new)):
+            raise RuntimeError(f"capture run rejected rid={r.rid}")
+    server.run()
+    wall = time.monotonic() - t0
+    done = [r for r in server.requests if r.done]
+    board = {
+        "completed": len(done),
+        "submitted": len(reqs),
+        "tokens": sum(len(r.tokens) for r in done),
+        "wall_s": wall,
+        "bind": warm_start_stats(container),
+        "per_request": [{"rid": r.rid, "tokens": list(r.tokens)}
+                        for r in done],
+    }
+    runtime.cleanup()        # persists the captured workload profile
+
+    rc = warm.main(["--cache", cache0, "--profile", profile,
+                    "--platform", "pod-sim"])
+    if rc != 0:
+        raise RuntimeError(f"tuning.warm exited {rc}")
+    export_bundle(bundle_path, cache_path=cache0, platform=platform,
+                  profile_path=profile)
+    return board, bundle_path, profile
+
+
+def fleet_once(args, cfg, arch_bundle, workdir, reqs: list[Request], *,
+               label: str, elastic: bool, bundle_path: str,
+               profile_path: str) -> dict:
+    """One kill-and-rescale storm over the seeded request set.
+
+    Every replica deploys into its OWN fresh site cache and warm-starts
+    from the exported bundle — the disaggregated analogue of shipping
+    one site artifact to a whole pool.  At --fleet-kill-tick the busiest
+    decode replica is killed; with ``elastic`` the controller replaces
+    the capacity, otherwise the survivors absorb the storm."""
+    from repro.ft import Supervisor, SupervisorConfig
+    from repro.launch.serve import JaxEngine
+    from repro.serving import ACTIVE, ElasticController, FleetScheduler, Replica
+
+    clock = TickClock()
+    runtimes: list[Runtime] = []
+    made: list[Replica] = []
+    initial = 1 + args.fleet_decode       # prefill + initial decode pool
+
+    def factory(role: str, host_id: int) -> Replica:
+        cache = str(workdir / f"{label}-site-{host_id}.json")
+        rt = Runtime(host_env={"REPRO_PLATFORM": "pod-sim",
+                               "REPRO_TUNING_CACHE": cache,
+                               "REPRO_WORKLOAD_PROFILE": profile_path})
+        runtimes.append(rt)
+        container = rt.deploy(arch_bundle, mesh=make_host_mesh(data=1),
+                              native_ops=True, autotune=True,
+                              tuning_bundle=bundle_path)
+        engine = JaxEngine(cfg, container, slots=args.slots,
+                           max_len=args.max_len, chunk=args.chunk,
+                           prefill_mode="chunked", paged=True)
+        rep = Replica(host_id, role, engine, clock=clock,
+                      interleave=args.interleave)
+        rep.warm_start = warm_start_stats(container)
+        made.append(rep)
+        return rep
+
+    try:
+        controller = ElasticController(
+            Supervisor(0, SupervisorConfig(heartbeat_timeout=2.5)),
+            min_decode=1, max_decode=args.fleet_max_decode,
+            rescale=elastic, provision_delay=1.0)
+        fleet = FleetScheduler(factory, prefill=1, decode=args.fleet_decode,
+                               clock=clock, controller=controller)
+        t0 = time.monotonic()
+        for r in reqs:
+            if not fleet.submit(Request(rid=r.rid, prompt=r.prompt.copy(),
+                                        max_new=r.max_new)):
+                raise RuntimeError(f"{label} fleet rejected rid={r.rid}")
+        killed = None
+        ticks = 0
+        while not fleet.idle:
+            if killed is None and ticks >= args.fleet_kill_tick:
+                victim = max(
+                    (rep for rep in fleet.decode_pool
+                     if rep.alive and rep.state == ACTIVE),
+                    key=lambda rep: len(rep.active_requests()), default=None)
+                if victim is not None:
+                    victim.kill()
+                    killed = victim.name
+            fleet.tick()
+            clock.advance(1.0)
+            ticks += 1
+            if ticks > 10_000:
+                raise RuntimeError(f"{label} fleet failed to drain")
+        wall = time.monotonic() - t0
+        recs = sorted(fleet.records.values(), key=lambda r: r.rid)
+        return {
+            "label": label,
+            "elastic": elastic,
+            "submitted": fleet.submitted,
+            "completed": fleet.completed,
+            "drain_ticks": ticks,
+            "wall_s": wall,
+            "killed": killed,
+            "recovered": fleet.recovered,
+            "handoffs": fleet.handoffs,
+            "adoptions": fleet.adoptions,
+            "handoff_bytes": fleet.handoff_bytes,
+            "provisioned": controller.provisioned,
+            "warm_starts": [
+                {"replica": rep.name, "provisioned": rep.id >= initial,
+                 **(rep.warm_start or {})}
+                for rep in made
+            ],
+            "events": list(fleet.events),
+            "per_request": [
+                {"rid": r.rid, "tokens": list(r.tokens), "max_new": r.max_new,
+                 "e2e_ticks": r.finish_t - r.submit_t}
+                for r in recs
+            ],
+        }
+    finally:
+        for rt in runtimes:
+            rt.cleanup()
+
+
+def fleet_goodput(board: dict, slo_ticks: float) -> float:
+    """Tokens per tick counting only requests whose submit->finish
+    latency met the SLO — the fleet analogue of goodput()."""
+    good = sum(len(pr["tokens"]) for pr in board["per_request"]
+               if pr["e2e_ticks"] <= slo_ticks)
+    return good / max(board["drain_ticks"], 1)
+
+
+def check_fleet_invariants(capture: dict, boards: dict) -> list[str]:
+    """The --fleet --smoke assertions: token identity with the capture
+    run, recovered kills, strict goodput separation, and zero-search
+    bundle warm-starts on every provisioned replica."""
+    fails = []
+    reference = {pr["rid"]: pr["tokens"] for pr in capture["per_request"]}
+    for label, b in boards.items():
+        if b["completed"] != b["submitted"]:
+            fails.append(f"{label}: {b['completed']}/{b['submitted']} "
+                         f"requests completed")
+        for pr in b["per_request"]:
+            if pr["tokens"] != reference.get(pr["rid"]):
+                fails.append(f"{label} rid={pr['rid']}: tokens diverge from "
+                             f"the single-host capture run")
+        if b["killed"] is None:
+            fails.append(f"{label}: no decode replica was killed")
+        if b["recovered"] < 1:
+            fails.append(f"{label}: kill was never recovered")
+    static, dyn = boards["fleet-static"], boards["fleet-elastic"]
+    if static["provisioned"] != 0:
+        fails.append("static fleet provisioned capacity with rescale off")
+    if dyn["provisioned"] < 1:
+        fails.append("elastic fleet never provisioned a replacement")
+    if not any("rescale: decode pool" in e for e in dyn["events"]):
+        fails.append("elastic fleet logged no rescale decision")
+    if dyn["goodput_tok_tick"] <= static["goodput_tok_tick"]:
+        fails.append(
+            f"elastic goodput {dyn['goodput_tok_tick']:.2f} tok/tick not "
+            f"above static {static['goodput_tok_tick']:.2f} during the storm")
+    provisioned = [w for w in dyn["warm_starts"] if w["provisioned"]]
+    if not provisioned:
+        fails.append("no provisioned replica recorded warm-start stats")
+    for w in provisioned:
+        if w.get("bundle-imported", 0) < 1:
+            fails.append(f"{w['replica']}: provisioned without bundle-"
+                         f"imported geometries (cold deploy)")
+        if w.get("searched", 0) != 0:
+            fails.append(f"{w['replica']}: paid {w['searched']} cold "
+                         f"search(es) despite the bundle warm-start")
+    return fails
+
+
+def fleet_main(args) -> int:
+    import tempfile
+    from pathlib import Path
+
+    arch_bundle = make_bundle(args.arch, reduced=True)
+    cfg = get_config(args.arch).reduced()
+    reqs = make_requests(args.requests, vocab=cfg.vocab_size,
+                         chunk=args.chunk, max_new=args.max_new)
+
+    with tempfile.TemporaryDirectory(prefix="table7-fleet-") as tmp:
+        workdir = Path(tmp)
+        capture, bundle_path, profile_path = fleet_capture(
+            args, cfg, arch_bundle, workdir, reqs)
+        boards = {}
+        for label, elastic in (("fleet-static", False),
+                               ("fleet-elastic", True)):
+            boards[label] = fleet_once(
+                args, cfg, arch_bundle, workdir, reqs, label=label,
+                elastic=elastic, bundle_path=bundle_path,
+                profile_path=profile_path)
+
+    slo_ticks = (args.fleet_slo_ticks
+                 if args.fleet_slo_ticks is not None
+                 else _percentile([pr["e2e_ticks"] for pr in
+                                   boards["fleet-static"]["per_request"]], 50))
+    print("name,value,derived")
+    print(f"table7/fleet-capture/tokens,{capture['tokens']},"
+          f"completed={capture['completed']}/{capture['submitted']};"
+          f"single_host_reference")
+    for label, b in boards.items():
+        lat = [pr["e2e_ticks"] for pr in b["per_request"]]
+        b["slo_ticks"] = slo_ticks
+        b["e2e_p50_ticks"] = _percentile(lat, 50)
+        b["e2e_p99_ticks"] = _percentile(lat, 99)
+        b["goodput_tok_tick"] = fleet_goodput(b, slo_ticks)
+        note = (f"killed={b['killed']};recovered={b['recovered']};"
+                f"completed={b['completed']}/{b['submitted']}")
+        print(f"table7/{label}/e2e_p50_ticks,{b['e2e_p50_ticks']:.0f},{note}")
+        print(f"table7/{label}/e2e_p99_ticks,{b['e2e_p99_ticks']:.0f},{note}")
+        print(f"table7/{label}/goodput_tok_tick,{b['goodput_tok_tick']:.2f},"
+              f"slo_ticks={slo_ticks:.0f}")
+        print(f"table7/{label}/drain_ticks,{b['drain_ticks']},"
+              f"handoffs={b['handoffs']};adoptions={b['adoptions']};"
+              f"handoff_bytes={b['handoff_bytes']}")
+    dyn = boards["fleet-elastic"]
+    print(f"table7/fleet-elastic/provisioned,{dyn['provisioned']},"
+          f"max_decode={args.fleet_max_decode};"
+          f"warm_started={sum(1 for w in dyn['warm_starts'] if w['provisioned'])}")
+    gain = (dyn["goodput_tok_tick"]
+            / max(boards["fleet-static"]["goodput_tok_tick"], 1e-9))
+    print(f"table7/summary/fleet_goodput_gain,{gain:.2f},"
+          f"elastic_vs_static_under_kill_storm")
+    print(f"fleet-capture bind: " + " ".join(
+        f"{k}={v}" for k, v in sorted(capture["bind"].items())))
+    for e in dyn["events"]:
+        print(f"fleet-event[elastic]: {e}")
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"chunk": args.chunk, "max_new": args.max_new,
+                       "slo_ticks": slo_ticks, "capture": capture,
+                       "fleet": boards}, fh, indent=2)
+        print(f"wrote {args.json}")
+
+    if not args.smoke:
+        return 0
+    fails = check_fleet_invariants(capture, boards)
+    for f in fails:
+        print(f"FAIL: {f}")
+    if fails:
+        return 1
+    print("OK: both fleet runs reproduced the single-host capture tokens "
+          "through a mid-run replica kill; the elastic fleet replaced the "
+          "capacity with bundle-warm-started replicas (zero cold searches) "
+          "and beat the static fleet's goodput under the SLO")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2.5-14b")
@@ -251,12 +594,34 @@ def main(argv=None) -> int:
     ap.add_argument("--paged", action="store_true",
                     help="add a paged-KV-cache run (2x slots from the same "
                          "cache-memory budget) to the scoreboard")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the disaggregated-fleet storm instead: capture "
+                         "-> warm -> bundle export, then a static vs elastic "
+                         "kill-and-rescale comparison with bundle-warm-"
+                         "started replicas (repro.serving)")
+    ap.add_argument("--fleet-decode", type=int, default=2,
+                    help="initial decode-pool size for the fleet runs")
+    ap.add_argument("--fleet-max-decode", type=int, default=2,
+                    help="elastic controller's decode-pool ceiling (default "
+                         "matches --fleet-decode: the elastic fleet replaces "
+                         "lost capacity but never outgrows the static "
+                         "baseline, so the goodput gap is purely the storm "
+                         "response)")
+    ap.add_argument("--fleet-kill-tick", type=int, default=4,
+                    help="tick at which the busiest decode replica is killed")
+    ap.add_argument("--fleet-slo-ticks", type=float, default=None,
+                    help="e2e-latency SLO in fleet ticks for the goodput "
+                         "rows (default: the static run's own p50)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload + compiled-step/TTFT assertions "
                          "(the CI guard)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the full scoreboard JSON (the CI artifact)")
     args = ap.parse_args(argv)
+    if args.fleet:
+        # the storm needs enough in-flight work that losing a replica
+        # matters; the single-host smoke clamp would starve it
+        return fleet_main(args)
     if args.smoke:
         args.requests = min(args.requests, 4)
         args.max_new = min(args.max_new, 4)

@@ -40,6 +40,14 @@ ids, so single-GPU images run unmodified on multi-GPU hosts.
                           ("cache-evicted-lru" in the SwapReport).
                           Absent/invalid values mean unbounded (the
                           append-only pre-lifecycle behaviour).
+  REPRO_TUNING_MAX_BYTES  positive integer: byte-denominated cap on the
+                          site tuning cache's serialized size (the
+                          ``entry_bytes`` accounting from the lifecycle
+                          layer).  Enforced alongside the entry-count
+                          cap by ``TuningCache.compact``/``save`` and the
+                          ``warm --compact`` GC: coldest entries are
+                          evicted first until the file fits the budget.
+                          Absent/invalid values mean unbounded.
   REPRO_TUNING_BUNDLE     path of a portable tuning bundle (see
                           repro.tuning.bundle): default for
                           deploy(tuning_bundle=) — auto-imported into the
@@ -72,6 +80,7 @@ __all__ = [
     "profile_default",
     "search_budget_default",
     "tuning_max_entries_default",
+    "tuning_max_bytes_default",
     "tuning_bundle_default",
     "ENV_VISIBLE",
     "ENV_PLATFORM",
@@ -80,6 +89,7 @@ __all__ = [
     "ENV_PROFILE",
     "ENV_SEARCH_BUDGET",
     "ENV_TUNING_MAX_ENTRIES",
+    "ENV_TUNING_MAX_BYTES",
     "ENV_TUNING_BUNDLE",
 ]
 
@@ -90,6 +100,7 @@ ENV_AUTOTUNE = "REPRO_AUTOTUNE"
 ENV_PROFILE = "REPRO_PROFILE"
 ENV_SEARCH_BUDGET = "REPRO_SEARCH_BUDGET"
 ENV_TUNING_MAX_ENTRIES = "REPRO_TUNING_MAX_ENTRIES"
+ENV_TUNING_MAX_BYTES = "REPRO_TUNING_MAX_BYTES"
 ENV_TUNING_BUNDLE = "REPRO_TUNING_BUNDLE"
 
 _INT_LIST_RE = re.compile(r"^\s*\d+\s*(,\s*\d+\s*)*$")
@@ -205,6 +216,25 @@ def tuning_max_entries_default(env: dict[str, str] | None = None) -> int | None:
     """
     env = os.environ if env is None else env
     text = str(env.get(ENV_TUNING_MAX_ENTRIES, "")).strip()
+    if not text:
+        return None
+    try:
+        value = int(text)
+    except ValueError:
+        return None
+    return value if value > 0 else None
+
+
+def tuning_max_bytes_default(env: dict[str, str] | None = None) -> int | None:
+    """REPRO_TUNING_MAX_BYTES as a positive int, else None (unbounded).
+
+    Zero is treated as invalid for the same reason as the entry cap: a
+    0-byte budget would evict every warmed entry, which no site can
+    want — a nonsensical value deactivates the feature instead of
+    erroring or degrading service.
+    """
+    env = os.environ if env is None else env
+    text = str(env.get(ENV_TUNING_MAX_BYTES, "")).strip()
     if not text:
         return None
     try:

@@ -41,6 +41,7 @@ from repro.core.env import (
     search_budget_default,
     select_devices,
     tuning_bundle_default,
+    tuning_max_bytes_default,
     tuning_max_entries_default,
 )
 from repro.core.platform import Platform
@@ -56,7 +57,8 @@ _HOST_ENV_ALLOWLIST = (ENV_VISIBLE, "REPRO_PLATFORM", "REPRO_CHECKPOINT_DIR",
                        "REPRO_COMPILE_CACHE", "REPRO_AUTOTUNE",
                        "REPRO_TUNING_CACHE", "REPRO_PROFILE",
                        "REPRO_WORKLOAD_PROFILE", "REPRO_SEARCH_BUDGET",
-                       "REPRO_TUNING_MAX_ENTRIES", "REPRO_TUNING_BUNDLE")
+                       "REPRO_TUNING_MAX_ENTRIES", "REPRO_TUNING_MAX_BYTES",
+                       "REPRO_TUNING_BUNDLE")
 
 
 class DeploymentError(RuntimeError):
@@ -327,8 +329,13 @@ class Runtime:
                              key=lambda o: (-totals[o], o))
                 ops = hot + [op for op in ops if op not in set(hot)]
                 priority = {op: i + 1 for i, op in enumerate(hot)}
+            site_cache = TuningCache.load(cache_path)
+            # byte-denominated bound on the cache FILE (distinct from the
+            # per-op table cap below): enforced when the flush saves, so
+            # one deploy cannot grow the site file past the site's budget
+            site_cache.max_bytes = tuning_max_bytes_default(self.host_env)
             tuning_ctx = TuningContext(
-                TuningCache.load(cache_path), platform,
+                site_cache, platform,
                 ops=autotune_ops if autotune_ops is None else set(autotune_ops),
                 profile=tune_profile,
                 current_abis=current_abis,

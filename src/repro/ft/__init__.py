@@ -1,9 +1,9 @@
-from repro.ft.elastic import RescalePlan, rescale_plan
+from repro.ft.elastic import PoolPlan, RescalePlan, pool_rescale_plan, rescale_plan
 from repro.ft.straggler import MitigationPlan, StragglerConfig, StragglerDetector
 from repro.ft.supervisor import Decision, DecisionKind, Supervisor, SupervisorConfig
 
 __all__ = [
-    "RescalePlan", "rescale_plan",
+    "RescalePlan", "rescale_plan", "PoolPlan", "pool_rescale_plan",
     "MitigationPlan", "StragglerConfig", "StragglerDetector",
     "Decision", "DecisionKind", "Supervisor", "SupervisorConfig",
 ]

@@ -26,7 +26,7 @@ from jax.sharding import NamedSharding
 from repro.distributed.sharding import ShardingRules, param_specs
 from repro.models.schema import leaf_items
 
-__all__ = ["RescalePlan", "rescale_plan"]
+__all__ = ["RescalePlan", "rescale_plan", "PoolPlan", "pool_rescale_plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,3 +74,56 @@ def rescale_plan(
     if model > 1:
         return RescalePlan((data, model), ("data", "model"))
     return RescalePlan((data,), ("data",))
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolPlan:
+    """Replica-pool sizing decision (the serving-fleet analogue of
+    RescalePlan: world size in replicas, not devices)."""
+
+    current: int
+    target: int
+    reason: str
+
+    @property
+    def delta(self) -> int:
+        return self.target - self.current
+
+    def describe(self) -> str:
+        arrow = "->" if self.delta else "=="
+        return (f"rescale: decode pool {self.current} {arrow} {self.target} "
+                f"({self.reason})")
+
+
+def pool_rescale_plan(
+    current: int,
+    *,
+    demand: int,
+    slots_per_replica: int,
+    min_replicas: int = 1,
+    max_replicas: int = 8,
+) -> PoolPlan:
+    """Size a decode pool to its queue pressure.
+
+    ``demand`` counts decode work items in flight or waiting (the fleet's
+    not-yet-done requests); the target is the smallest pool whose slots
+    cover that demand, clamped to [min_replicas, max_replicas].  Growing
+    is the elastic half of the paper's thesis at fleet scale — a new
+    replica warm-starts from a tuning bundle, so the plan's cost is
+    provisioning, never a cold search.  The caller applies hysteresis on
+    shrink (a momentary dip must not thrash the pool).
+    """
+    if slots_per_replica < 1:
+        raise ValueError(f"slots_per_replica must be >= 1, got {slots_per_replica}")
+    if min_replicas < 0 or max_replicas < min_replicas:
+        raise ValueError(f"bad clamp [{min_replicas}, {max_replicas}]")
+    need = -(-demand // slots_per_replica) if demand > 0 else 0
+    target = max(min_replicas, min(max_replicas, need))
+    if target > current:
+        reason = (f"demand {demand} items needs {need} x "
+                  f"{slots_per_replica}-slot replicas")
+    elif target < current:
+        reason = f"demand {demand} items fits {target}"
+    else:
+        reason = f"steady at demand {demand}"
+    return PoolPlan(current=current, target=target, reason=reason)

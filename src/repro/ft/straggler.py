@@ -48,13 +48,19 @@ class StragglerDetector:
         self._flags: dict[int, int] = defaultdict(int)
 
     def observe(self, durations: dict[int, float]) -> MitigationPlan:
-        """Feed one step's per-host durations; get the mitigation plan."""
+        """Feed one step's per-host durations; get the mitigation plan.
+
+        Hosts beyond the constructed ``num_hosts`` are tracked as soon as
+        they appear in ``durations`` — an elastic pool (repro.serving)
+        grows past its initial size, and a late-joining replica must be
+        judged against the same fleet median as everyone else.
+        """
         for h, d in durations.items():
             prev = self._ema.get(h, d)
             self._ema[h] = self.cfg.ema * d + (1 - self.cfg.ema) * prev
         med = float(np.median(list(self._ema.values())))
         skip, evict = set(), set()
-        for h in range(self.num_hosts):
+        for h in sorted(set(range(self.num_hosts)) | set(self._ema)):
             ema = self._ema.get(h)
             if ema is not None and med > 0 and ema > self.cfg.threshold * med:
                 self._flags[h] += 1
@@ -65,3 +71,10 @@ class StragglerDetector:
             elif self._flags[h] >= self.cfg.patience:
                 skip.add(h)
         return MitigationPlan(frozenset(skip), frozenset(evict))
+
+    def forget(self, host: int) -> None:
+        """Drop a departed host's EMA/flags so a dead replica's stale
+        duration cannot keep skewing the fleet median (and a later
+        replica reusing the id starts with a clean record)."""
+        self._ema.pop(host, None)
+        self._flags.pop(host, None)

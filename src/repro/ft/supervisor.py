@@ -60,6 +60,24 @@ class Supervisor:
         if host not in self._dead:
             self._last_beat[host] = now
 
+    def register(self, host: int, now: float) -> None:
+        """Start tracking a host that joined after construction (elastic
+        scale-out: the serving fleet provisions replicas at runtime).
+        Registering an evicted/dead id revives it — the caller is
+        declaring a fresh process behind the same id."""
+        if host not in self._last_beat:
+            self.num_hosts += 1
+        self._last_beat[host] = now
+        self._dead.discard(host)
+        self.events.append(f"t={now:.1f} register host {host}")
+
+    def dead_hosts(self) -> frozenset[int]:
+        """Hosts currently declared dead or evicted.  The serving fleet
+        diffs consecutive polls against this to find newly-lost replicas
+        (Decision speaks training-world restart/downscale language; a
+        replica pool only needs the membership delta)."""
+        return frozenset(self._dead)
+
     def checkpoint_published(self, step: int) -> None:
         self.last_checkpoint_step = step
 

@@ -63,17 +63,28 @@ from repro.launch.steps import DeployOptions, make_deployment
 from repro.launch.train import make_bundle
 
 __all__ = ["BlockAllocator", "PagedPool", "Request", "Scheduler", "JaxEngine",
-           "Server", "main"]
+           "Server", "SERVING_STATS_SCHEMA", "main"]
 
-# scheduler states (docs/serving.md state machine)
+# scheduler states (docs/serving.md + docs/fleet.md state machines)
 QUEUED = "queued"
 PREFILLING = "prefilling"
 DECODING = "decoding"
+HANDOFF = "handoff"     # fleet mode: prefill finished, state in transit
 DONE = "done"
 
 # admission rejection reasons
 REJECT_QUEUE_FULL = "queue-full"
 REJECT_TOO_LONG = "too-long"
+
+# Scheduler.consolidated_stats() keys — pinned, like the dispatch layer's
+# STATS_SCHEMA: printers iterate this, so adding a counter here forces it
+# into every consumer (and the schema test) at once.
+SERVING_STATS_SCHEMA = frozenset({
+    "submitted", "completed", "rejected-queue-full", "rejected-too-long",
+    "handed-off", "adopted", "peak-active", "ticks",
+    "pages-capacity", "pages-allocated-mean", "pages-written-mean",
+    "pages-allocated-peak", "fragmentation-pct",
+})
 
 
 @dataclasses.dataclass
@@ -351,6 +362,40 @@ class JaxEngine:
         self.decode_calls += 1
         return np.asarray(logits)
 
+    # -- KV handoff (the fleet's slot migration) --------------------------
+    def export_slot(self, slot: int, n_tokens: int) -> tuple[dict, int]:
+        """One slot's cache state out of the paged pools, for a KV handoff.
+
+        ``n_tokens`` is the number of positions written so far (prompt
+        length right after prefill; prompt + decoded on a mid-decode
+        migration).  Returns ``(arrays, pages_used)``: the slot's written
+        pages in block-table order plus its SSM rows, as host numpy —
+        what `repro.tuning.bundle.KVHandoff` serializes.  Paged mode
+        only: the contiguous layout has no per-slot page identity to
+        ship.
+        """
+        if not self.paged:
+            raise ValueError("slot export requires the paged cache")
+        if n_tokens < 1:
+            raise ValueError(f"export of {n_tokens} tokens")
+        pages_used = -(-n_tokens // self.pool.page_size)
+        pages = self.pool.block_tables[slot][:pages_used]
+        return self.model.export_paged_slot(self.cache, pages, slot), pages_used
+
+    def import_slot(self, slot: int, arrays: dict, pages_used: int) -> None:
+        """Scatter a KV handoff into this engine's own pages.
+
+        The receiving scheduler already leased this slot's pages from
+        its own allocator (`Scheduler.adopt`); the handoff's page stack
+        lands in the first ``pages_used`` entries of the slot's block
+        table — page *numbering* never crosses replicas, only contents.
+        """
+        if not self.paged:
+            raise ValueError("slot import requires the paged cache")
+        pages = self.pool.block_tables[slot][:pages_used]
+        self.cache = self.model.import_paged_slot(self.cache, arrays,
+                                                  pages, slot)
+
 
 class Scheduler:
     """Continuous batching policy: pure python, deterministic, no jax.
@@ -387,25 +432,45 @@ class Scheduler:
     The clock is injected so tests can drive TTFT accounting with a
     deterministic fake; the engine is injected so policy tests need no
     compiled model at all.
+
+    **Fleet mode** (repro.serving) runs one Scheduler per replica as
+    that replica's *local* policy.  ``on_handoff`` turns a scheduler
+    into a prefill-pool policy: when a request's prompt is fully
+    ingested it emits the first token, then — instead of decoding —
+    calls the hook (with the slot still held, so the fleet can export
+    the pages), releases the slot/pages locally, and marks the request
+    HANDOFF.  `adopt` is the decode-pool counterpart: place a
+    handed-off request straight into a free slot with pages leased from
+    THIS engine's allocator, no queue and no prefill.
     """
 
     def __init__(self, engine, *, queue_depth: int = 64,
                  max_new_cap: int = 1 << 30, interleave: int = 2,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 on_handoff: Callable[[Request], None] | None = None):
+        if on_handoff is not None and engine.prefill_mode != "chunked":
+            raise ValueError("handoff (prefill-pool role) requires chunked "
+                             "prefill: the final chunk's logits are the "
+                             "first token the handoff carries")
         self.engine = engine
         self.paged = bool(getattr(engine, "paged", False))
         self.queue_depth = queue_depth
         self.max_new_cap = max_new_cap
         self.interleave = max(1, interleave)
         self.clock = clock
+        self.on_handoff = on_handoff
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * engine.slots
         self.rejected: dict[str, int] = {}
         self.submitted = 0
         self.completed = 0
+        self.handed_off = 0
+        self.adopted = 0
         self.peak_active = 0
+        self.ticks = 0
         # (pages allocated, pages holding written tokens) per tick — the
-        # fragmentation series the table7 --paged scoreboard reports
+        # fragmentation series the table7 --paged scoreboard reports and
+        # consolidated_stats() aggregates
         self.page_samples: list[tuple[int, int]] = []
 
     # -- admission --------------------------------------------------------
@@ -422,30 +487,65 @@ class Scheduler:
         return -(-self._budget(prompt_len, max_new)
                  // self.engine.pool.page_size)
 
+    def servable(self, prompt_len: int, max_new: int) -> bool:
+        """Can this request EVER be served by this engine's geometry?
+        (The admission budget check, independent of momentary load —
+        the fleet router uses it against a template replica.)"""
+        if prompt_len < 1:
+            return False
+        if self.paged:
+            pool = self.engine.pool
+            return (self._pages_needed(prompt_len, max_new)
+                    <= min(pool.max_blocks, pool.allocator.capacity))
+        return self._budget(prompt_len, max_new) <= self.engine.max_len
+
     def submit(self, req: Request) -> bool:
         """Admission-checked enqueue; returns False (and records why)
         when the request is rejected."""
         self.submitted += 1
         req.max_new = min(req.max_new, self.max_new_cap)
-        if self.paged:
-            pool = self.engine.pool
-            unfit = (req.prompt_len < 1
-                     or self._pages_needed(req.prompt_len, req.max_new)
-                     > min(pool.max_blocks, pool.allocator.capacity))
-        else:
-            unfit = (req.prompt_len < 1
-                     or self._budget(req.prompt_len, req.max_new)
-                     > self.engine.max_len)
-        if unfit:
+        if not self.servable(req.prompt_len, req.max_new):
             self.rejected[REJECT_TOO_LONG] = self.rejected.get(REJECT_TOO_LONG, 0) + 1
             return False
         if len(self.queue) >= self.queue_depth:
             self.rejected[REJECT_QUEUE_FULL] = self.rejected.get(REJECT_QUEUE_FULL, 0) + 1
             return False
-        req.order = self.submitted
+        if req.order < 0:
+            # the fleet pre-assigns globally-unique FCFS orders (one
+            # allocator may host slots from many submit counters); a
+            # standalone scheduler numbers its own
+            req.order = self.submitted
         req.submit_t = self.clock()
         req.state = QUEUED
         self.queue.append(req)
+        return True
+
+    def adopt(self, req: Request) -> bool:
+        """Decode-pool side of a KV handoff: place a handed-off request
+        straight into a free slot, leasing its remaining-budget pages
+        from THIS engine's allocator (the handoff contents are scattered
+        by the caller via ``engine.import_slot`` once this returns True).
+        Returns False when no slot or no pages are available right now —
+        the fleet keeps the artifact pending and retries, exactly like
+        paged admission queues on pool exhaustion."""
+        slot = next((s for s in range(self.engine.slots)
+                     if self.active[s] is None), None)
+        if slot is None:
+            return False
+        if self.paged:
+            pages = self.engine.pool.alloc(
+                req.order, self._pages_needed(req.prompt_len, req.max_new)
+            )
+            if pages is None:
+                return False
+            self.engine.pool.assign(slot, pages)
+        req.slot = slot
+        req.state = DECODING
+        self.active[slot] = req
+        self.adopted += 1
+        self.peak_active = max(
+            self.peak_active, sum(r is not None for r in self.active)
+        )
         return True
 
     def _admit(self) -> None:
@@ -491,10 +591,25 @@ class Scheduler:
         req.slot = None
         self.completed += 1
 
+    def _handoff(self, req: Request) -> None:
+        """Prefill-pool exit: hand the finished slot to the fleet (the
+        hook exports the pages while the slot is still held), then
+        release the local slot/pages — the artifact now carries the
+        state, so this replica owes the request nothing further."""
+        req.state = HANDOFF
+        self.on_handoff(req)
+        if self.paged:
+            self.engine.pool.free(req.order)
+            self.engine.pool.release(req.slot)
+        self.active[req.slot] = None
+        req.slot = None
+        self.handed_off += 1
+
     # -- the quantum ------------------------------------------------------
     def tick(self) -> list[tuple[int, int]]:
         """Admit, prefill up to `interleave` units, one decode tick.
         Returns the (rid, token) pairs emitted this quantum."""
+        self.ticks += 1
         self._admit()
         self.peak_active = max(
             self.peak_active, sum(r is not None for r in self.active)
@@ -520,6 +635,9 @@ class Scheduler:
                     # chunked path: the final chunk's logits ARE the first
                     # token — no decode tick spent re-feeding the prompt
                     self._emit(req, int(np.argmax(logits)), out)
+                if self.on_handoff is not None and not req.done:
+                    # prefill-pool role: decode happens on another replica
+                    self._handoff(req)
 
         decoding = [r for r in self.active if r is not None and r.state == DECODING]
         if decoding:
@@ -550,6 +668,42 @@ class Scheduler:
     @property
     def idle(self) -> bool:
         return not self.queue and all(r is None for r in self.active)
+
+    def consolidated_stats(self) -> dict[str, float]:
+        """The schema-pinned serving counters, pool occupancy included.
+
+        Every key in SERVING_STATS_SCHEMA is always present (0 on the
+        contiguous path), mirroring the dispatch layer's consolidated
+        stats: printers iterate the schema, so a new counter cannot be
+        silently dropped from any output, and the per-tick
+        ``page_samples`` series — previously reachable only from the
+        benchmark — aggregates here for every consumer.
+        """
+        samples = self.page_samples
+        alloc_mean = (sum(a for a, _ in samples) / len(samples)
+                      if samples else 0.0)
+        written_mean = (sum(w for _, w in samples) / len(samples)
+                        if samples else 0.0)
+        stats: dict[str, float] = {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected-queue-full": self.rejected.get(REJECT_QUEUE_FULL, 0),
+            "rejected-too-long": self.rejected.get(REJECT_TOO_LONG, 0),
+            "handed-off": self.handed_off,
+            "adopted": self.adopted,
+            "peak-active": self.peak_active,
+            "ticks": self.ticks,
+            "pages-capacity": (self.engine.pool.allocator.capacity
+                               if self.paged else 0),
+            "pages-allocated-mean": alloc_mean,
+            "pages-written-mean": written_mean,
+            "pages-allocated-peak": (max((a for a, _ in samples), default=0)
+                                     if self.paged else 0),
+            "fragmentation-pct": (100.0 * (1.0 - written_mean / alloc_mean)
+                                  if alloc_mean else 0.0),
+        }
+        assert set(stats) == SERVING_STATS_SCHEMA
+        return stats
 
 
 class Server:
@@ -680,15 +834,14 @@ def main(argv=None) -> int:
             f"{k}={v}" for k, v in sorted(server.scheduler.rejected.items())))
     if args.paged:
         pool = server.engine.pool
-        samples = server.scheduler.page_samples or [(0, 0)]
-        alloc_mean = sum(a for a, _ in samples) / len(samples)
-        used_mean = sum(u for _, u in samples) / len(samples)
-        frag = 1.0 - used_mean / alloc_mean if alloc_mean else 0.0
+        stats = server.scheduler.consolidated_stats()
         print(f"paged pool: {pool.num_pages} pages x {pool.page_size} tokens "
-              f"(park+{pool.allocator.capacity}) | "
-              f"peak_active={server.scheduler.peak_active} | "
-              f"pages allocated/used mean {alloc_mean:.1f}/{used_mean:.1f} "
-              f"(fragmentation {frag:.0%})")
+              f"(park+{int(stats['pages-capacity'])}) | "
+              f"peak_active={int(stats['peak-active'])} | "
+              f"pages allocated/used mean "
+              f"{stats['pages-allocated-mean']:.1f}"
+              f"/{stats['pages-written-mean']:.1f} "
+              f"(fragmentation {stats['fragmentation-pct']:.0f}%)")
     if container.workload is not None:
         print(f"captured {len(container.workload)} op geometries -> "
               f"{container.workload.path} (warm with: python -m repro.tuning.warm)")

@@ -20,7 +20,7 @@ embeddings through a bidirectional encoder (whisper enc-dec).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
@@ -242,6 +242,64 @@ class Model:
             lambda s: jnp.zeros(s.shape, s.dtype),
             self.abstract_paged_cache(num_pages, page_size, slots),
         )
+
+    def export_paged_slot(self, cache: Tree, pages, slot: int) -> dict:
+        """One slot's state out of a paged cache, as host numpy arrays.
+
+        ``pages`` is the slot's leased page ids in block-table order
+        (only the written prefix — the KV-handoff sender passes
+        ``block_tables[slot][:pages_used]``).  Attention k/v pools yield
+        ``(nb, len(pages), page_size, KV, Dh)`` page stacks; SSM leaves
+        yield the slot's row.  Keys are ``"p{j}/{leaf}"`` — the flat
+        naming the `KVHandoff` artifact serializes.
+        """
+        import numpy as np
+
+        pages = np.asarray(pages, dtype=np.int32)
+        out: dict = {}
+        for pj, entry in cache.items():
+            for name, buf in entry.items():
+                arr = np.asarray(buf)
+                out[f"{pj}/{name}"] = (arr[:, pages] if name in ("k", "v")
+                                       else arr[:, slot])
+        return out
+
+    def import_paged_slot(self, cache: Tree, arrays: Mapping[str, Any],
+                          pages, slot: int) -> Tree:
+        """Scatter an exported slot into this cache's own pages.
+
+        The receiver leased ``pages`` (same count, any ids) from its own
+        allocator; page numbering does not survive the trip.  Returns the
+        updated cache tree; shapes are validated leaf-by-leaf so a
+        mismatched artifact fails before any buffer is written.
+        """
+        import numpy as np
+
+        pages_ix = jnp.asarray(np.asarray(pages, dtype=np.int32))
+        new: Tree = {}
+        for pj, entry in cache.items():
+            upd_entry: Tree = {}
+            for name, buf in entry.items():
+                key = f"{pj}/{name}"
+                if key not in arrays:
+                    raise ValueError(f"paged-slot import: missing leaf {key}")
+                src = jnp.asarray(arrays[key], dtype=buf.dtype)
+                if name in ("k", "v"):
+                    want = (buf.shape[0], len(pages)) + buf.shape[2:]
+                    if src.shape != want:
+                        raise ValueError(
+                            f"paged-slot import: {key} is {src.shape}, "
+                            f"target pages need {want}")
+                    upd_entry[name] = buf.at[:, pages_ix].set(src)
+                else:
+                    want = (buf.shape[0],) + buf.shape[2:]
+                    if src.shape != want:
+                        raise ValueError(
+                            f"paged-slot import: {key} is {src.shape}, "
+                            f"slot row needs {want}")
+                    upd_entry[name] = buf.at[:, slot].set(src)
+            new[pj] = upd_entry
+        return new
 
     # ------------------------------------------------------------------ #
     # layer application

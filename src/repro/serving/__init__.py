@@ -1,0 +1,27 @@
+"""Disaggregated prefill/decode serving fleet (docs/fleet.md).
+
+`FleetScheduler` routes requests across prefill and decode replica
+pools, migrating finished prefill slots as checksummed KV handoff
+artifacts; `ElasticController` supervises liveness, stragglers, and
+decode-pool rescaling with bundle warm-started replicas; `Replica` /
+`FakeReplica` wrap one engine + local scheduler (the fake is the
+fault-injection harness).
+"""
+
+from repro.serving.elastic import ElasticController
+from repro.serving.fleet import FleetScheduler
+from repro.serving.replica import (
+    ACTIVE,
+    DEAD,
+    DRAINED,
+    JOINING,
+    FakeFleetEngine,
+    FakeReplica,
+    Replica,
+)
+
+__all__ = [
+    "FleetScheduler", "ElasticController",
+    "Replica", "FakeReplica", "FakeFleetEngine",
+    "JOINING", "ACTIVE", "DRAINED", "DEAD",
+]

@@ -1,0 +1,160 @@
+"""ElasticController: the fleet's control plane, built from ft/.
+
+One `step()` per fleet tick, entirely clock-injected:
+
+  1. **Liveness** — every alive replica heartbeats into the
+     `ft.Supervisor`; a killed replica goes silent, misses its
+     heartbeat window, and shows up in `dead_hosts()`.  Newly-dead
+     replicas trigger `FleetScheduler.on_replica_dead` (crash
+     recovery by re-prefill).
+  2. **Stragglers** — per-tick decode latencies feed the
+     `ft.StragglerDetector`; a replica flagged `evict_after`
+     consecutive ticks is *gracefully drained* (its slots leave as KV
+     handoffs — unlike a crash, nothing is recomputed) and evicted
+     from the pool.
+  3. **Rescale** — `ft.pool_rescale_plan` sizes the decode pool
+     against open demand.  Growth is immediate (a storm must not wait);
+     shrink needs `shrink_patience` consecutive under-demand plans so a
+     momentary dip cannot thrash the pool.  Every provisioned replica
+     comes from the fleet's factory, which warm-starts it from a
+     tuning bundle — the controller logs the replica's bind stats
+     ("warm-start decode-N: bundle-imported=K ...") so the paper's
+     claim (portable site artifacts make elastic capacity cheap, §III)
+     is visible in the event stream the CI smoke greps.
+
+A controller with ``rescale=False`` is the *static* fleet baseline the
+--fleet benchmark compares against: deaths are still detected and
+recovered, but lost capacity is never replaced.
+"""
+
+from __future__ import annotations
+
+from repro.ft import (
+    StragglerDetector,
+    Supervisor,
+    pool_rescale_plan,
+)
+from repro.serving.replica import ACTIVE, JOINING, Replica
+
+__all__ = ["ElasticController"]
+
+
+class ElasticController:
+    def __init__(self, supervisor: Supervisor, *,
+                 detector: StragglerDetector | None = None,
+                 min_decode: int = 1, max_decode: int = 8,
+                 rescale: bool = True, shrink_patience: int = 3,
+                 provision_delay: float = 0.0):
+        if min_decode < 1:
+            raise ValueError("min_decode must be >= 1 (a fleet with no "
+                             "decode pool cannot drain)")
+        self.supervisor = supervisor
+        self.detector = detector
+        self.min_decode = min_decode
+        self.max_decode = max_decode
+        self.rescale = rescale
+        self.shrink_patience = shrink_patience
+        self.provision_delay = provision_delay
+        self.provisioned = 0
+        self.drained = 0
+        self._known_dead: set[int] = set()
+        self._shrink_votes = 0
+        self._slots_per_replica = 1
+
+    def attach(self, fleet) -> None:
+        """Adopt a fleet's existing replicas into supervision (called by
+        FleetScheduler when constructed with this controller)."""
+        now = fleet.clock()
+        for rep in fleet.replicas():
+            self.supervisor.register(rep.id, now)
+        if fleet.decode_pool:
+            self._slots_per_replica = fleet.decode_pool[0].engine.slots
+
+    # -- the control step --------------------------------------------------
+    def step(self, fleet, now: float) -> None:
+        self._liveness(fleet, now)
+        self._stragglers(fleet, now)
+        if self.rescale:
+            self._rescale(fleet, now)
+
+    def _liveness(self, fleet, now: float) -> None:
+        for rep in fleet.replicas():
+            if rep.alive:
+                self.supervisor.heartbeat(rep.id, now)
+        self.supervisor.poll(now)
+        newly = set(self.supervisor.dead_hosts()) - self._known_dead
+        if not newly:
+            return
+        self._known_dead |= newly
+        for rep in [r for r in fleet.replicas() if r.id in newly]:
+            fleet.on_replica_dead(rep, now)
+            if self.detector is not None:
+                self.detector.forget(rep.id)
+
+    def _stragglers(self, fleet, now: float) -> None:
+        if self.detector is None:
+            return
+        durations = {rep.id: rep.last_tick_s for rep in fleet.decode_pool
+                     if rep.alive and rep.state == ACTIVE and rep.ticks > 0}
+        if not durations:
+            return
+        plan = self.detector.observe(durations)
+        for host in sorted(plan.evict_hosts):
+            rep = next((r for r in fleet.decode_pool if r.id == host), None)
+            if rep is None:
+                continue
+            fleet.drain_replica(rep, now, reason="straggler")
+            self.supervisor.evict(host, now, reason="straggler")
+            self._known_dead.add(host)
+            self.detector.forget(host)
+            self.drained += 1
+
+    def _rescale(self, fleet, now: float) -> None:
+        current = sum(1 for r in fleet.decode_pool
+                      if r.alive and r.state in (ACTIVE, JOINING))
+        plan = pool_rescale_plan(
+            current, demand=fleet.decode_demand(),
+            slots_per_replica=self._slots_per_replica,
+            min_replicas=self.min_decode, max_replicas=self.max_decode,
+        )
+        if plan.delta > 0:
+            self._shrink_votes = 0
+            fleet.events.append(f"t={now:.1f} {plan.describe()}")
+            for _ in range(plan.delta):
+                self.provision(fleet, now)
+        elif plan.delta < 0:
+            self._shrink_votes += 1
+            if self._shrink_votes >= self.shrink_patience:
+                self._shrink_votes = 0
+                fleet.events.append(f"t={now:.1f} {plan.describe()}")
+                self._shrink_one(fleet, now)
+        else:
+            self._shrink_votes = 0
+
+    # -- pool mutations ----------------------------------------------------
+    def provision(self, fleet, now: float) -> Replica:
+        """Grow the decode pool by one warm-started replica."""
+        rep = fleet.add_replica("decode", join_at=now + self.provision_delay)
+        self.supervisor.register(rep.id, now)
+        self.provisioned += 1
+        fleet.events.append(
+            f"t={now:.1f} provision {rep.name} "
+            f"(active at t={rep.join_at:.1f})")
+        if rep.warm_start:
+            binds = ", ".join(f"{k}={v}"
+                              for k, v in sorted(rep.warm_start.items()))
+            fleet.events.append(f"t={now:.1f} warm-start {rep.name}: {binds}")
+        return rep
+
+    def _shrink_one(self, fleet, now: float) -> None:
+        candidates = [r for r in fleet.decode_pool
+                      if r.alive and r.state == ACTIVE]
+        if len(candidates) <= self.min_decode:
+            return
+        rep = min(candidates, key=lambda r: len(r.active_requests()))
+        fleet.drain_replica(rep, now, reason="scale-in")
+        self.supervisor.evict(rep.id, now, reason="scale-in")
+        self._known_dead.add(rep.id)
+        if self.detector is not None:
+            self.detector.forget(rep.id)
+        self.drained += 1

@@ -1,0 +1,254 @@
+"""Replica: one engine + its local scheduling policy, plus the
+fault-injection harness the fleet tests drive.
+
+A replica is the fleet's unit of capacity: a `JaxEngine` (or the fake
+below) wrapped with the `launch.serve.Scheduler` running as that
+replica's *local* policy, a lifecycle state, and the fault hooks
+(`kill`, latency injection) the `ElasticController` reacts to.
+
+Lifecycle (docs/fleet.md state machine):
+
+    joining -> active -> (drained | dead)
+
+  * ``joining`` — provisioned but not yet serving (the elastic
+    controller's provision delay); heartbeats, takes no work.
+  * ``active``  — ticking; prefill replicas hand finished slots to the
+    fleet, decode replicas adopt them.
+  * ``drained`` — gracefully retired (straggler eviction, scale-in):
+    its in-flight slots were exported as KV handoffs, it leaves the
+    pool with nothing owed.
+  * ``dead``    — killed/silent: its engine state is *lost*; the fleet
+    recovers in-flight requests by re-prefilling prompt + emitted
+    tokens (greedy decoding makes the continuation token-identical).
+
+The factory contract the fleet/controller provision through is
+``factory(role, host_id) -> Replica`` with ``role`` in
+``("prefill", "decode")``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.launch.serve import DECODING, PagedPool, Request, Scheduler
+
+__all__ = ["JOINING", "ACTIVE", "DRAINED", "DEAD",
+           "Replica", "FakeFleetEngine", "FakeReplica"]
+
+# replica lifecycle states
+JOINING = "joining"
+ACTIVE = "active"
+DRAINED = "drained"
+DEAD = "dead"
+
+
+class Replica:
+    """One serving replica: engine + local Scheduler + lifecycle state.
+
+    ``role`` picks which half of the disaggregated pipeline this replica
+    serves: a ``"prefill"`` replica ingests prompts and exits every
+    request through the fleet's handoff hook (installed by the fleet via
+    `set_handoff_hook`); a ``"decode"`` replica never sees the queue —
+    it only `Scheduler.adopt`s handed-off requests and ticks them to
+    completion.
+
+    ``last_tick_s`` is the per-tick duration the `StragglerDetector`
+    observes — measured wall time by default, overridable for
+    deterministic tests and fault injection (`set_latency`).
+    """
+
+    def __init__(self, host_id: int, role: str, engine, *,
+                 clock: Callable[[], float] = time.monotonic,
+                 interleave: int = 2, queue_depth: int | None = None,
+                 max_new_cap: int = 1 << 30):
+        if role not in ("prefill", "decode"):
+            raise ValueError(f"unknown replica role {role!r}")
+        self.id = host_id
+        self.role = role
+        self.name = f"{role}-{host_id}"
+        self.engine = engine
+        self.scheduler = Scheduler(
+            engine,
+            queue_depth=engine.slots if queue_depth is None else queue_depth,
+            max_new_cap=max_new_cap, interleave=interleave, clock=clock,
+        )
+        self.state = ACTIVE
+        self.alive = True
+        self.join_at = 0.0
+        self.last_tick_s = 0.0
+        self.latency_override: float | None = None
+        self.warm_start: dict | None = None   # bind stats the factory records
+        self.ticks = 0
+
+    # -- fleet wiring ------------------------------------------------------
+    def set_handoff_hook(self, hook: Callable[[Request], None]) -> None:
+        """Install the fleet's handoff exporter (prefill replicas only).
+        The hook runs with the finishing request's slot still held, so
+        it can export the pages before the scheduler releases them."""
+        if self.role != "prefill":
+            raise ValueError(f"{self.name}: only prefill replicas hand off")
+        if self.engine.prefill_mode != "chunked":
+            raise ValueError("handoff requires chunked prefill")
+        self.scheduler.on_handoff = hook
+
+    def free_slots(self) -> int:
+        return sum(r is None for r in self.scheduler.active)
+
+    def active_requests(self) -> list[Request]:
+        return [r for r in self.scheduler.active if r is not None]
+
+    # -- fault injection ---------------------------------------------------
+    def kill(self) -> None:
+        """Simulate process death: no more ticks, no more heartbeats,
+        engine state unrecoverable.  The supervisor notices via missed
+        heartbeats; the fleet recovers the in-flight requests."""
+        self.alive = False
+
+    def set_latency(self, seconds: float | None) -> None:
+        """Pin the per-tick duration the straggler detector sees (None
+        restores wall-time measurement)."""
+        self.latency_override = seconds
+
+    # -- serving -----------------------------------------------------------
+    def tick(self) -> list[tuple[int, int]]:
+        """One local scheduling quantum; returns emitted (rid, token)
+        pairs.  Dead or non-active replicas do nothing — a killed
+        process cannot make progress, and the fleet must not count on
+        it."""
+        if not self.alive or self.state != ACTIVE:
+            return []
+        t0 = time.perf_counter()
+        out = self.scheduler.tick()
+        measured = time.perf_counter() - t0
+        self.last_tick_s = (measured if self.latency_override is None
+                            else self.latency_override)
+        self.ticks += 1
+        return out
+
+
+class FakeFleetEngine:
+    """Deterministic paged fake engine for fleet tests — no jax.
+
+    The "model" is next-token = (previous + 1) % vocab, so any replica
+    continues any token stream identically — exactly the property real
+    greedy decoding has with shared params — and the expected chain for
+    prompt [.., t] is t+1, t+2, ... (mod vocab).
+
+    Unlike test_serving's shape-only fake, this one keeps a real paged
+    store: every fed token's value lands in its page via the slot's
+    block table, and SSM-style per-slot state (a running token sum plus
+    a last-token "conv" tap) rides along.  `export_slot`/`import_slot`
+    move those bytes exactly like the JaxEngine does for KV pools, so a
+    handoff that loses pages, scatters to the wrong page, or drops the
+    recurrent row is caught by decode-side integrity checks and by
+    direct pool inspection in tests.
+    """
+
+    def __init__(self, *, slots: int = 2, max_len: int = 32, chunk: int = 4,
+                 num_pages: int | None = None, vocab: int = 16):
+        self.slots = slots
+        self.max_len = max_len
+        self.chunk = chunk
+        self.vocab = vocab
+        self.prefill_mode = "chunked"
+        self.paged = True
+        self.pool = PagedPool(slots, max_len, chunk, num_pages)
+        # page store: token value per (page, offset); -1 == never written
+        self.kv = np.full((self.pool.num_pages, chunk), -1, np.int64)
+        # per-slot recurrent state: running sum + last token fed
+        self.state = np.zeros(slots, np.int64)
+        self.conv = np.full(slots, -1, np.int64)
+        self.prefill_calls = 0
+        self.decode_calls = 0
+
+    @property
+    def prefill_unit(self) -> int:
+        return self.chunk
+
+    def _logits(self, token: int) -> np.ndarray:
+        out = np.zeros(self.vocab, np.float32)
+        out[(int(token) + 1) % self.vocab] = 1.0
+        return out
+
+    def _write(self, slot: int, pos: int, token: int) -> None:
+        page = self.pool.block_tables[slot][pos // self.chunk]
+        self.kv[page, pos % self.chunk] = int(token)
+        self.state[slot] += int(token)
+        self.conv[slot] = int(token)
+
+    def prefill_step(self, slot: int, tokens: np.ndarray, pos: int):
+        for i, t in enumerate(tokens):
+            self._write(slot, pos + i, int(t))
+        self.prefill_calls += 1
+        return self._logits(int(tokens[-1]))
+
+    def decode_step(self, tokens: np.ndarray, pos: np.ndarray,
+                    active: np.ndarray) -> np.ndarray:
+        logits = np.zeros((self.slots, self.vocab), np.float32)
+        for s in range(self.slots):
+            if not active[s]:
+                continue
+            p = int(pos[s])
+            # integrity: every earlier position of this slot must hold a
+            # written token — a botched handoff (lost page, wrong slot
+            # row) surfaces here instead of as silent wrong tokens
+            for q in range(p):
+                page = self.pool.block_tables[s][q // self.chunk]
+                if self.kv[page, q % self.chunk] < 0:
+                    raise AssertionError(
+                        f"slot {s}: position {q} unwritten at decode "
+                        f"pos {p} — KV lost in handoff?")
+            self._write(s, p, int(tokens[s, 0]))
+            logits[s] = self._logits(int(tokens[s, 0]))
+        self.decode_calls += 1
+        return logits
+
+    # -- KV handoff (mirrors JaxEngine.export_slot/import_slot) -----------
+    def export_slot(self, slot: int, n_tokens: int) -> tuple[dict, int]:
+        if n_tokens < 1:
+            raise ValueError(f"export of {n_tokens} tokens")
+        pages_used = -(-n_tokens // self.chunk)
+        pages = self.pool.block_tables[slot][:pages_used]
+        arrays = {
+            "kv": self.kv[pages].copy(),
+            "state": self.state[slot:slot + 1].copy(),
+            "conv": self.conv[slot:slot + 1].copy(),
+        }
+        return arrays, pages_used
+
+    def import_slot(self, slot: int, arrays: dict, pages_used: int) -> None:
+        pages = self.pool.block_tables[slot][:pages_used]
+        kv = np.asarray(arrays["kv"])
+        if kv.shape != (pages_used, self.chunk):
+            raise ValueError(f"handoff kv is {kv.shape}, want "
+                             f"{(pages_used, self.chunk)}")
+        self.kv[pages] = kv
+        self.state[slot] = int(np.asarray(arrays["state"])[0])
+        self.conv[slot] = int(np.asarray(arrays["conv"])[0])
+
+
+class FakeReplica(Replica):
+    """Replica over a FakeFleetEngine — the fault-injection harness.
+
+    Everything the fleet does to a real replica works here (kill,
+    latency injection, handoff export/import, page accounting) with
+    deterministic tokens and no jax, so tests/test_fleet.py can drive
+    replica death mid-decode, straggler eviction, and pool exhaustion
+    with a fake clock and still assert token-identical drains.
+    """
+
+    def __init__(self, host_id: int, role: str, *, slots: int = 2,
+                 max_len: int = 32, chunk: int = 4,
+                 num_pages: int | None = None, vocab: int = 16,
+                 clock: Callable[[], float] = time.monotonic,
+                 interleave: int = 2):
+        engine = FakeFleetEngine(slots=slots, max_len=max_len, chunk=chunk,
+                                 num_pages=num_pages, vocab=vocab)
+        super().__init__(host_id, role, engine, clock=clock,
+                         interleave=interleave)
+
+    def decoding_requests(self) -> list[Request]:
+        return [r for r in self.active_requests() if r.state == DECODING]

@@ -91,6 +91,8 @@ __all__ = [
     "export_bundle",
     "import_bundle",
     "verify_bundle",
+    "KVHandoff",
+    "KV_HANDOFF_SCHEMA_VERSION",
     "main",
 ]
 
@@ -685,6 +687,152 @@ def per_op_ok(reg: Any, op: str, platform: Any) -> bool:
         return reg.decl(op).tunable_native(platform) is not None
     except KeyError:
         return False
+
+
+# -------------------------------------------------------------- KV handoff --
+KV_HANDOFF_SCHEMA_VERSION = 1
+_HANDOFF_KIND = "repro-kv-handoff"
+_HANDOFF_STATE = "state.npz"
+
+
+@dataclasses.dataclass(frozen=True)
+class KVHandoff:
+    """One slot's KV/SSM state in flight between serving replicas.
+
+    The disaggregated fleet (repro.serving) migrates a finished prefill
+    slot to a decode replica as an *artifact*, not a pointer: the pages
+    the sender's ``PagedPool`` held for the slot (gathered in block-table
+    order) plus the slot's SSM rows, serialized through the same
+    checksummed-manifest path the tuning bundles use.  The receiver
+    leases fresh pages from its own ``BlockAllocator`` and scatters the
+    arrays in; nothing about the sender's page numbering survives the
+    trip, which is exactly what makes the handoff portable between
+    replicas with different pool occupancy.
+
+    ``arrays`` maps cache-tree leaves to numpy arrays: ``"p{j}/k"`` /
+    ``"p{j}/v"`` are ``(layers_in_part, pages_used, page_size, KV, Dh)``
+    page stacks, ``"p{j}/state"`` / ``"p{j}/conv"`` are the slot's SSM
+    rows.  ``next_pos`` counts tokens whose KV the pages hold (prompt
+    plus any decoded-so-far tokens on a mid-decode migration).
+    """
+
+    rid: int
+    source: str
+    next_pos: int
+    pages_used: int
+    page_size: int
+    arrays: Mapping[str, Any]
+
+    def to_bytes(self) -> bytes:
+        """Serialize as an in-memory tar.gz: manifest.json + state.npz.
+
+        Same trust conventions as export_bundle: the manifest carries a
+        sha256 per member plus per-array shape/dtype, so the receiver
+        verifies everything before leasing a single page.
+        """
+        import numpy as np
+
+        state = io.BytesIO()
+        np.savez(state, **{k: np.asarray(v) for k, v in self.arrays.items()})
+        state_blob = state.getvalue()
+        manifest = {
+            "schema": KV_HANDOFF_SCHEMA_VERSION,
+            "kind": _HANDOFF_KIND,
+            "rid": int(self.rid),
+            "source": str(self.source),
+            "next_pos": int(self.next_pos),
+            "pages_used": int(self.pages_used),
+            "page_size": int(self.page_size),
+            "arrays": {k: [list(np.asarray(v).shape),
+                           str(np.asarray(v).dtype)]
+                       for k, v in self.arrays.items()},
+            "checksums": {_HANDOFF_STATE: _sha256(state_blob)},
+        }
+        manifest_blob = json.dumps(manifest, indent=1, sort_keys=True).encode()
+        out = io.BytesIO()
+        with tarfile.open(fileobj=out, mode="w:gz") as tar:
+            for name, blob in ((_MANIFEST, manifest_blob),
+                               (_HANDOFF_STATE, state_blob)):
+                info = tarfile.TarInfo(name)
+                info.size = len(blob)
+                tar.addfile(info, io.BytesIO(blob))
+        return out.getvalue()
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "KVHandoff":
+        """Parse + fully verify a handoff artifact.
+
+        Every defect — truncation, checksum mismatch, unknown schema,
+        an array whose shape/dtype disagrees with the manifest — raises
+        BundleFormatError before the receiver touches its pool.
+        """
+        import numpy as np
+
+        members: dict[str, bytes] = {}
+        try:
+            with tarfile.open(fileobj=io.BytesIO(data), mode="r:gz") as tar:
+                for name in (_MANIFEST, _HANDOFF_STATE):
+                    try:
+                        fh = tar.extractfile(name)
+                    except KeyError:
+                        fh = None
+                    if fh is not None:
+                        members[name] = fh.read()
+        except (OSError, EOFError, tarfile.TarError) as e:
+            raise BundleFormatError(f"unreadable KV handoff: {e}") from e
+        if _MANIFEST not in members:
+            raise BundleFormatError(f"KV handoff has no {_MANIFEST}")
+        try:
+            manifest = json.loads(members[_MANIFEST])
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise BundleFormatError(f"KV handoff: malformed manifest: {e}") from e
+        if not isinstance(manifest, dict) \
+                or manifest.get("kind") != _HANDOFF_KIND:
+            raise BundleFormatError(f"not a {_HANDOFF_KIND} artifact")
+        if manifest.get("schema") != KV_HANDOFF_SCHEMA_VERSION:
+            raise BundleFormatError(
+                f"KV handoff schema {manifest.get('schema')!r} "
+                f"(this runtime understands {KV_HANDOFF_SCHEMA_VERSION})"
+            )
+        blob = members.get(_HANDOFF_STATE)
+        want = (manifest.get("checksums") or {}).get(_HANDOFF_STATE)
+        if blob is None or want is None or _sha256(blob) != want:
+            raise BundleFormatError(
+                "KV handoff: checksum mismatch on state.npz "
+                "(corrupt or tampered artifact)"
+            )
+        try:
+            with np.load(io.BytesIO(blob)) as npz:
+                arrays = {k: npz[k] for k in npz.files}
+        except Exception as e:
+            raise BundleFormatError(f"KV handoff: unreadable state.npz: {e}") from e
+        declared = manifest.get("arrays")
+        if not isinstance(declared, dict) or set(declared) != set(arrays):
+            raise BundleFormatError(
+                "KV handoff: state.npz members disagree with the manifest"
+            )
+        for name, (shape, dtype) in declared.items():
+            arr = arrays[name]
+            if list(arr.shape) != list(shape) or str(arr.dtype) != dtype:
+                raise BundleFormatError(
+                    f"KV handoff: array {name} is {arr.shape}/{arr.dtype}, "
+                    f"manifest declares {shape}/{dtype}"
+                )
+        try:
+            meta = {k: int(manifest[k]) for k in
+                    ("rid", "next_pos", "pages_used", "page_size")}
+        except (KeyError, TypeError, ValueError) as e:
+            raise BundleFormatError(f"KV handoff: malformed metadata: {e}") from e
+        if meta["page_size"] < 1 or meta["pages_used"] < 1 \
+                or meta["next_pos"] < 1 \
+                or meta["pages_used"] * meta["page_size"] < meta["next_pos"]:
+            raise BundleFormatError(
+                f"KV handoff: inconsistent geometry {meta!r} "
+                f"(pages cannot hold the declared positions)"
+            )
+        return cls(rid=meta["rid"], source=str(manifest.get("source", "?")),
+                   next_pos=meta["next_pos"], pages_used=meta["pages_used"],
+                   page_size=meta["page_size"], arrays=arrays)
 
 
 # --------------------------------------------------------------------- CLI --

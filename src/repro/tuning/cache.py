@@ -18,7 +18,9 @@ Properties:
   * bounded (optional) — ``max_entries`` turns the cache from append-only
     into a managed LRU: every `get` hit stamps the entry's ``last_used``
     (persisted in the JSON, so recency survives redeploys), and
-    :meth:`compact` evicts down to the cap, coldest first.  See
+    :meth:`compact` evicts down to the cap, coldest first.  ``max_bytes``
+    bounds the serialized size the same way (the ``entry_bytes``
+    accounting; ``REPRO_TUNING_MAX_BYTES`` is the env trigger).  See
     expiry.compact_lru for the profile-aware sweep and
     ``python -m repro.tuning.warm --compact`` for the offline GC.
 
@@ -163,7 +165,8 @@ class TuningCache:
 
     def __init__(self, path: str | os.PathLike,
                  entries: Mapping[str, dict] | None = None,
-                 max_entries: int | None = None) -> None:
+                 max_entries: int | None = None,
+                 max_bytes: int | None = None) -> None:
         self.path = Path(path)
         self._entries: dict[str, dict] = dict(entries or {})
         self._evicted: set[str] = set()   # tombstones: keep save() from
@@ -174,6 +177,7 @@ class TuningCache:
         # already evicted them from — so cross-process tombstones hold
         self._last_stamp = 0.0
         self.max_entries = max_entries
+        self.max_bytes = max_bytes
         self.dirty = False
 
     def _stamp(self) -> float:
@@ -346,19 +350,34 @@ class TuningCache:
         return existed
 
     def compact(self, max_entries: int | None = None, *,
+                max_bytes: int | None = None,
                 protect: Iterable[str] = (),
                 prefer: Iterable[str] = ()) -> list[str]:
-        """Evict (tombstoned) down to ``max_entries``; returns evicted keys.
+        """Evict (tombstoned) down to the caps; returns evicted keys.
 
-        Eviction order is the lifecycle policy's mechanics: keys in
-        ``prefer`` go first (the caller marks stale-profile buckets there
-        — see expiry.compact_lru), then coldest ``last_used``; keys in
-        ``protect`` are never evicted, even if that leaves the cache over
-        the cap.  A cap of None falls back to ``self.max_entries``; no cap
-        at all is a no-op (the append-only pre-lifecycle behaviour).
+        Two independent caps, both enforced by one sweep: ``max_entries``
+        bounds the entry count, ``max_bytes`` bounds the serialized size
+        (the ``entry_bytes`` accounting — what the file costs on disk, so
+        a site can budget the cache in storage terms rather than guessing
+        an entry count).  Eviction order is the lifecycle policy's
+        mechanics: keys in ``prefer`` go first (the caller marks
+        stale-profile buckets there — see expiry.compact_lru), then
+        coldest ``last_used``; keys in ``protect`` are never evicted,
+        even if that leaves the cache over a cap.  A cap of None falls
+        back to ``self.max_entries``/``self.max_bytes``; no caps at all
+        is a no-op (the append-only pre-lifecycle behaviour).
         """
         cap = self.max_entries if max_entries is None else max_entries
-        if cap is None or len(self._entries) <= cap:
+        byte_cap = self.max_bytes if max_bytes is None else max_bytes
+        sizes = {k: self.entry_bytes(k) for k in self._entries}
+        live_bytes = sum(sizes.values())
+
+        def over() -> bool:
+            if cap is not None and len(self._entries) > cap:
+                return True
+            return byte_cap is not None and live_bytes > byte_cap
+
+        if (cap is None and byte_cap is None) or not over():
             return []
         protect = frozenset(protect)
         prefer = frozenset(prefer)
@@ -369,9 +388,10 @@ class TuningCache:
         )
         evicted: list[str] = []
         for k in victims:
-            if len(self._entries) <= cap:
+            if not over():
                 break
             self.evict(k)
+            live_bytes -= sizes[k]
             evicted.append(k)
         return evicted
 
@@ -429,8 +449,8 @@ class TuningCache:
             # state: keep this process's entries wholesale (load() already
             # degrades corruption to empty, and a transient truncation
             # must not cascade into losing the whole warmed cache)
-            if self.max_entries is not None:
-                self.compact(self.max_entries)
+            if self.max_entries is not None or self.max_bytes is not None:
+                self.compact(self.max_entries, max_bytes=self.max_bytes)
             payload = {"schema": SCHEMA_VERSION, "entries": self._entries}
             fd, tmp = tempfile.mkstemp(dir=self.path.parent,
                                        prefix=self.path.name, suffix=".tmp")

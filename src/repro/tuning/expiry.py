@@ -110,19 +110,31 @@ class PressureReport:
 
     evicted: tuple[tuple[str, str], ...]   # (op name, encoded cache key)
     kept: int                              # live entries after the sweep
-    cap: int
+    cap: int | None                        # entry-count cap (None = none)
+    cap_bytes: int | None = None           # byte cap (None = none)
+    kept_bytes: int | None = None          # live bytes after the sweep
 
     def __len__(self) -> int:
         return len(self.evicted)
 
+    def _caps(self) -> str:
+        parts = []
+        if self.cap is not None:
+            parts.append(f"cap {self.cap}")
+        if self.cap_bytes is not None:
+            parts.append(f"cap {self.cap_bytes}B")
+        return ", ".join(parts) or "no cap"
+
     def describe(self) -> str:
+        size = (f", {self.kept_bytes}B"
+                if self.kept_bytes is not None else "")
         if not self.evicted:
             return (f"compact: cache within cap "
-                    f"({self.kept} entr{'y' if self.kept == 1 else 'ies'} "
-                    f"<= {self.cap})")
+                    f"({self.kept} entr{'y' if self.kept == 1 else 'ies'}"
+                    f"{size}; {self._caps()})")
         lines = [f"compact: evicted {len(self.evicted)} cold entr"
                  f"{'y' if len(self.evicted) == 1 else 'ies'} "
-                 f"({self.kept} kept, cap {self.cap})"]
+                 f"({self.kept} kept{size}, {self._caps()})"]
         for op, key in self.evicted:
             lines.append(f"  {op:<18} [{key}]")
         return "\n".join(lines)
@@ -133,10 +145,13 @@ def _key_op(encoded: str) -> str:
     return encoded.split("|", 1)[0].split("/", 1)[0]
 
 
-def compact_lru(cache: TuningCache, max_entries: int, *,
+def compact_lru(cache: TuningCache, max_entries: int | None, *,
+                max_bytes: int | None = None,
                 profile: Any = None,
                 protect: Mapping | frozenset | tuple = ()) -> PressureReport:
-    """Shrink `cache` to ``max_entries`` live entries, coldest first.
+    """Shrink `cache` to ``max_entries`` live entries (and/or
+    ``max_bytes`` serialized bytes — the ``entry_bytes`` accounting),
+    coldest first.
 
     The eviction policy prefers *stale-profile* buckets: when a
     `WorkloadProfile` is given, entries whose (op, shape bucket, dtype)
@@ -148,8 +163,12 @@ def compact_lru(cache: TuningCache, max_entries: int, *,
     This is the ``python -m repro.tuning.warm --compact`` GC and the
     library entry point for site cron jobs.
     """
-    if max_entries < 0:
+    if max_entries is not None and max_entries < 0:
         raise ValueError(f"max_entries must be >= 0, got {max_entries}")
+    if max_bytes is not None and max_bytes < 0:
+        raise ValueError(f"max_bytes must be >= 0, got {max_bytes}")
+    if max_entries is None and max_bytes is None:
+        raise ValueError("compact_lru needs max_entries and/or max_bytes")
     prefer: tuple[str, ...] = ()
     if profile is not None and len(profile):
         recorded = {(geo.op, geo.shapes, geo.dtype)
@@ -159,11 +178,12 @@ def compact_lru(cache: TuningCache, max_entries: int, *,
             if len(parts := encoded.split("|")) == 4
             and (_key_op(encoded), parts[2], parts[3]) not in recorded
         )
-    evicted = cache.compact(max_entries, protect=frozenset(protect),
-                            prefer=prefer)
+    evicted = cache.compact(max_entries, max_bytes=max_bytes,
+                            protect=frozenset(protect), prefer=prefer)
     report = PressureReport(
         evicted=tuple((_key_op(k), k) for k in evicted),
         kept=len(cache), cap=max_entries,
+        cap_bytes=max_bytes, kept_bytes=cache.total_bytes(),
     )
     if len(report):
         log.info(report.describe())

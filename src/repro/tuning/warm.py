@@ -308,18 +308,28 @@ def _selftest() -> int:   # pragma: no cover — runs as its own CI job
 
 
 def _compact(cache_path: Path, profile_path: Path,
-             max_entries: int | None, *, decay: float | None = None) -> int:
-    """The ``--compact`` GC: bound the cache file, preferring to shed
-    buckets the (optionally freshly decayed) profile no longer records."""
-    from repro.core.env import tuning_max_entries_default
+             max_entries: int | None, *, max_bytes: int | None = None,
+             decay: float | None = None) -> int:
+    """The ``--compact`` GC: bound the cache file (entry count and/or
+    serialized bytes), preferring to shed buckets the (optionally freshly
+    decayed) profile no longer records."""
+    from repro.core.env import (tuning_max_bytes_default,
+                                tuning_max_entries_default)
     from repro.tuning.expiry import compact_lru
 
     if max_entries is None:
         max_entries = tuning_max_entries_default()
-    if max_entries is None or max_entries < 1:
-        print("--compact needs a bound: pass --max-entries N or set "
-              "REPRO_TUNING_MAX_ENTRIES")
+    if max_bytes is None:
+        max_bytes = tuning_max_bytes_default()
+    if (max_entries is None or max_entries < 1) and \
+            (max_bytes is None or max_bytes < 1):
+        print("--compact needs a bound: pass --max-entries N / --max-bytes B "
+              "or set REPRO_TUNING_MAX_ENTRIES / REPRO_TUNING_MAX_BYTES")
         return 2
+    if max_entries is not None and max_entries < 1:
+        max_entries = None
+    if max_bytes is not None and max_bytes < 1:
+        max_bytes = None
     profile = WorkloadProfile.load(profile_path)
     if decay is not None and len(profile):
         before = len(profile)
@@ -332,14 +342,17 @@ def _compact(cache_path: Path, profile_path: Path,
         print(f"nothing to compact: cache {cache_path} is empty or missing")
         return 0
     bytes_before = cache.total_bytes()
-    report = compact_lru(cache, max_entries,
+    report = compact_lru(cache, max_entries, max_bytes=max_bytes,
                          profile=profile if len(profile) else None)
     bytes_after = cache.total_bytes()
     cache.save()
     print(report.describe())
+    caps = ", ".join(
+        s for s in (f"cap {max_entries}" if max_entries else "",
+                    f"cap {max_bytes}B" if max_bytes else "") if s)
     print(f"cache {cache_path}: {report.kept} entr"
           f"{'y' if report.kept == 1 else 'ies'} kept "
-          f"(cap {max_entries}, {len(report)} evicted, "
+          f"({caps}, {len(report)} evicted, "
           f"~{bytes_before}B -> ~{bytes_after}B)")
     return 0
 
@@ -367,6 +380,9 @@ def main(argv=None) -> int:
     ap.add_argument("--max-entries", type=int, default=None, metavar="N",
                     help="bound for --compact (default: "
                          "REPRO_TUNING_MAX_ENTRIES)")
+    ap.add_argument("--max-bytes", type=int, default=None, metavar="B",
+                    help="serialized-size bound for --compact, in bytes "
+                         "(default: REPRO_TUNING_MAX_BYTES)")
     ap.add_argument("--selftest", action="store_true",
                     help="run the capture->warm->redeploy loop on pod-sim")
     args = ap.parse_args(argv)
@@ -380,7 +396,7 @@ def main(argv=None) -> int:
 
     if args.compact:
         return _compact(cache_path, profile_path, args.max_entries,
-                        decay=args.decay)
+                        max_bytes=args.max_bytes, decay=args.decay)
 
     from repro.core.env import resolve_platform
     from repro.core.platform import PLATFORMS

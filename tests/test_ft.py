@@ -9,6 +9,7 @@ from repro.ft import (
     StragglerDetector,
     Supervisor,
     SupervisorConfig,
+    pool_rescale_plan,
     rescale_plan,
 )
 
@@ -38,6 +39,25 @@ def test_recovered_host_unflagged():
     det.observe({0: 1.0, 1: 9.0})
     plan = det.observe({0: 1.0, 1: 1.0})
     assert plan.clean
+
+
+def test_straggler_tracks_hosts_beyond_initial_size():
+    # an elastic pool grows past the constructed num_hosts: a late
+    # joiner is judged against the same fleet median as everyone else
+    det = StragglerDetector(2, StragglerConfig(threshold=2.0, patience=1, ema=1.0))
+    for _ in range(2):
+        plan = det.observe({0: 1.0, 1: 1.0, 7: 9.0})
+    assert 7 in plan.skip_hosts
+
+
+def test_straggler_forget_clears_record():
+    det = StragglerDetector(3, StragglerConfig(threshold=2.0, patience=1,
+                                               evict_after=2, ema=1.0))
+    det.observe({0: 1.0, 1: 1.0, 2: 9.0})
+    det.forget(2)
+    # a fresh process behind the same id starts with a clean flag count
+    plan = det.observe({0: 1.0, 1: 1.0, 2: 9.0})
+    assert 2 not in plan.evict_hosts
 
 
 # ------------------------------------------------------------ supervisor --
@@ -87,6 +107,56 @@ def test_supervisor_healthy_noop():
     sup.heartbeat(0, 0.0)
     sup.heartbeat(1, 0.0)
     assert sup.poll(1.0).kind is DecisionKind.NONE
+
+
+def test_supervisor_register_and_dead_hosts():
+    sup = Supervisor(0, SupervisorConfig(heartbeat_timeout=5.0))
+    sup.register(0, 0.0)
+    sup.register(1, 0.0)
+    assert sup.num_hosts == 2
+    sup.heartbeat(0, 10.0)                  # host 1 goes silent
+    sup.poll(10.0)
+    assert sup.dead_hosts() == frozenset({1})
+    # registering a fresh process behind the same id revives it
+    sup.register(1, 11.0)
+    assert sup.dead_hosts() == frozenset()
+    assert sup.num_hosts == 2
+
+
+def test_supervisor_evicted_host_stays_dead():
+    sup = Supervisor(2, SupervisorConfig(heartbeat_timeout=5.0))
+    sup.heartbeat(0, 0.0)
+    sup.heartbeat(1, 0.0)
+    sup.evict(1, 1.0, reason="straggler")
+    sup.heartbeat(1, 2.0)                   # dead hosts can't heartbeat back
+    sup.poll(3.0)
+    assert sup.dead_hosts() == frozenset({1})
+
+
+def test_pool_rescale_grow_shrink_steady():
+    grow = pool_rescale_plan(2, demand=10, slots_per_replica=2, max_replicas=8)
+    assert grow.target == 5 and grow.delta == 3
+    assert "rescale: decode pool 2 -> 5" in grow.describe()
+    shrink = pool_rescale_plan(5, demand=2, slots_per_replica=2)
+    assert shrink.target == 1 and shrink.delta == -4
+    steady = pool_rescale_plan(2, demand=4, slots_per_replica=2)
+    assert steady.delta == 0
+    assert "==" in steady.describe()
+
+
+def test_pool_rescale_clamps():
+    assert pool_rescale_plan(3, demand=100, slots_per_replica=1,
+                             max_replicas=4).target == 4
+    assert pool_rescale_plan(3, demand=0, slots_per_replica=2,
+                             min_replicas=2).target == 2
+
+
+def test_pool_rescale_validation():
+    with pytest.raises(ValueError):
+        pool_rescale_plan(1, demand=1, slots_per_replica=0)
+    with pytest.raises(ValueError):
+        pool_rescale_plan(1, demand=1, slots_per_replica=2,
+                          min_replicas=3, max_replicas=2)
 
 
 # --------------------------------------------------------------- elastic --

@@ -675,3 +675,99 @@ def test_tuning_max_entries_env_parsing():
     assert tuning_max_entries_default({"REPRO_TUNING_MAX_ENTRIES": "0"}) is None
     assert tuning_max_entries_default({"REPRO_TUNING_MAX_ENTRIES": "-3"}) is None
     assert tuning_max_entries_default({"REPRO_TUNING_MAX_ENTRIES": "junk"}) is None
+
+
+def test_tuning_max_bytes_env_parsing():
+    from repro.core.env import tuning_max_bytes_default
+
+    assert tuning_max_bytes_default({}) is None
+    assert tuning_max_bytes_default({"REPRO_TUNING_MAX_BYTES": "4096"}) == 4096
+    assert tuning_max_bytes_default({"REPRO_TUNING_MAX_BYTES": " 512 "}) == 512
+    assert tuning_max_bytes_default({"REPRO_TUNING_MAX_BYTES": "0"}) is None
+    assert tuning_max_bytes_default({"REPRO_TUNING_MAX_BYTES": "-1"}) is None
+    assert tuning_max_bytes_default({"REPRO_TUNING_MAX_BYTES": "1.5MB"}) is None
+
+
+# --------------------------------------------------------------- byte cap --
+
+
+def test_compact_byte_cap_evicts_coldest_until_under(tmp_path):
+    cache = TuningCache(tmp_path / "t.json")
+    keys = [_key(f"{2 ** i}x4") for i in range(4)]
+    for i, k in enumerate(keys):
+        cache.put(k, BlockConfig.make(block=i + 1))
+    cache.get(keys[0])                        # oldest entry becomes hottest
+    sizes = {k: cache.entry_bytes(k) for k in keys}
+    # cap to roughly two entries' worth: the two coldest (1, 2) must go
+    cap = cache.total_bytes() - sizes[keys[1]] - sizes[keys[2]]
+    evicted = cache.compact(max_bytes=cap)
+    assert set(evicted) == {keys[1].encode(), keys[2].encode()}
+    assert cache.total_bytes() <= cap
+    assert cache.compact(max_bytes=cap) == []  # already under
+
+
+def test_compact_entry_and_byte_caps_compose(tmp_path):
+    cache = TuningCache(tmp_path / "t.json")
+    keys = [_key(f"{2 ** i}x4") for i in range(4)]
+    for i, k in enumerate(keys):
+        cache.put(k, BlockConfig.make(block=i + 1))
+    # entry cap alone would keep 3; the byte cap bites harder
+    cap = cache.entry_bytes(keys[3]) + 1
+    cache.compact(3, max_bytes=cap)
+    assert len(cache) == 1
+    assert cache.get(keys[3], touch=False) is not None
+
+
+def test_save_enforces_byte_cap(tmp_path):
+    path = tmp_path / "t.json"
+    cache = TuningCache(path)
+    keys = [_key(f"{2 ** i}x4") for i in range(4)]
+    for i, k in enumerate(keys):
+        cache.put(k, BlockConfig.make(block=i + 1))
+    cache.max_bytes = cache.total_bytes() - cache.entry_bytes(keys[0])
+    cache.save()
+    final = TuningCache.load(path)
+    assert len(final) == 3
+    assert final.get(keys[0], touch=False) is None  # coldest shed at save
+
+
+def test_compact_lru_byte_cap_reports_sizes(tmp_path):
+    cache = TuningCache(tmp_path / "t.json")
+    keys = [_key(f"{2 ** i}x4") for i in range(3)]
+    for i, k in enumerate(keys):
+        cache.put(k, BlockConfig.make(block=i + 1))
+    cap = cache.total_bytes() - cache.entry_bytes(keys[0])
+    report = compact_lru(cache, None, max_bytes=cap)
+    assert len(report) == 1 and report.kept == 2
+    assert report.cap is None and report.cap_bytes == cap
+    assert report.kept_bytes == cache.total_bytes() <= cap
+    assert f"cap {cap}B" in report.describe()
+    with pytest.raises(ValueError):
+        compact_lru(cache, None, max_bytes=-1)
+
+
+def test_warm_compact_cli_max_bytes(tmp_path, capsys, monkeypatch):
+    from repro.tuning import warm
+
+    monkeypatch.delenv("REPRO_TUNING_MAX_ENTRIES", raising=False)
+    monkeypatch.delenv("REPRO_TUNING_MAX_BYTES", raising=False)
+    cache_path = tmp_path / "tuning.json"
+    cache = TuningCache(cache_path)
+    for rows in (4, 8, 16, 32):
+        cache.put(_key(f"{rows}x4"), BlockConfig.make(block=2))
+    cap = cache.total_bytes() - cache.entry_bytes(_key("4x4"))
+    cache.save()
+
+    prof_path = str(tmp_path / "workload.json")   # absent: no prefer set
+    rc = warm.main(["--compact", "--max-bytes", str(cap),
+                    "--cache", str(cache_path), "--profile", prof_path])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "evicted 1" in out
+    assert len(TuningCache.load(cache_path)) == 3
+
+    # the env default supplies the byte bound too
+    monkeypatch.setenv("REPRO_TUNING_MAX_BYTES", str(cap))
+    assert warm.main(["--compact", "--cache", str(cache_path),
+                      "--profile", prof_path]) == 0
+    assert len(TuningCache.load(cache_path)) == 3

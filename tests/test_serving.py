@@ -30,6 +30,7 @@ from repro.launch.serve import (
     PREFILLING,
     REJECT_QUEUE_FULL,
     REJECT_TOO_LONG,
+    SERVING_STATS_SCHEMA,
     PagedPool,
     Request,
     Scheduler,
@@ -453,6 +454,34 @@ def test_paged_mode_generates_identical_tokens_and_samples_pages():
     assert sched.page_samples, "paged runs must record the page series"
     assert all(used <= alloc for alloc, used in sched.page_samples)
     assert np.all(eng.pool.block_tables == PagedPool.PARK)   # fully released
+
+
+def test_consolidated_stats_schema_pinned():
+    """Every SERVING_STATS_SCHEMA key is always present — zeroed pool
+    keys on the contiguous path, the per-tick page samples aggregated on
+    the paged path — so the stats printer can iterate the schema and a
+    new counter cannot be silently dropped from any consumer."""
+    sched = Scheduler(FakeEngine(slots=2, chunk=4))
+    for r in (_mk(0, 5, 2), _mk(1, 3, 2)):
+        assert sched.submit(r)
+    _drain(sched)
+    stats = sched.consolidated_stats()
+    assert set(stats) == SERVING_STATS_SCHEMA
+    assert stats["completed"] == 2
+    assert stats["ticks"] == sched.ticks > 0
+    assert stats["pages-capacity"] == stats["pages-allocated-mean"] == 0
+
+    eng = FakeEngine(slots=2, chunk=4, paged=True)
+    sp = Scheduler(eng)
+    for r in (_mk(0, 5, 4), _mk(1, 8, 3)):
+        assert sp.submit(r)
+    _drain(sp)
+    stats = sp.consolidated_stats()
+    assert set(stats) == SERVING_STATS_SCHEMA
+    assert stats["pages-capacity"] == eng.pool.allocator.capacity
+    assert 0 < stats["pages-written-mean"] <= stats["pages-allocated-mean"]
+    assert stats["pages-allocated-peak"] >= stats["pages-allocated-mean"]
+    assert 0 <= stats["fragmentation-pct"] < 100
 
 
 # ---------------------------------------------------------------------------
