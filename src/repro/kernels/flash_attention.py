@@ -33,6 +33,21 @@ to divide the page (gcd) so no tile ever straddles a page boundary.
 Unallocated table entries must still hold a valid page index (the
 serving engine points them at a reserved park page): their DMAs are
 issued even when the kv_len mask discards every lane.
+
+**Sliding window** (``window``): with a traced per-batch window width W
+a third scalar row joins the SMEM meta — the *window start*
+``ws = kv_len - Sq - W + 1`` — and query i attends only keys in
+``[ws + i, ...]`` on top of the causal/kv_len masks.  k-blocks wholly
+below the q-block's minimum window start are skipped with the same
+pl.when heuristic that already skips unwritten cache suffixes, so long-KV
+decode executes O(W) kv steps instead of O(kv_len).  The formula anchors
+queries to the end of the written prefix, which is exactly where all
+three serving geometries put them (decode: the one query sits at
+kv_len-1; chunk: queries at kv_len-C .. kv_len-1; prefill: kv_len = Sk,
+q_start = Sk - Sq).  W >= kv_len degenerates to the ordinary masks —
+bit-identical output, every block still run.  Out-of-window pages may be
+reused (parked) by the serving engine: their scores are masked to -inf
+before the softmax, so stale contents are inert.
 """
 
 from __future__ import annotations
@@ -55,7 +70,8 @@ _NEG_INF = -1e30
 
 
 def _flash_kernel(
-    meta_ref,       # SMEM (2, B) int32: row 0 kv_len, row 1 q_start
+    meta_ref,       # SMEM (2[+1], B) int32: row 0 kv_len, row 1 q_start,
+                    # row 2 window start (windowed only)
     q_ref,          # (1, bq, 1, dh)
     k_ref,          # (1, bk, 1, dh)
     v_ref,          # (1, bk, 1, dh)
@@ -71,12 +87,14 @@ def _flash_kernel(
     kv_blocks: int,
     q_offset: int,      # sk - sq: static diagonal for the skip heuristic
     dyn_offset: bool,   # True when q_start is a traced value (chunk prefill)
+    windowed: bool,     # True when meta carries a window-start row
 ):
     bi = pl.program_id(0)
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     kvl = meta_ref[0, bi]
     qs = meta_ref[1, bi]
+    ws = meta_ref[2, bi] if windowed else None
 
     @pl.when(ik == 0)
     def _init():
@@ -88,10 +106,17 @@ def _flash_kernel(
     k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
 
     # Skip blocks that cannot contribute: past the written cache prefix,
-    # or (static diagonal only) strictly above the causal diagonal.
+    # (static diagonal only) strictly above the causal diagonal, or
+    # (windowed) wholly before the q-block's earliest window start.
     run = (ik * block_k) < kvl
     if causal and not dyn_offset:
         run = run & ((ik * block_k) <= (iq * block_q + q_offset + block_q - 1))
+    if windowed:
+        # the q-block's first query (local row iq*bq) has the smallest
+        # window start; a k-block whose last key is below it is dead for
+        # every query in the tile — this traced skip is what turns a
+        # long-KV decode into O(window) executed kv steps
+        run = run & ((ik * block_k + block_k - 1) >= (iq * block_q + ws))
 
     @pl.when(run)
     def _body():
@@ -104,6 +129,10 @@ def _flash_kernel(
         mask = k_pos < kvl
         if causal:
             mask = mask & (k_pos <= q_pos + qs)
+        if windowed:
+            # sliding window: query q_pos attends keys >= its own window
+            # start ws + q_pos (the mirror image of the causal bound)
+            mask = mask & (k_pos >= q_pos + ws)
         s = jnp.where(mask, s, _NEG_INF)
         # rows past kv_len may be out-of-bounds tile padding (garbage, NaN
         # in interpret mode); p is 0 there but 0 * NaN = NaN, so zero v too
@@ -138,6 +167,7 @@ def flash_attention(
     kv_len: jnp.ndarray | None = None,   # () or (B,) int32; None -> Sk
     q_start: jnp.ndarray | None = None,  # () or (B,) int32; None -> Sk - Sq
     *,
+    window: jnp.ndarray | None = None,   # () or (B,) int32 width W; None -> full
     causal: bool = True,
     scale: float | None = None,
     block_q: int | None = None,
@@ -180,13 +210,23 @@ def flash_attention(
     q_start = jnp.broadcast_to(
         jnp.asarray(sk - sq if q_start is None else q_start, jnp.int32), (b,)
     )
-    meta = jnp.stack([kv_len, q_start])          # (2, B) in SMEM
+    windowed = window is not None
+    rows = [kv_len, q_start]
+    if windowed:
+        # per-batch window start of the FIRST query: local query i's
+        # window opens at ws + i.  Queries are anchored to the end of the
+        # written prefix in every geometry (decode/chunk/prefill), so the
+        # base is kv_len - sq.
+        w = jnp.broadcast_to(jnp.asarray(window, jnp.int32), (b,))
+        rows.append(kv_len - sq - w + 1)
+    meta = jnp.stack(rows)                       # (2 [+1], B) in SMEM
+    tbl_row = len(rows)                          # first block-table meta row
     if paged:
-        # block-table rows ride below kv_len/q_start: meta[2 + j, bi] is
-        # the physical page of row bi's j-th logical block
+        # block-table rows ride below the scalar rows: meta[tbl_row+j, bi]
+        # is the physical page of row bi's j-th logical block
         meta = jnp.concatenate(
             [meta, block_tables.astype(jnp.int32).T], axis=0
-        )                                        # (2 + nblocks, B)
+        )                                        # (tbl_row + nblocks, B)
 
     kernel = functools.partial(
         _flash_kernel,
@@ -197,6 +237,7 @@ def flash_attention(
         kv_blocks=kv_blocks,
         q_offset=sk - sq,
         dyn_offset=dyn_offset,
+        windowed=windowed,
     )
     if paged:
         bpp = page // block_k                    # k-tiles per page
@@ -204,10 +245,10 @@ def flash_attention(
         def kv_spec():
             return pl.BlockSpec(
                 (1, block_k, 1, dh),
-                # logical k-block ik lives in page meta[2 + ik // bpp, bi],
-                # tile ik % bpp within it — the DMA performs the gather
-                lambda bi, hi, iq, ik, m: (m[2 + ik // bpp, bi], ik % bpp,
-                                           hi // group, 0),
+                # logical k-block ik lives in page meta[tbl_row + ik // bpp,
+                # bi], tile ik % bpp within it — the DMA performs the gather
+                lambda bi, hi, iq, ik, m: (m[tbl_row + ik // bpp, bi],
+                                           ik % bpp, hi // group, 0),
             )
     else:
         def kv_spec():

@@ -18,7 +18,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["attention_ref", "chunk_attention_ref", "decode_attention_ref"]
+__all__ = ["attention_ref", "chunk_attention_ref", "decode_attention_ref",
+           "windowed_attention_ref"]
 
 _NEG = -1e30
 
@@ -97,6 +98,39 @@ def attention_ref(
     return _plain(q, k, v, causal, scale)
 
 
+def windowed_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    window: jnp.ndarray,
+    *,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Sliding-window causal attention oracle.
+
+    Query at global position g attends keys in (g - window, g] — the
+    causal mask plus a lower bound `window` wide.  Global query positions
+    follow the prefill alignment (query i sits at i + Sk - Sq), so with
+    window >= Sk this is exactly `attention_ref(..., causal=True)`.
+    window: () or (B,) int32 (broadcast over the batch when scalar).
+    """
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(b, sq, kv, group, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k).astype(jnp.float32)
+    qi = jnp.arange(sq)[:, None] + (sk - sq)                 # (Sq, 1)
+    ki = jnp.arange(sk)[None, :]                             # (1, Sk)
+    w = jnp.broadcast_to(jnp.asarray(window, jnp.int32), (b,))
+    mask = (ki <= qi)[None] & (ki > qi - w[:, None, None])   # (B, Sq, Sk)
+    scores = jnp.where(mask[:, None, None], scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dh)
+
+
 def _gather_pages(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
     """(P, page, KV, Dh) pool + (B, nblocks) table -> the logical
     (B, nblocks*page, KV, Dh) cache each batch row sees — the jnp oracle
@@ -112,6 +146,7 @@ def decode_attention_ref(
     v_cache: jnp.ndarray,
     pos: jnp.ndarray,
     block_table: jnp.ndarray | None = None,
+    window: jnp.ndarray | None = None,
     *,
     scale: float | None = None,
 ) -> jnp.ndarray:
@@ -123,6 +158,9 @@ def decode_attention_ref(
     are masked (cache slots not yet written).  With `block_table`
     ((B, nblocks) int32) the caches are page pools (P, page, KV, Dh) and
     each row's logical cache is gathered through its table row first.
+    `window` (() or (B,) int32) additionally masks keys at positions
+    <= pos - window — the sliding-window decode: only the trailing
+    `window` cache slots are attended.
     """
     if block_table is not None:
         k_cache = _gather_pages(k_cache, block_table)
@@ -135,7 +173,11 @@ def decode_attention_ref(
     lim = pos.reshape(-1, 1, 1, 1) if pos.ndim else pos
     qg = q.reshape(b, kv, group, dh)
     scores = jnp.einsum("bkgd,bskd->bkgs", qg * scale, k_cache).astype(jnp.float32)
-    valid = jnp.arange(k_cache.shape[1])[None, None, None, :] <= lim
+    ki = jnp.arange(k_cache.shape[1])[None, None, None, :]
+    valid = ki <= lim
+    if window is not None:
+        w = jnp.broadcast_to(jnp.asarray(window, jnp.int32), (b,))
+        valid = valid & (ki > lim - w.reshape(-1, 1, 1, 1))
     scores = jnp.where(valid, scores, -jnp.inf)
     p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
     p = p / p.sum(axis=-1, keepdims=True)
@@ -149,6 +191,7 @@ def chunk_attention_ref(
     v_cache: jnp.ndarray,
     pos: jnp.ndarray,
     block_table: jnp.ndarray | None = None,
+    window: jnp.ndarray | None = None,
     *,
     scale: float | None = None,
 ) -> jnp.ndarray:
@@ -161,6 +204,9 @@ def chunk_attention_ref(
     future in-chunk keys) is masked.  pos: () or (B,) int32.  With
     `block_table` ((B, nblocks) int32) the caches are page pools
     (P, page, KV, Dh), gathered per row as in `decode_attention_ref`.
+    `window` (() or (B,) int32) additionally masks keys at positions
+    <= pos + i - window: each chunk query attends its trailing `window`
+    keys only.
     """
     if block_table is not None:
         k_cache = _gather_pages(k_cache, block_table)
@@ -174,7 +220,11 @@ def chunk_attention_ref(
     lim = base + jnp.arange(c)[None, :]                      # (B|1, C)
     qg = q.reshape(b, c, kv, group, dh)
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k_cache).astype(jnp.float32)
-    valid = jnp.arange(k_cache.shape[1])[None, None, :] <= lim[..., None]  # (B|1, C, S)
+    ki = jnp.arange(k_cache.shape[1])[None, None, :]
+    valid = ki <= lim[..., None]                             # (B|1, C, S)
+    if window is not None:
+        w = jnp.broadcast_to(jnp.asarray(window, jnp.int32), (b,))
+        valid = valid & (ki > (lim - w[:, None])[..., None])
     scores = jnp.where(valid[:, None, None], scores, -jnp.inf)
     p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
     p = p / p.sum(axis=-1, keepdims=True)

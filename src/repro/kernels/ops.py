@@ -24,6 +24,7 @@ from repro.kernels.flash_attention_ref import (
     attention_ref,
     chunk_attention_ref,
     decode_attention_ref,
+    windowed_attention_ref,
 )
 from repro.kernels.moe_gmm import moe_gmm
 from repro.kernels.moe_gmm_ref import moe_gmm_ref
@@ -54,6 +55,12 @@ _SIGS = {
         "args": ["q:[b,1,h,dh]", "k_cache:[b,smax,kv,dh]", "v_cache:[b,smax,kv,dh]", "pos:i32"],
         "kwargs": ["scale:float?"],
         "semantics": "single-token attention, cache slots > pos masked",
+    },
+    "windowed_attention": {
+        "args": ["q:[b,sq,h,dh]", "k:[b,sk,kv,dh]", "v:[b,sk,kv,dh]", "window:i32"],
+        "kwargs": ["scale:float?"],
+        "semantics": ("sliding-window causal: query i attends keys in "
+                      "(i-window, i], GQA h%kv==0, fp32 softmax"),
     },
     "chunk_attention": {
         "args": ["q:[b,c,h,dh]", "k_cache:[b,smax,kv,dh]", "v_cache:[b,smax,kv,dh]", "pos:i32"],
@@ -95,7 +102,14 @@ _SIGS = {
 #              gathered through a per-batch block table; the kernel grew
 #              per-batch block-index rows in the same SMEM meta
 #              (docs/kernels.md "block-gather meta ABI")
-_ABI_MINORS = {"moe_gmm": 2, "decode_attention": 2, "chunk_attention": 1}
+#   decode_attention 3 / chunk_attention 2: optional trailing window arg
+#              (traced () or (B,) i32) — sliding-window attention: keys
+#              at logical positions <= pos - window (decode) /
+#              <= pos + i - window (chunk) are masked, and whole
+#              out-of-window k-blocks are skipped; the kernel grew a
+#              per-batch window-start row in the same SMEM meta
+#              (docs/kernels.md "window meta ABI")
+_ABI_MINORS = {"moe_gmm": 2, "decode_attention": 3, "chunk_attention": 2}
 
 ABIS: dict[str, AbiString] = {
     name: AbiString.make(name, sig, major=1, minor=_ABI_MINORS.get(name, 0))
@@ -111,42 +125,58 @@ def _native_attention(q, k, v, *, causal=True, scale=None, config=None,
                            interpret=interpret)
 
 
-def _native_decode_attention(q, k_cache, v_cache, pos, block_tables=None, *,
-                             scale=None, config=None, interpret=False):
+def _native_windowed_attention(q, k, v, window, *, scale=None, config=None,
+                               interpret=False):
+    # sliding-window causal prefill: the full-attention geometry plus a
+    # traced window width — the wrapper adds the window-start meta row
+    return flash_attention(q, k, v, window=window, causal=True, scale=scale,
+                           config=config, interpret=interpret)
+
+
+def _ref_windowed_attention(q, k, v, window, *, scale=None):
+    return windowed_attention_ref(q, k, v, window, scale=scale)
+
+
+def _native_decode_attention(q, k_cache, v_cache, pos, block_tables=None,
+                             window=None, *, scale=None, config=None,
+                             interpret=False):
     # decode = flash with Sq=1 over the written prefix of the cache; with
     # block_tables the caches are page pools and the kernel's index maps
-    # gather pages (page size = the pool's second dim)
+    # gather pages (page size = the pool's second dim); with window only
+    # the trailing `window` slots are attended (out-of-window pages may
+    # already be parked)
     page = k_cache.shape[1] if block_tables is not None else None
     return flash_attention(
         q, k_cache, v_cache, kv_len=pos + 1, causal=False, scale=scale,
-        config=config, interpret=interpret,
+        window=window, config=config, interpret=interpret,
         block_tables=block_tables, page_size=page,
     )
 
 
-def _ref_decode_attention(q, k_cache, v_cache, pos, block_tables=None, *,
-                          scale=None):
+def _ref_decode_attention(q, k_cache, v_cache, pos, block_tables=None,
+                          window=None, *, scale=None):
     return decode_attention_ref(q, k_cache, v_cache, pos, block_tables,
-                                scale=scale)
+                                window, scale=scale)
 
 
-def _native_chunk_attention(q, k_cache, v_cache, pos, block_tables=None, *,
-                            scale=None, config=None, interpret=False):
+def _native_chunk_attention(q, k_cache, v_cache, pos, block_tables=None,
+                            window=None, *, scale=None, config=None,
+                            interpret=False):
     # chunked prefill = flash with the causal diagonal re-anchored at pos:
     # query i (global position pos+i) sees cache keys <= pos+i, and the
     # kv_len mask hides slots past the chunk's own freshly written tail.
     page = k_cache.shape[1] if block_tables is not None else None
     return flash_attention(
         q, k_cache, v_cache, kv_len=pos + q.shape[1], q_start=pos,
-        causal=True, scale=scale, config=config, interpret=interpret,
-        block_tables=block_tables, page_size=page,
+        causal=True, scale=scale, window=window, config=config,
+        interpret=interpret, block_tables=block_tables, page_size=page,
     )
 
 
-def _ref_chunk_attention(q, k_cache, v_cache, pos, block_tables=None, *,
-                         scale=None):
+def _ref_chunk_attention(q, k_cache, v_cache, pos, block_tables=None,
+                         window=None, *, scale=None):
     return chunk_attention_ref(q, k_cache, v_cache, pos, block_tables,
-                               scale=scale)
+                               window, scale=scale)
 
 
 def _ref_attention(q, k, v, *, causal=True, scale=None):
@@ -159,6 +189,7 @@ def _ref_attention(q, k, v, *, causal=True, scale=None):
 _REFS = {
     "rmsnorm": rmsnorm_ref,
     "attention": _ref_attention,
+    "windowed_attention": _ref_windowed_attention,
     "decode_attention": _ref_decode_attention,
     "chunk_attention": _ref_chunk_attention,
     "ssd_scan": ssd_scan_ref,
@@ -168,6 +199,7 @@ _REFS = {
 _NATIVES = {
     "rmsnorm": functools.partial(rmsnorm, interpret=False),
     "attention": _native_attention,
+    "windowed_attention": _native_windowed_attention,
     "decode_attention": _native_decode_attention,
     "chunk_attention": _native_chunk_attention,
     "ssd_scan": functools.partial(ssd_scan, interpret=False),
@@ -180,6 +212,8 @@ _NATIVES = {
 _NATIVES_INTERPRET = {
     "rmsnorm": functools.partial(rmsnorm, interpret=True),
     "attention": functools.partial(_native_attention, interpret=True),
+    "windowed_attention": functools.partial(_native_windowed_attention,
+                                            interpret=True),
     "decode_attention": functools.partial(_native_decode_attention, interpret=True),
     "chunk_attention": functools.partial(_native_chunk_attention, interpret=True),
     "ssd_scan": functools.partial(ssd_scan, interpret=True),
@@ -251,6 +285,30 @@ def _feasible_attention(cfg, platform, args):
     bq, bk = cfg["block_q"], cfg["block_k"]
     vmem = (2 * bq * dh + 2 * bk * dh + bq * bk + 2 * bq) * 4
     return bq <= sq and bk <= sk and vmem <= _VMEM_BUDGET
+
+
+def _spec_windowed(platform):
+    # the full-attention geometry plus a traced window width; the canonical
+    # window is Sk // 4 — small enough that the skip heuristic matters,
+    # large enough to span several k-blocks
+    q, k, v = _spec_attention(platform)
+    return (q, k, v, jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def _example_windowed(platform):
+    q, k, v, _ = _spec_windowed(platform)
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    w = jnp.asarray(max(1, k.shape[1] // 4), jnp.int32)
+    return (jax.random.normal(ks[0], q.shape, q.dtype),
+            jax.random.normal(ks[1], k.shape, k.dtype),
+            jax.random.normal(ks[2], v.shape, v.dtype),
+            w)
+
+
+def _feasible_windowed(cfg, platform, args):
+    # identical working set to full attention: the window narrows which
+    # k-blocks run, not their shapes
+    return _feasible_attention(cfg, platform, args)
 
 
 def _spec_decode(platform):
@@ -404,6 +462,16 @@ _TUNERS: dict[str, OpTuner] = {
         example_args=_example_attention, feasible=_feasible_attention,
         example_specs=_spec_attention,
     ),
+    "windowed_attention": OpTuner(
+        op="windowed_attention",
+        # same space as attention, but the sweet spot differs: block_k
+        # larger than the window wastes the skip, so the tuner usually
+        # lands on smaller k-tiles than full attention does
+        space={"block_q": (16, 32, 64, 128, 256),
+               "block_k": (16, 32, 64, 128, 256)},
+        example_args=_example_windowed, feasible=_feasible_windowed,
+        example_specs=_spec_windowed,
+    ),
     "decode_attention": OpTuner(
         op="decode_attention",
         space={"block_k": (16, 32, 64, 128, 256, 512)},
@@ -477,28 +545,46 @@ def _synth_attention(platform, shapes, dtype):
 def _attn_cache_parts(shapes):
     """Normalize a decode/chunk attention bucket to its array parts.
 
-    Returns [q, k_cache, v_cache] (contiguous) or [q, pool_k, pool_v,
-    block_table] (paged); pos carries no geometry — recorded as a
-    "scalar" part (traced 0-d), a 1-d (B,) vector (continuous batching),
-    or absent (python int) — drop it whichever way it appears.  The
-    block table is always 2-d, so rank disambiguates."""
+    Returns ``(parts, windowed)`` where parts is [q, k_cache, v_cache]
+    (contiguous) or [q, pool_k, pool_v, block_table] (paged).  pos
+    carries no geometry — recorded as a "scalar" part (traced 0-d), a
+    1-d (B,) vector (continuous batching), or absent (python int) —
+    drop it whichever way it appears.  The block table is always 2-d, so
+    rank disambiguates; a trailing rank-0 part *after* pos/table is the
+    traced sliding-window width (ABI decode/1:3, chunk/1:2) — this is
+    how "window rides the bucket key": windowed calls bucket separately
+    from full-attention calls and warm to their own tuned entries."""
     parts = _parse_bucket(shapes)
-    if not parts:
+    if not parts or len(parts) < 3 or any(len(p) != 4 for p in parts[:3]):
         return None
-    if len(parts) in (4, 5) and len(parts[3]) <= 1:
-        parts = parts[:3] + parts[4:]
-    if len(parts) == 3 and all(len(p) == 4 for p in parts):
-        return parts
-    if (len(parts) == 4 and all(len(p) == 4 for p in parts[:3])
-            and len(parts[3]) == 2):
-        return parts
-    return None
+    tail = parts[3:]
+    if tail and len(tail[0]) <= 1:       # traced pos: () or (B,)
+        tail = tail[1:]
+    table = None
+    if tail and len(tail[0]) == 2:       # paged block table
+        table = tail[0]
+        tail = tail[1:]
+    windowed = bool(tail) and tail[0] == ()
+    if windowed:
+        tail = tail[1:]
+    if tail:                             # unrecognized residue
+        return None
+    return parts[:3] + ([table] if table is not None else []), windowed
+
+
+def _synth_window(logical: int):
+    """Representative traced window for a resynthesized windowed bucket:
+    a quarter of the logical extent, so the measurement exercises the
+    out-of-window block skip (the value itself never reaches the bucket
+    key — only its 0-d "scalar" shape does)."""
+    return jnp.asarray(max(1, logical // 4), jnp.int32)
 
 
 def _synth_decode(platform, shapes, dtype):
-    parts = _attn_cache_parts(shapes)
-    if parts is None:
+    norm = _attn_cache_parts(shapes)
+    if norm is None:
         return None
+    parts, windowed = norm
     ks = jax.random.split(jax.random.PRNGKey(2), 4)
     q, k, v = (_normal(kk, p, dtype) for kk, p in zip(ks, parts[:3]))
     if len(parts) == 4:
@@ -506,17 +592,25 @@ def _synth_decode(platform, shapes, dtype):
         b, nblocks = parts[3]
         bt = jax.random.randint(ks[3], (b, nblocks), 0, max(npages, 1),
                                 jnp.int32)
-        return (q, k, v, (nblocks * page) // 2, bt)
-    return (q, k, v, parts[1][1] // 2)
+        logical = nblocks * page
+        args = (q, k, v, logical // 2, bt)
+    else:
+        logical = parts[1][1]
+        args = (q, k, v, logical // 2, None)
+    if windowed:
+        return args + (_synth_window(logical),)
+    return args[:4] if args[4] is None else args
 
 
 def _synth_chunk(platform, shapes, dtype):
     # same bucket structure as decode: q/k_cache/v_cache (+ optional
-    # trailing "scalar" for a traced pos, + block table when paged);
-    # resynthesize pos mid-cache
-    parts = _attn_cache_parts(shapes)
-    if parts is None:
+    # trailing "scalar" for a traced pos, + block table when paged,
+    # + trailing "scalar" window when windowed); resynthesize pos
+    # mid-cache
+    norm = _attn_cache_parts(shapes)
+    if norm is None:
         return None
+    parts, windowed = norm
     ks = jax.random.split(jax.random.PRNGKey(5), 4)
     q, k, v = (_normal(kk, p, dtype) for kk, p in zip(ks, parts[:3]))
     c = parts[0][1]
@@ -529,8 +623,23 @@ def _synth_chunk(platform, shapes, dtype):
         bt = jax.random.randint(ks[3], (b, nblocks), 0, max(npages, 1),
                                 jnp.int32)
         pos = max(0, min(logical - c, logical // 2))
-        return (q, k, v, pos, bt)
-    return (q, k, v, parts[1][1] // 2)
+        args = (q, k, v, pos, bt)
+    else:
+        logical = parts[1][1]
+        args = (q, k, v, logical // 2, None)
+    if windowed:
+        return args + (_synth_window(logical),)
+    return args[:4] if args[4] is None else args
+
+
+def _synth_windowed(platform, shapes, dtype):
+    parts = _parse_bucket(shapes)
+    if (not parts or len(parts) != 4 or any(len(p) != 4 for p in parts[:3])
+            or parts[3] != ()):
+        return None
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q, k, v = (_normal(kk, p, dtype) for kk, p in zip(ks, parts[:3]))
+    return (q, k, v, _synth_window(parts[1][1]))
 
 
 def _synth_ssd(platform, shapes, dtype):
@@ -567,6 +676,7 @@ def _synth_moe(platform, shapes, dtype):
 _SYNTHS = {
     "rmsnorm": _synth_rmsnorm,
     "attention": _synth_attention,
+    "windowed_attention": _synth_windowed,
     "decode_attention": _synth_decode,
     "chunk_attention": _synth_chunk,
     "ssd_scan": _synth_ssd,

@@ -262,23 +262,34 @@ class JaxEngine:
     and this engine just threads the tables into both compiled steps.
     Paged mode requires chunked prefill — the page-per-chunk invariant
     is what keeps every prefill write inside one page.
+
+    With ``window=W`` every attention call is sliding-window: a token
+    attends only its trailing W keys (windowed decode/chunk_attention
+    ABI).  The engine just threads the traced width into both compiled
+    steps; the *scheduler* exploits it — out-of-window pages are parked
+    and recycled, so a paged request's admission footprint is capped at
+    ceil(W/page)+1 pages no matter how long it runs (docs/serving.md).
     """
 
     def __init__(self, cfg, container, *, slots: int, max_len: int,
                  chunk: int = 16, prefill_mode: str = "chunked",
-                 paged: bool = False, num_pages: int | None = None):
+                 paged: bool = False, num_pages: int | None = None,
+                 window: int | None = None):
         if prefill_mode not in ("chunked", "decode"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         if chunk < 1 or chunk > max_len:
             raise ValueError(f"chunk {chunk} outside [1, max_len={max_len}]")
         if paged and prefill_mode != "chunked":
             raise ValueError("paged cache requires prefill_mode='chunked'")
+        if window is not None and window < 1:
+            raise ValueError(f"sliding window of {window} tokens")
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.chunk = chunk
         self.prefill_mode = prefill_mode
         self.paged = paged
+        self.window = window
         shape = ShapeConfig("serve", max_len, slots, "decode")
         self.dep = make_deployment(
             cfg, shape, container.mesh,
@@ -322,12 +333,14 @@ class JaxEngine:
         if self.prefill_mode == "chunked":
             buf = np.zeros((1, self.chunk), np.int32)
             buf[0, :n] = tokens
-            extra = ()
+            kw = {}
             if self.paged:
-                extra = (jnp.asarray(self.pool.block_tables[slot]),)
+                kw["block_row"] = jnp.asarray(self.pool.block_tables[slot])
+            if self.window is not None:
+                kw["window"] = jnp.int32(self.window)
             logits, self.cache = self._prefill(
                 self.params, jnp.asarray(buf), self.cache,
-                jnp.int32(slot), jnp.int32(pos), jnp.int32(n), *extra,
+                jnp.int32(slot), jnp.int32(pos), jnp.int32(n), **kw,
             )
             self.prefill_calls += 1
             return np.asarray(logits[0])
@@ -339,9 +352,12 @@ class JaxEngine:
         posv[slot] = pos
         act = np.zeros(self.slots, bool)
         act[slot] = True
+        kw = {}
+        if self.window is not None:
+            kw["window"] = jnp.int32(self.window)
         _, self.cache = self._decode(
             self.params, jnp.asarray(tok), self.cache,
-            jnp.asarray(posv), jnp.asarray(act),
+            jnp.asarray(posv), jnp.asarray(act), **kw,
         )
         self.decode_calls += 1
         return None
@@ -352,12 +368,14 @@ class JaxEngine:
         """One batched decode tick.  tokens (slots, 1), pos (slots,),
         active (slots,) bool; returns (slots, vocab) logits (garbage on
         inactive rows)."""
-        extra = ()
+        kw = {}
         if self.paged:
-            extra = (jnp.asarray(self.pool.block_tables),)
+            kw["block_tables"] = jnp.asarray(self.pool.block_tables)
+        if self.window is not None:
+            kw["window"] = jnp.int32(self.window)
         logits, self.cache = self._decode(
             self.params, jnp.asarray(tokens), self.cache,
-            jnp.asarray(pos), jnp.asarray(active), *extra,
+            jnp.asarray(pos), jnp.asarray(active), **kw,
         )
         self.decode_calls += 1
         return np.asarray(logits)
@@ -454,6 +472,9 @@ class Scheduler:
                              "first token the handoff carries")
         self.engine = engine
         self.paged = bool(getattr(engine, "paged", False))
+        # sliding-window width (getattr: policy tests drive fakes that
+        # predate the windowed engine)
+        self.window = getattr(engine, "window", None)
         self.queue_depth = queue_depth
         self.max_new_cap = max_new_cap
         self.interleave = max(1, interleave)
@@ -461,6 +482,10 @@ class Scheduler:
         self.on_handoff = on_handoff
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * engine.slots
+        # sliding-window page recycling: physical pages whose logical
+        # block fell out of the attention window, banked per request
+        # (keyed by order) until the write head claims a new block
+        self._spare: dict[int, list[int]] = {}
         self.rejected: dict[str, int] = {}
         self.submitted = 0
         self.completed = 0
@@ -483,9 +508,26 @@ class Scheduler:
             gen_end += 1                           # baseline re-feeds last token
         return max(chunks_end, gen_end)
 
-    def _pages_needed(self, prompt_len: int, max_new: int) -> int:
-        return -(-self._budget(prompt_len, max_new)
-                 // self.engine.pool.page_size)
+    def _pages_needed(self, prompt_len: int, max_new: int, *,
+                      capped: bool = True) -> int:
+        """Pages a request must lease up front.
+
+        With a sliding window the footprint is *capped*: logical blocks
+        wholly behind the window are parked as the write head advances
+        and their physical pages re-mapped to the blocks ahead
+        (`_slide_window`), so at most ceil(W/page)+1 pages — the blocks
+        the window straddles plus the one being written — are ever live.
+        This is what shrinks windowed admission from O(prompt+gen) to
+        O(window).  `capped=False` gives the uncapped count (`adopt`
+        needs it: a KV handoff scatters the full written prefix, so the
+        adopting slot's table must map every written block up front).
+        """
+        page = self.engine.pool.page_size
+        full = -(-self._budget(prompt_len, max_new) // page)
+        w = self.window
+        if capped and w is not None:
+            return min(full, -(-w // page) + 1)
+        return full
 
     def servable(self, prompt_len: int, max_new: int) -> bool:
         """Can this request EVER be served by this engine's geometry?
@@ -495,8 +537,13 @@ class Scheduler:
             return False
         if self.paged:
             pool = self.engine.pool
+            # the block table must index every logical block the budget
+            # touches (the window caps leased pages, not logical extent)
+            if (self._pages_needed(prompt_len, max_new, capped=False)
+                    > pool.max_blocks):
+                return False
             return (self._pages_needed(prompt_len, max_new)
-                    <= min(pool.max_blocks, pool.allocator.capacity))
+                    <= pool.allocator.capacity)
         return self._budget(prompt_len, max_new) <= self.engine.max_len
 
     def submit(self, req: Request) -> bool:
@@ -533,8 +580,12 @@ class Scheduler:
         if slot is None:
             return False
         if self.paged:
+            # uncapped even under a sliding window: import_slot scatters
+            # the handoff's full written prefix, so every written block
+            # needs a mapped page; _slide_window recycles from there
             pages = self.engine.pool.alloc(
-                req.order, self._pages_needed(req.prompt_len, req.max_new)
+                req.order,
+                self._pages_needed(req.prompt_len, req.max_new, capped=False),
             )
             if pages is None:
                 return False
@@ -585,6 +636,7 @@ class Scheduler:
         req.state = DONE
         req.finish_t = self.clock()
         if self.paged:
+            self._spare.pop(req.order, None)
             self.engine.pool.free(req.order)
             self.engine.pool.release(req.slot)
         self.active[req.slot] = None
@@ -599,11 +651,43 @@ class Scheduler:
         req.state = HANDOFF
         self.on_handoff(req)
         if self.paged:
+            self._spare.pop(req.order, None)
             self.engine.pool.free(req.order)
             self.engine.pool.release(req.slot)
         self.active[req.slot] = None
         req.slot = None
         self.handed_off += 1
+
+    def _slide_window(self, req: Request) -> None:
+        """Sliding-window page recycling (paged + windowed engines only).
+
+        A logical block whose last position can never be attended again
+        ((j+1)*page <= head - W) is *dead*: its table entry is parked —
+        the kernel's gather then reads the poison-inert park page and the
+        window mask discards it — and its physical page is banked in the
+        request's spare list.  The block the write head is about to enter
+        is mapped from that bank.  Pages never return to the shared
+        allocator mid-flight (another admission could snap them up and
+        deadlock this request's next write); the lease cap in
+        `_pages_needed` already priced the steady state, and everything
+        goes back at `_finish`.  Repro note: live blocks are always the
+        contiguous run [ (head-W)//page, head//page ], at most
+        ceil(W/page)+1 of them — the lease cap.
+        """
+        pool = self.engine.pool
+        w = self.window
+        page = pool.page_size
+        head = req.prefill_pos if req.state == PREFILLING else req.next_pos
+        row = pool.block_tables[req.slot]
+        spare = self._spare.setdefault(req.order, [])
+        dead = max(0, head - w) // page
+        spare.extend(int(p) for p in row[:dead] if p != pool.PARK)
+        row[:dead] = pool.PARK
+        nb = head // page                  # block the next write lands in
+        if nb < pool.max_blocks and row[nb] == pool.PARK:
+            # the lease cap guarantees a banked page is available here
+            assert spare, "sliding-window lease underflow"
+            row[nb] = spare.pop()
 
     # -- the quantum ------------------------------------------------------
     def tick(self) -> list[tuple[int, int]]:
@@ -623,6 +707,8 @@ class Scheduler:
             )
             if req is None:
                 break
+            if self.paged and self.window is not None:
+                self._slide_window(req)
             n = min(self.engine.prefill_unit, req.prompt_len - req.prefill_pos)
             window = req.prompt[req.prefill_pos : req.prefill_pos + n]
             logits = self.engine.prefill_step(req.slot, window, req.prefill_pos)
@@ -641,6 +727,9 @@ class Scheduler:
 
         decoding = [r for r in self.active if r is not None and r.state == DECODING]
         if decoding:
+            if self.paged and self.window is not None:
+                for r in decoding:
+                    self._slide_window(r)
             tok = np.zeros((self.engine.slots, 1), np.int32)
             pos = np.full(self.engine.slots, self.engine.max_len - 1, np.int32)
             act = np.zeros(self.engine.slots, bool)
@@ -657,11 +746,18 @@ class Scheduler:
                 self._emit(r, int(np.argmax(logits[r.slot])), out)
         if self.paged:
             page = self.engine.pool.page_size
-            used = sum(
-                -(-(r.prefill_pos if r.state == PREFILLING else r.next_pos)
-                  // page)
-                for r in self.active if r is not None
-            )
+            w = self.window
+            used = 0
+            for r in self.active:
+                if r is None:
+                    continue
+                head = r.prefill_pos if r.state == PREFILLING else r.next_pos
+                written = -(-head // page)
+                if w is not None:
+                    # recycled (out-of-window) blocks no longer hold
+                    # readable tokens — count only the live window
+                    written -= max(0, head - w) // page
+                used += written
             self.page_samples.append((self.engine.pool.allocator.used, used))
         return out
 
@@ -716,11 +812,12 @@ class Server:
                  chunk: int = 16, prefill_mode: str = "chunked",
                  queue_depth: int = 64, max_new_cap: int = 1 << 30,
                  interleave: int = 2, paged: bool = False,
-                 num_pages: int | None = None,
+                 num_pages: int | None = None, window: int | None = None,
                  clock: Callable[[], float] = time.monotonic):
         self.engine = JaxEngine(cfg, container, slots=slots, max_len=max_len,
                                 chunk=chunk, prefill_mode=prefill_mode,
-                                paged=paged, num_pages=num_pages)
+                                paged=paged, num_pages=num_pages,
+                                window=window)
         self.scheduler = Scheduler(self.engine, queue_depth=queue_depth,
                                    max_new_cap=max_new_cap,
                                    interleave=interleave, clock=clock)
@@ -768,6 +865,12 @@ def main(argv=None) -> int:
                     help="paged pool size incl. the reserved park page "
                          "(default: 1 + slots * ceil(max_len/chunk), the "
                          "contiguous layout's capacity)")
+    ap.add_argument("--window", type=int, default=None, metavar="W",
+                    help="sliding-window attention: every token attends "
+                         "only its trailing W keys; with --paged, "
+                         "out-of-window pages are parked and recycled, "
+                         "capping each request's admission footprint at "
+                         "ceil(W/chunk)+1 pages")
     ap.add_argument("--queue-depth", type=int, default=64,
                     help="admission control: submits beyond this queue depth "
                          "are rejected, not buffered")
@@ -809,7 +912,7 @@ def main(argv=None) -> int:
     server = Server(cfg, container, slots=args.slots, max_len=args.max_len,
                     chunk=args.chunk, prefill_mode=args.prefill_mode,
                     queue_depth=args.queue_depth, paged=args.paged,
-                    num_pages=args.num_pages)
+                    num_pages=args.num_pages, window=args.window)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for rid in range(args.requests):

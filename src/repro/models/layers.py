@@ -253,12 +253,15 @@ def attention_decode(
     pctx: "ParallelCtx | None" = None,
     real_group: tuple[int, int] | None = None,
     block_tables: jnp.ndarray | None = None,   # (B, nblocks) — paged cache
+    window: jnp.ndarray | None = None,         # () or (B,) i32 sliding window
 ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     """One-token attention against the cache; writes the new k/v (self only).
 
     With `block_tables` the cache k/v are page pools (P, page, KV, Dh)
     shared by all slots; the write scatters through the table and the op
-    gathers through it (paged decode_attention ABI)."""
+    gathers through it (paged decode_attention ABI).  With `window` only
+    the trailing `window` cache slots are attended (sliding-window decode
+    ABI) — out-of-window pages may already have been released."""
     rope_pos = pos[None] if pos.ndim == 0 else pos[:, None]
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     if cfg.qkv_bias:
@@ -282,11 +285,16 @@ def attention_decode(
         if block_tables is not None:
             k_cache = _paged_decode_write(cache["k"], k, pos, block_tables)
             v_cache = _paged_decode_write(cache["v"], v, pos, block_tables)
-            out = binding["decode_attention"](q, k_cache, v_cache, pos,
-                                              block_tables)
         else:
             k_cache = _cache_write(cache["k"], k, pos)
             v_cache = _cache_write(cache["v"], v, pos)
+        if window is not None:
+            out = binding["decode_attention"](q, k_cache, v_cache, pos,
+                                              block_tables, window)
+        elif block_tables is not None:
+            out = binding["decode_attention"](q, k_cache, v_cache, pos,
+                                              block_tables)
+        else:
             out = binding["decode_attention"](q, k_cache, v_cache, pos)
         new_cache = {"k": k_cache, "v": v_cache}
     out = _mask_padded_heads(out, real_group)
@@ -308,6 +316,7 @@ def attention_chunk(
     pctx: "ParallelCtx | None" = None,
     real_group: tuple[int, int] | None = None,
     block_tables: jnp.ndarray | None = None,   # (nblocks,) — this slot's row
+    window: jnp.ndarray | None = None,         # () i32 sliding window
 ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     """Chunked-prefill attention: C prompt tokens at global positions
     pos..pos+C-1 against the partially filled cache.
@@ -346,12 +355,20 @@ def attention_chunk(
             cache["k"], k.astype(cache["k"].dtype), (blk, 0, 0, 0))
         v_cache = jax.lax.dynamic_update_slice(
             cache["v"], v.astype(cache["v"].dtype), (blk, 0, 0, 0))
-        out = binding["chunk_attention"](q, k_cache, v_cache, pos,
-                                         block_tables[None])
+        if window is not None:
+            out = binding["chunk_attention"](q, k_cache, v_cache, pos,
+                                             block_tables[None], window)
+        else:
+            out = binding["chunk_attention"](q, k_cache, v_cache, pos,
+                                             block_tables[None])
     else:
         k_cache = _cache_write(cache["k"], k, pos)
         v_cache = _cache_write(cache["v"], v, pos)
-        out = binding["chunk_attention"](q, k_cache, v_cache, pos)
+        if window is not None:
+            out = binding["chunk_attention"](q, k_cache, v_cache, pos,
+                                             None, window)
+        else:
+            out = binding["chunk_attention"](q, k_cache, v_cache, pos)
     out = _mask_padded_heads(out, real_group)
     if pctx is not None and pctx.active:
         out = pctx.constrain_heads(out)

@@ -305,7 +305,7 @@ class Model:
     # layer application
     # ------------------------------------------------------------------ #
     def _layer(self, j, lp, x, mode, lc, pos, enc_out, positions, aux,
-               n_valid=None, active=None, block_tables=None):
+               n_valid=None, active=None, block_tables=None, window=None):
         cfg, binding = self.cfg, self.binding
         new_cache: Tree = {}
         h = L.norm_apply(lp["pre_norm"], x, cfg, binding)
@@ -315,14 +315,14 @@ class Model:
                 y, kv = L.attention_decode(
                     lp["attn"], h, {"k": lc["k"], "v": lc["v"]}, pos, cfg, binding,
                     use_rope=self.use_rope, pctx=self.pctx, real_group=rg,
-                    block_tables=block_tables,
+                    block_tables=block_tables, window=window,
                 )
                 new_cache.update(kv)
             elif mode == "chunk":
                 y, kv = L.attention_chunk(
                     lp["attn"], h, {"k": lc["k"], "v": lc["v"]}, pos, cfg, binding,
                     use_rope=self.use_rope, pctx=self.pctx, real_group=rg,
-                    block_tables=block_tables,
+                    block_tables=block_tables, window=window,
                 )
                 new_cache.update(kv)
             else:
@@ -404,7 +404,8 @@ class Model:
     # decoder stack
     # ------------------------------------------------------------------ #
     def _decoder(self, params, x, mode, cache=None, pos=None, enc_out=None,
-                 positions=None, n_valid=None, active=None, block_tables=None):
+                 positions=None, n_valid=None, active=None, block_tables=None,
+                 window=None):
         cfg = self.cfg
         p = self.period
         unroll = self.num_blocks if self.scan_unroll else 1
@@ -453,6 +454,7 @@ class Model:
                     x, nc, aux = self._layer(
                         j, bp[f"p{j}"], x, mode, lc, pos, enc_out, positions, aux,
                         n_valid=n_valid, active=active, block_tables=block_tables,
+                        window=window,
                     )
                     new_cache = dict(new_cache)
                     new_cache[f"p{j}"] = jax.tree.map(
@@ -626,7 +628,7 @@ class Model:
         return logits, cache
 
     def prefill_into(self, params, tokens, cache, slot, pos, n_valid=None,
-                     block_row=None):
+                     block_row=None, window=None):
         """Chunked prefill: advance ONE slot of a batched cache by C tokens.
 
         The compiled unit of prompt ingestion — a fixed-shape step the
@@ -658,6 +660,10 @@ class Model:
         by all slots, so they are passed to the decoder whole and written
         back whole — only the per-slot recurrent (SSM) leaves are sliced
         and scattered at `slot` as in the contiguous path.
+
+        With `window` (() int32, traced) each chunk query attends only its
+        trailing `window` keys (sliding-window attention) — pages wholly
+        behind the window may already have been released by the scheduler.
         """
         cfg = self.cfg
         if cfg.is_enc_dec or cfg.modality == "vision":
@@ -684,7 +690,8 @@ class Model:
             )
         x = self._embed(params, tokens)
         x, new_row, _ = self._decoder(params, x, "chunk", cache=row, pos=pos,
-                                      n_valid=n_valid, block_tables=block_row)
+                                      n_valid=n_valid, block_tables=block_row,
+                                      window=window)
         x = L.norm_apply(params["final_norm"], x, cfg, self.binding)
         last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
         logits = self._logits(params, last)[:, 0]
@@ -709,7 +716,8 @@ class Model:
             )
         return logits, cache
 
-    def decode(self, params, token, cache, pos, active=None, block_tables=None):
+    def decode(self, params, token, cache, pos, active=None, block_tables=None,
+               window=None):
         """token: (B, 1) int32; pos: () or (B,) int32 — per-slot positions
         under continuous batching; active: optional (B,) bool — rows whose
         recurrent (SSM) state may advance.  Inactive rows keep their state;
@@ -717,11 +725,15 @@ class Model:
         convention max_len-1, a slot admission never lets live data reach;
         paged: table row all zeros, the write lands in the park page).
         block_tables: optional (B, nblocks) int32 — the cache is paged.
+        window: optional () or (B,) int32 — sliding-window decode: only
+        the trailing `window` cache slots are attended, so out-of-window
+        pages may already have been released to other slots.
         """
         cfg = self.cfg
         x = self._embed(params, token, offset=pos)
         x, new_cache, _ = self._decoder(params, x, "decode", cache=cache, pos=pos,
-                                        active=active, block_tables=block_tables)
+                                        active=active, block_tables=block_tables,
+                                        window=window)
         x = L.norm_apply(params["final_norm"], x, cfg, self.binding)
         logits = self._logits(params, x)[:, 0]
         return logits, new_cache

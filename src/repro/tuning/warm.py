@@ -209,7 +209,7 @@ def _selftest() -> int:   # pragma: no cover — runs as its own CI job
         "REPRO_TUNING_CACHE": str(tmp / "tuning.json"),
         "REPRO_WORKLOAD_PROFILE": str(tmp / "workload.json"),
     }
-    ops = ("rmsnorm", "moe_gmm")
+    ops = ("rmsnorm", "moe_gmm", "windowed_attention")
     bundle = Bundle(name="warm-selftest", tag="t", model_config={}, recipe={},
                     required_ops={op: str(ABIS[op]) for op in ops}, env={})
 
@@ -233,6 +233,18 @@ def _selftest() -> int:   # pragma: no cover — runs as its own CI job
         moe_geoms.append((xt, wm, gs))
         for _ in range(2):
             jax.block_until_ready(c1.binding["moe_gmm"](xt, wm, gs))
+    win_geoms = []
+    for sq, sk, h, kv, dh in ((32, 32, 2, 2, 32), (16, 32, 4, 2, 16)):
+        kq, kk, kv_ = jax.random.split(jax.random.PRNGKey(sq), 3)
+        q = jax.random.normal(kq, (1, sq, h, dh), jnp.float32)
+        kc = jax.random.normal(kk, (1, sk, kv, dh), jnp.float32)
+        vc = jax.random.normal(kv_, (1, sk, kv, dh), jnp.float32)
+        # the window is traced (it rides the bucket key as a scalar part),
+        # so windowed buckets are structurally distinct from full attention
+        win = jnp.asarray(16, jnp.int32)
+        win_geoms.append((q, kc, vc, win))
+        for _ in range(2):
+            jax.block_until_ready(c1.binding["windowed_attention"](q, kc, vc, win))
     rt.cleanup()   # persists the profile
 
     profile = WorkloadProfile.load(tmp / "workload.json")
@@ -287,7 +299,8 @@ def _selftest() -> int:   # pragma: no cover — runs as its own CI job
 
     # 4. drive both live geometries through each bound op: the dispatch
     # must resolve every one exactly (no nearest/default fallbacks)
-    for op, geoms in (("rmsnorm", rms_geoms), ("moe_gmm", moe_geoms)):
+    for op, geoms in (("rmsnorm", rms_geoms), ("moe_gmm", moe_geoms),
+                      ("windowed_attention", win_geoms)):
         for args in geoms:
             jax.block_until_ready(c2.binding[op](*args))
         dispatch = c2.binding.impl(op).fn

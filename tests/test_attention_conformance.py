@@ -11,6 +11,8 @@ prefill, `chunk_attention`, `decode_attention`) over
   * kv_len padding masks (unwritten cache slots),
   * contiguous vs paged layout (page pools + shuffled block tables,
     poisoned park page),
+  * sliding windows W in {page, 2*page, >= kv_len} for the windowed
+    variants, with W >= kv_len pinned bit-identical to full attention,
 
 against a single fp32 masked-softmax oracle.  Every geometry is also
 round-tripped through the tuner synthesizer (`bucket_shapes` ->
@@ -19,6 +21,7 @@ a workload for every shape the serving paths emit — paged ones included.
 """
 
 import itertools
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +31,10 @@ import pytest
 from repro.core.platform import POD_SIM
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention_ref import (
+    attention_ref,
     chunk_attention_ref,
     decode_attention_ref,
+    windowed_attention_ref,
 )
 from repro.kernels.ops import _NATIVES_INTERPRET, tuners
 from repro.tuning import bucket_shapes
@@ -38,6 +43,17 @@ from repro.tuning.config import BlockConfig
 TOLS = {"float32": 2e-5, "bfloat16": 2e-2}
 DTYPES = tuple(TOLS)
 POISON = 50.0     # park-page fill: loud if it ever leaks into an output
+
+
+def _seed(*parts) -> int:
+    """Fold a grid cell's identifying parts (fixture name, geometry,
+    dtype, ...) into a stable 31-bit PRNG seed.  Every fixture in this
+    file derives its randomness from its own cell id ONLY — never from a
+    shared or ad-hoc key — so the repro recipe for any failure is simply
+    `pytest "tests/test_attention_conformance.py::<failing id>"`: the
+    single test regenerates bit-identical tensors regardless of which
+    other cells ran (or didn't) in the same process."""
+    return zlib.crc32(":".join(map(str, parts)).encode()) & 0x7FFFFFFF
 
 
 def _mk(key, shape, dtype):
@@ -73,11 +89,12 @@ def _oracle(q, k, v, kv_len=None, q_start=None, causal=True):
     return out.reshape(b, sq, h, dh).astype(q.dtype)
 
 
-def _paged_layout(k, v, page, seed=0):
+def _paged_layout(k, v, page, seed):
     """Scatter a contiguous (B, S, KV, Dh) cache into page pools through a
     SHUFFLED permutation block table, so a kernel that ignores the table
     (or mixes up rows) cannot pass by accident.  Page 0 is the reserved
-    park page, poisoned with a loud constant."""
+    park page, poisoned with a loud constant.  `seed` must come from
+    `_seed(...)` over the calling cell's id parts (see its docstring)."""
     b, s = k.shape[:2]
     assert s % page == 0
     n = s // page
@@ -121,7 +138,7 @@ FLASH_GEOMS = [
 @pytest.mark.parametrize("geom", FLASH_GEOMS, ids=lambda g: "x".join(map(str, g)))
 def test_flash_grid(geom, pad, causal, dtype):
     b, sq, sk, h, kv, dh = geom
-    ks = jax.random.split(jax.random.PRNGKey(hash(geom) & 0xFFFF), 3)
+    ks = jax.random.split(jax.random.PRNGKey(_seed("flash", geom, dtype)), 3)
     q = _mk(ks[0], (b, sq, h, dh), dtype)
     k = _mk(ks[1], (b, sk, kv, dh), dtype)
     v = _mk(ks[2], (b, sk, kv, dh), dtype)
@@ -140,14 +157,14 @@ def test_flash_paged_matches_contiguous(geom, dtype):
     contiguous kernel bit-for-bit-ish — same math, different DMA route."""
     b, sq, sk, h, kv, dh = geom
     page = 8
-    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    ks = jax.random.split(jax.random.PRNGKey(_seed("flash-paged", geom, dtype)), 3)
     q = _mk(ks[0], (b, sq, h, dh), dtype)
     k = _mk(ks[1], (b, sk, kv, dh), dtype)
     v = _mk(ks[2], (b, sk, kv, dh), dtype)
     kv_len = jnp.asarray(sk - 2, jnp.int32)
     cont = flash_attention(q, k, v, kv_len=kv_len, causal=True,
                            block_q=8, block_k=8, interpret=True)
-    pool_k, pool_v, bt = _paged_layout(k, v, page)
+    pool_k, pool_v, bt = _paged_layout(k, v, page, _seed("flash-paged", geom, dtype, "pool"))
     paged = flash_attention(q, pool_k, pool_v, kv_len=kv_len, causal=True,
                             block_q=8, block_k=8, interpret=True,
                             block_tables=bt, page_size=page)
@@ -167,9 +184,9 @@ DECODE_GEOMS = [
 ]
 
 
-def _decode_args(geom, dtype):
+def _decode_args(geom, dtype, tag="decode"):
     b, smax, h, kv, dh, pos = geom
-    ks = jax.random.split(jax.random.PRNGKey(smax), 3)
+    ks = jax.random.split(jax.random.PRNGKey(_seed(tag, geom, dtype)), 3)
     q = _mk(ks[0], (b, 1, h, dh), dtype)
     k = _mk(ks[1], (b, smax, kv, dh), dtype)
     v = _mk(ks[2], (b, smax, kv, dh), dtype)
@@ -185,7 +202,7 @@ def test_decode_grid(geom, layout, dtype):
     want = decode_attention_ref(q, k, v, pos)   # pinned against _oracle below
     if layout == "paged":
         page = 8
-        pool_k, pool_v, bt = _paged_layout(k, v, page)
+        pool_k, pool_v, bt = _paged_layout(k, v, page, _seed("decode", geom, dtype, "pool"))
         out = _NATIVES_INTERPRET["decode_attention"](q, pool_k, pool_v, pos, bt)
         ref = decode_attention_ref(q, pool_k, pool_v, pos, bt)
         _close(ref, want, dtype)                # ref gather == logical cache
@@ -215,9 +232,9 @@ CHUNK_GEOMS = [
 ]
 
 
-def _chunk_args(geom, dtype):
+def _chunk_args(geom, dtype, tag="chunk"):
     c, smax, h, kv, dh, pos = geom
-    ks = jax.random.split(jax.random.PRNGKey(c + smax), 3)
+    ks = jax.random.split(jax.random.PRNGKey(_seed(tag, geom, dtype)), 3)
     q = _mk(ks[0], (1, c, h, dh), dtype)
     k = _mk(ks[1], (1, smax, kv, dh), dtype)
     v = _mk(ks[2], (1, smax, kv, dh), dtype)
@@ -232,7 +249,7 @@ def test_chunk_grid(geom, layout, dtype):
     want = chunk_attention_ref(q, k, v, pos)
     if layout == "paged":
         page = geom[0]                          # serving invariant: page == C
-        pool_k, pool_v, bt = _paged_layout(k, v, page)
+        pool_k, pool_v, bt = _paged_layout(k, v, page, _seed("chunk", geom, dtype, "pool"))
         out = _NATIVES_INTERPRET["chunk_attention"](q, pool_k, pool_v, pos, bt)
         _close(chunk_attention_ref(q, pool_k, pool_v, pos, bt), want, dtype)
     else:
@@ -252,8 +269,8 @@ def test_paged_park_page_is_inert():
     """Zero (park) block-table entries past the written prefix must not
     leak the park page's poison into the output: the kv_len mask discards
     those lanes even though their DMAs are issued."""
-    q, k, v, pos = _decode_args((2, 32, 2, 2, 8, (5, 9)), "float32")
-    pool_k, pool_v, bt = _paged_layout(k, v, 8)
+    q, k, v, pos = _decode_args((2, 32, 2, 2, 8, (5, 9)), "float32", tag="park")
+    pool_k, pool_v, bt = _paged_layout(k, v, 8, _seed("park", "pool"))
     bt = bt.at[:, 2:].set(0)                    # park everything past page 1
     out = _NATIVES_INTERPRET["decode_attention"](q, pool_k, pool_v, pos, bt)
     want = decode_attention_ref(q, k, v, pos)   # pos < 16: logical prefix only
@@ -300,10 +317,209 @@ def test_decode_synth_roundtrip(geom, layout, dtype):
         page = 16                               # >= the space's smallest bk
         pool_k, pool_v, bt = _paged_layout(
             jnp.tile(k, (1, -(-32 // k.shape[1]), 1, 1))[:, :32],
-            jnp.tile(v, (1, -(-32 // v.shape[1]), 1, 1))[:, :32], page)
+            jnp.tile(v, (1, -(-32 // v.shape[1]), 1, 1))[:, :32], page,
+            _seed("decode-rt", geom, dtype, "pool"))
         _roundtrip("decode_attention", (q, pool_k, pool_v, pos, bt))
     else:
         _roundtrip("decode_attention", (q, k, v, pos))
+
+
+# ---------------------------------------------------------------------------
+# windowed (sliding-window causal) variants: dtype x geometry x layout x W
+#
+# Window column legend — W in {page, 2*page, full}:
+#   * page:  W == page size: the sharpest cut, most KV pages skipped;
+#   * 2page: window straddles a page boundary mid-page;
+#   * full:  W >= kv_len: must be BIT-IDENTICAL to the unwindowed kernel
+#            (same mask, same skip set, same float ops).
+# ---------------------------------------------------------------------------
+
+WINDOWS = ("page", "2page", "full")
+
+
+def _win(wtag, page, full):
+    """Resolve a window column tag to a concrete W (int32 scalar)."""
+    w = {"page": page, "2page": 2 * page, "full": full}[wtag]
+    return jnp.asarray(w, jnp.int32)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("wtag", WINDOWS)
+@pytest.mark.parametrize("geom", FLASH_GEOMS, ids=lambda g: "x".join(map(str, g)))
+def test_windowed_flash_grid(geom, wtag, dtype):
+    b, sq, sk, h, kv, dh = geom
+    ks = jax.random.split(jax.random.PRNGKey(_seed("wflash", geom, dtype)), 3)
+    q = _mk(ks[0], (b, sq, h, dh), dtype)
+    k = _mk(ks[1], (b, sk, kv, dh), dtype)
+    v = _mk(ks[2], (b, sk, kv, dh), dtype)
+    w = _win(wtag, 8, sk)
+    out = flash_attention(q, k, v, window=w, causal=True,
+                          block_q=8, block_k=8, interpret=True)
+    want = windowed_attention_ref(q, k, v, w)
+    _close(out, want, dtype, scale=5)
+    if wtag == "full":
+        full = flash_attention(q, k, v, causal=True,
+                               block_q=8, block_k=8, interpret=True)
+        assert np.array_equal(np.asarray(out), np.asarray(full))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("wtag", WINDOWS)
+@pytest.mark.parametrize("geom", [(1, 8, 8, 2, 2, 8), (1, 5, 40, 4, 2, 16)],
+                         ids=lambda g: "x".join(map(str, g)))
+def test_windowed_flash_paged_matches_contiguous(geom, wtag, dtype):
+    """Paged + windowed flash: the window-start meta row shifts the block
+    table to SMEM row 3+, so this pins the shifted index maps against the
+    contiguous windowed kernel."""
+    b, sq, sk, h, kv, dh = geom
+    page = 8
+    ks = jax.random.split(jax.random.PRNGKey(_seed("wflash-paged", geom, dtype)), 3)
+    q = _mk(ks[0], (b, sq, h, dh), dtype)
+    k = _mk(ks[1], (b, sk, kv, dh), dtype)
+    v = _mk(ks[2], (b, sk, kv, dh), dtype)
+    w = _win(wtag, page, sk)
+    cont = flash_attention(q, k, v, window=w, causal=True,
+                           block_q=8, block_k=8, interpret=True)
+    pool_k, pool_v, bt = _paged_layout(
+        k, v, page, _seed("wflash-paged", geom, dtype, "pool"))
+    paged = flash_attention(q, pool_k, pool_v, window=w, causal=True,
+                            block_q=8, block_k=8, interpret=True,
+                            block_tables=bt, page_size=page)
+    _close(paged, cont, dtype)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("wtag", WINDOWS)
+@pytest.mark.parametrize("geom", DECODE_GEOMS, ids=lambda g: f"smax{g[1]}b{g[0]}")
+def test_windowed_decode_grid(geom, layout, wtag, dtype):
+    q, k, v, pos = _decode_args(geom, dtype, tag="wdecode")
+    smax = geom[1]
+    w = _win(wtag, 8, smax)                     # full: W >= pos+1 for all rows
+    want = decode_attention_ref(q, k, v, pos, None, w)
+    if layout == "paged":
+        pool_k, pool_v, bt = _paged_layout(
+            k, v, 8, _seed("wdecode", geom, dtype, "pool"))
+        out = _NATIVES_INTERPRET["decode_attention"](q, pool_k, pool_v, pos, bt, w)
+        full = _NATIVES_INTERPRET["decode_attention"](q, pool_k, pool_v, pos, bt)
+        ref = decode_attention_ref(q, pool_k, pool_v, pos, bt, w)
+        _close(ref, want, dtype)                # ref gather == logical cache
+    else:
+        out = _NATIVES_INTERPRET["decode_attention"](q, k, v, pos, None, w)
+        full = _NATIVES_INTERPRET["decode_attention"](q, k, v, pos)
+    _close(out, want, dtype, scale=5)
+    if wtag == "full":
+        assert np.array_equal(np.asarray(out), np.asarray(full))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("wtag", WINDOWS)
+@pytest.mark.parametrize("geom", CHUNK_GEOMS, ids=lambda g: f"c{g[0]}pos{g[5]}")
+def test_windowed_chunk_grid(geom, layout, wtag, dtype):
+    q, k, v, pos = _chunk_args(geom, dtype, tag="wchunk")
+    c, smax = geom[0], geom[1]
+    w = _win(wtag, c, smax)                     # full: W >= pos+C for all geoms
+    want = chunk_attention_ref(q, k, v, pos, None, w)
+    if layout == "paged":
+        page = c                                # serving invariant: page == C
+        pool_k, pool_v, bt = _paged_layout(
+            k, v, page, _seed("wchunk", geom, dtype, "pool"))
+        out = _NATIVES_INTERPRET["chunk_attention"](q, pool_k, pool_v, pos, bt, w)
+        full = _NATIVES_INTERPRET["chunk_attention"](q, pool_k, pool_v, pos, bt)
+        _close(chunk_attention_ref(q, pool_k, pool_v, pos, bt, w), want, dtype)
+    else:
+        out = _NATIVES_INTERPRET["chunk_attention"](q, k, v, pos, None, w)
+        full = _NATIVES_INTERPRET["chunk_attention"](q, k, v, pos)
+    _close(out, want, dtype, scale=5)
+    if wtag == "full":
+        assert np.array_equal(np.asarray(out), np.asarray(full))
+
+
+def test_windowed_ref_anchors():
+    """Two sharp pins on the windowed oracle itself: W >= Sk reproduces the
+    causal oracle exactly, and W == 1 collapses the softmax onto each
+    query's own key (output == v at the query positions when group == 1)."""
+    b, sq, sk, h, kv, dh = 2, 8, 8, 2, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(_seed("wref", "anchors")), 3)
+    q = _mk(ks[0], (b, sq, h, dh), "float32")
+    k = _mk(ks[1], (b, sk, kv, dh), "float32")
+    v = _mk(ks[2], (b, sk, kv, dh), "float32")
+    wide = windowed_attention_ref(q, k, v, jnp.asarray(sk, jnp.int32))
+    _close(wide, attention_ref(q, k, v, causal=True), "float32")
+    one = windowed_attention_ref(q, k, v, jnp.asarray(1, jnp.int32))
+    want = jnp.repeat(v, h // kv, axis=2)       # each query sees only key i
+    _close(one, want, "float32")
+
+
+def test_windowed_dead_pages_are_inert():
+    """Pages wholly below the window start may be PARKed (remapped to the
+    poisoned page 0) by the scheduler's sliding-window recycler — the
+    kernel must never read through them: the window mask (and the skipped
+    grid steps) make their contents unobservable."""
+    geom = (2, 32, 2, 2, 8, (17, 20))
+    q, k, v, pos = _decode_args(geom, "float32", tag="wdead")
+    w = jnp.asarray(8, jnp.int32)
+    pool_k, pool_v, bt = _paged_layout(k, v, 8, _seed("wdead", "pool"))
+    # window starts at pos-7 (>= 10 for both rows): page 0 (keys 0..7) is
+    # wholly out-of-window for every row -> park it, as the scheduler would
+    bt = bt.at[:, 0].set(0)
+    out = _NATIVES_INTERPRET["decode_attention"](q, pool_k, pool_v, pos, bt, w)
+    want = decode_attention_ref(q, k, v, pos, None, w)
+    assert np.all(np.isfinite(np.asarray(out)))
+    _close(out, want, "float32", scale=5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("geom", FLASH_GEOMS, ids=lambda g: "x".join(map(str, g)))
+def test_windowed_synth_roundtrip(geom, dtype):
+    b, sq, sk, h, kv, dh = geom
+    ks = jax.random.split(jax.random.PRNGKey(_seed("wsynth", geom, dtype)), 3)
+    q = _mk(ks[0], (b, sq, h, dh), dtype)
+    k = _mk(ks[1], (b, sk, kv, dh), dtype)
+    v = _mk(ks[2], (b, sk, kv, dh), dtype)
+    # the space's smallest block_q is 16: shorter query extents synthesize
+    # fine but legitimately have no feasible tuning config
+    _roundtrip("windowed_attention", (q, k, v, jnp.asarray(8, jnp.int32)),
+               expect_feasible=sq >= 16)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("geom", DECODE_GEOMS, ids=lambda g: f"smax{g[1]}b{g[0]}")
+def test_windowed_decode_synth_roundtrip(geom, layout, dtype):
+    q, k, v, pos = _decode_args(geom, dtype, tag="wdecode-rt")
+    w = jnp.asarray(16, jnp.int32)
+    if layout == "paged":
+        page = 16                               # >= the space's smallest bk
+        pool_k, pool_v, bt = _paged_layout(
+            jnp.tile(k, (1, -(-32 // k.shape[1]), 1, 1))[:, :32],
+            jnp.tile(v, (1, -(-32 // v.shape[1]), 1, 1))[:, :32], page,
+            _seed("wdecode-rt", geom, dtype, "pool"))
+        _roundtrip("decode_attention", (q, pool_k, pool_v, pos, bt, w))
+    else:
+        _roundtrip("decode_attention", (q, k, v, pos, None, w))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("geom", CHUNK_GEOMS, ids=lambda g: f"c{g[0]}pos{g[5]}")
+def test_windowed_chunk_synth_roundtrip(geom, layout, dtype):
+    q, k, v, pos = _chunk_args(geom, dtype, tag="wchunk-rt")
+    w = jnp.asarray(16, jnp.int32)
+    ok = geom[0] >= 16                          # see test_chunk_synth_roundtrip
+    if layout == "paged":
+        page = max(geom[0], 16)
+        s = -(-k.shape[1] // page) * page
+        pool_k, pool_v, bt = _paged_layout(
+            jnp.pad(k, ((0, 0), (0, s - k.shape[1]), (0, 0), (0, 0))),
+            jnp.pad(v, ((0, 0), (0, s - v.shape[1]), (0, 0), (0, 0))), page,
+            _seed("wchunk-rt", geom, dtype, "pool"))
+        _roundtrip("chunk_attention", (q, pool_k, pool_v, pos, bt, w),
+                   expect_feasible=ok)
+    else:
+        _roundtrip("chunk_attention", (q, k, v, pos, None, w),
+                   expect_feasible=ok)
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
@@ -319,7 +535,8 @@ def test_chunk_synth_roundtrip(geom, layout, dtype):
         s = -(-k.shape[1] // page) * page
         pool_k, pool_v, bt = _paged_layout(
             jnp.pad(k, ((0, 0), (0, s - k.shape[1]), (0, 0), (0, 0))),
-            jnp.pad(v, ((0, 0), (0, s - v.shape[1]), (0, 0), (0, 0))), page)
+            jnp.pad(v, ((0, 0), (0, s - v.shape[1]), (0, 0), (0, 0))), page,
+            _seed("chunk-rt", geom, dtype, "pool"))
         _roundtrip("chunk_attention", (q, pool_k, pool_v, pos, bt),
                    expect_feasible=ok)
     else:

@@ -1,5 +1,7 @@
 """Hypothesis property tests: kernels vs oracles across random shapes."""
 
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,14 +10,19 @@ import pytest
 pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core.platform import POD_SIM
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.flash_attention_ref import attention_ref
+from repro.kernels.flash_attention_ref import attention_ref, decode_attention_ref
 from repro.kernels.moe_gmm import moe_gmm
 from repro.kernels.moe_gmm_ref import moe_gmm_exact
+from repro.kernels.ops import _NATIVES_INTERPRET, tuners
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.rmsnorm_ref import rmsnorm_ref
+from repro.tuning import bucket_shapes
+from repro.tuning.config import BlockConfig
 
 SETTINGS = dict(max_examples=10, deadline=None)
+POISON = 50.0
 
 
 @settings(**SETTINGS)
@@ -75,3 +82,99 @@ def test_moe_gmm_property(t, e, seed):
     out = moe_gmm(x, w, gs, block_m=8, block_n=8, interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(moe_gmm_exact(x, w, gs)),
                                atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    sk=st.sampled_from([8, 16]),
+    w1=st.integers(1, 16),
+    delta=st.integers(0, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_window_widening_is_monotone(sk, w1, delta, seed):
+    """Widening the window never drops attended keys.
+
+    With k == 0 every score is 0, so the masked softmax is uniform over
+    the attended set; one-hot values then make the kernel emit each set's
+    indicator / |set| directly.  The support at window W must be a subset
+    of the support at W + delta, and its size exactly min(W, i + 1)."""
+    w1 = min(w1, sk)
+    dh = 16
+    q = jax.random.normal(jax.random.PRNGKey(seed), (1, sk, 1, dh))
+    k = jnp.zeros((1, sk, 1, dh))
+    v = jnp.eye(sk, dh)[None, :, None, :]       # v[0, s, 0, s] = 1
+    sup = []
+    for w in (w1, w1 + delta):
+        o = flash_attention(q, k, v, window=jnp.asarray(w, jnp.int32),
+                            causal=True, block_q=8, block_k=8, interpret=True)
+        sup.append(np.asarray(o)[0, :, 0, :sk] > 1e-3)
+    narrow, wide = sup
+    assert np.all(wide | ~narrow), "widening the window dropped a key"
+    want = np.minimum(w1, np.arange(sk) + 1)    # (i - W, i] clipped at 0
+    assert np.array_equal(narrow.sum(-1), want)
+
+
+@settings(**SETTINGS)
+@given(
+    pos=st.integers(0, 31),
+    w=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_out_of_window_pages_are_inert(pos, w, seed):
+    """Pages wholly below the window start may hold arbitrary poison (the
+    scheduler PARKs and recycles exactly those pages mid-flight): decode
+    output must match the windowed ref on the clean logical cache."""
+    b, smax, kv, h, dh, page = 1, 32, 1, 2, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, dh))
+    k = jax.random.normal(ks[1], (b, smax, kv, dh))
+    v = jax.random.normal(ks[2], (b, smax, kv, dh))
+    posv = jnp.asarray(pos, jnp.int32)
+    wv = jnp.asarray(w, jnp.int32)
+    want = decode_attention_ref(q, k, v, posv, None, wv)
+    n = smax // page
+    pool_k = jnp.full((1 + n, page, kv, dh), POISON).at[1:].set(
+        k.reshape(n, page, kv, dh))
+    pool_v = jnp.full((1 + n, page, kv, dh), POISON).at[1:].set(
+        v.reshape(n, page, kv, dh))
+    bt = jnp.arange(1, n + 1, dtype=jnp.int32)[None]
+    dead = max(0, pos + 1 - w) // page          # the scheduler's dead-page rule
+    bt = bt.at[0, :dead].set(0)
+    out = _NATIVES_INTERPRET["decode_attention"](q, pool_k, pool_v, posv, bt, wv)
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    sq=st.sampled_from([16, 32]),
+    extra=st.sampled_from([0, 16]),
+    group=st.sampled_from([1, 2]),
+    kv=st.sampled_from([1, 2]),
+    dh=st.sampled_from([8, 16]),
+    w=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_windowed_bucket_roundtrip_is_feasible(sq, extra, group, kv, dh, w, seed):
+    """bucket_shapes -> args_from_shapes round-trips every windowed
+    geometry into a workload with the identical bucket (the window rides
+    the bucket key as a scalar part) and at least one feasible config."""
+    sk = sq + extra
+    h = kv * group
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, sq, h, dh))
+    k = jax.random.normal(ks[1], (1, sk, kv, dh))
+    v = jax.random.normal(ks[2], (1, sk, kv, dh))
+    t = tuners()["windowed_attention"]
+    shapes, dtype = bucket_shapes((q, k, v, jnp.asarray(w, jnp.int32)))
+    synth = t.args_from_shapes(POD_SIM, shapes, dtype)
+    assert synth is not None, f"no synth for bucket {shapes}"
+    shapes2, dtype2 = bucket_shapes(synth)
+    assert shapes2 == shapes and dtype2 == dtype
+    feasible = [
+        cfg for cfg in (BlockConfig.make(**dict(zip(t.space, vals)))
+                        for vals in itertools.product(*t.space.values()))
+        if t.feasible(cfg, POD_SIM, synth)
+    ]
+    assert feasible, f"no feasible config for bucket {shapes}"

@@ -183,6 +183,57 @@ def test_capture_warm_redeploy_zero_misses(tmp_path):
     assert TuningCache.load(cache.path).get(recorded_key) is not None
 
 
+def test_windowed_capture_warm_redeploy_zero_misses(tmp_path):
+    """The windowed ops ride the same capture -> warm -> redeploy loop:
+    the traced window puts a scalar part in the bucket key, so windowed
+    traffic warms (and later dispatches) under its own geometry-exact
+    cache entries — zero misses on the second deploy."""
+    host_env = {
+        "REPRO_PLATFORM": "pod-sim",
+        "REPRO_TUNING_CACHE": str(tmp_path / "tuning.json"),
+        "REPRO_WORKLOAD_PROFILE": str(tmp_path / "workload.json"),
+    }
+    bundle = Bundle(
+        name="wcap", tag="t", model_config={}, recipe={},
+        required_ops={"windowed_attention": str(ABIS["windowed_attention"])},
+        env={})
+
+    # capture: one windowed geometry, window as a traced int32 scalar
+    rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c1 = rt.deploy(bundle, native_ops=True, autotune=False, profile=True)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 32))
+    k = jax.random.normal(ks[1], (1, 32, 2, 32))
+    v = jax.random.normal(ks[2], (1, 32, 2, 32))
+    win = jnp.asarray(16, jnp.int32)
+    for _ in range(3):
+        jax.block_until_ready(c1.binding["windowed_attention"](q, k, v, win))
+    rt.cleanup()   # persists
+
+    prof = WorkloadProfile.load(tmp_path / "workload.json")
+    top = prof.top(op="windowed_attention")
+    assert top and top[0][0].shapes.endswith(",scalar")   # window in the key
+
+    # warm
+    cache = TuningCache.load(tmp_path / "tuning.json")
+    results = warm_cache(prof, cache, POD_SIM,
+                         registry=register_all(OpRegistry()))
+    cache.save()
+    assert [r.status for r in results
+            if r.op == "windowed_attention"] == ["warmed"]
+
+    # redeploy: cache-hit, and live traffic dispatches geometry-exact
+    rt2 = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c2 = rt2.deploy(bundle, native_ops=True, autotune=True)
+    report = next(r for r in c2.binding.reports
+                  if r.op == "windowed_attention")
+    assert report.tuning == "cache-hit"
+    jax.block_until_ready(c2.binding["windowed_attention"](q, k, v, win))
+    stats = c2.binding.impl("windowed_attention").fn.stats
+    rt2.cleanup()
+    assert stats["exact"] >= 1 and not stats["nearest"] and not stats["default"]
+
+
 def test_warm_moe_narrow_d_geometry_searches(tmp_path):
     """moe_gmm geometries with D below the block_k space minimum must still
     search (the kernel degrades block_k via gcd), not silently persist the
@@ -368,7 +419,8 @@ def test_tuning_context_without_profile_uses_canonical(tmp_path):
 
 
 @pytest.mark.parametrize("op", ["rmsnorm", "attention", "decode_attention",
-                                "chunk_attention", "ssd_scan", "moe_gmm"])
+                                "chunk_attention", "windowed_attention",
+                                "ssd_scan", "moe_gmm"])
 def test_synthesizers_roundtrip_canonical_bucket(op):
     """Every op's args_from_shapes must rebuild args whose bucket equals the
     recorded one — otherwise warm would persist under a key deploys never
