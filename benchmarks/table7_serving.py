@@ -40,6 +40,27 @@ reservations.  Its scoreboard adds:
                                 ticks): pages reserved for generation
                                 headroom but not yet written
 
+``--quantize {int8,fp8}`` adds a quantized-deploy run (1-byte weight
+storage subtrees + quantized KV cache, docs/quantization.md) over the
+same request set.  Its scoreboard adds:
+
+  table7/quantized/kv_bytes            quantized KV-cache footprint, with
+                                       the fp32 KV and weight ratios
+  table7/quantized/quality_logit_delta max |prefill logit - fp32 logit|
+                                       on a fixed probe prompt, plus the
+                                       served-token match fraction (info
+                                       only: greedy argmax on a reduced
+                                       random-init model flips easily)
+  table7/quantized/admitted_under_budget  the deployment-admission demo:
+                                       a byte budget between the two
+                                       footprints rejects the fp32 deploy
+                                       (DeploymentRejected) and admits
+                                       the quantized one
+
+With ``--smoke`` it additionally asserts the KV cache shrinks >=3x and
+weights >=2.5x, the budget gate rejects fp32 while admitting quantized,
+and the probe-prompt logit delta stays inside QUANT_LOGIT_ENVELOPE.
+
 ``--smoke`` (CLI) runs a tiny workload through both modes and exits
 non-zero unless every accepted request completes, the chunked path's
 per-request compiled-step counts match the pinned invariants
@@ -130,7 +151,7 @@ def make_requests(n: int, *, vocab: int, chunk: int, max_new: int,
 
 def serve_once(cfg, container, reqs: list[Request], *, mode: str,
                slots: int, max_len: int, chunk: int,
-               interleave: int) -> dict:
+               interleave: int, quantize: str | None = None) -> dict:
     """One full serving run; returns the per-mode scoreboard dict.
 
     Throwaway requests are served first so jit compilation is paid
@@ -146,18 +167,35 @@ def serve_once(cfg, container, reqs: list[Request], *, mode: str,
     park page) spread over twice the slots — whether more of those slots
     actually run concurrently is then purely the admission policy's
     doing, which is the comparison the paged scoreboard prices.
+
+    mode "quantized" mirrors the contiguous chunked run but deploys with
+    1-byte weights and a quantized KV cache; its board carries the
+    deployment footprint and a fixed-prompt prefill-logit probe so the
+    quantized scoreboard can price KV bytes and the quality delta
+    against the fp32 chunked run.
     """
     paged = mode == "paged"
     n_slots = 2 * slots if paged else slots
     num_pages = slots * max_len // chunk if paged else None
+    prefill_mode = "chunked" if mode in ("paged", "quantized") else mode
     server = Server(cfg, container, slots=n_slots, max_len=max_len,
-                    chunk=chunk, prefill_mode="chunked" if paged else mode,
-                    interleave=interleave, paged=paged, num_pages=num_pages)
+                    chunk=chunk, prefill_mode=prefill_mode,
+                    interleave=interleave, paged=paged, num_pages=num_pages,
+                    quantize=quantize)
     warm_rng = np.random.default_rng(0)
     for plen in (chunk, min(3 * chunk + 1, max_len - 4)):
         prompt = warm_rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
         server.submit(Request(rid=-1, prompt=prompt, max_new=2))
     server.run()
+    probe = None
+    if mode in ("chunked", "quantized"):
+        # fixed-prompt prefill-logit probe: same tokens under every
+        # deployment, so max|logit delta| is purely the quantization
+        probe_toks = (np.random.default_rng(11)
+                      .integers(0, cfg.vocab_size, size=chunk)
+                      .astype(np.int32))
+        probe = np.asarray(server.engine.prefill_step(0, probe_toks, 0),
+                           np.float32)
     server.requests.clear()
     server.engine.prefill_calls = 0
     server.engine.decode_calls = 0
@@ -179,6 +217,9 @@ def serve_once(cfg, container, reqs: list[Request], *, mode: str,
     tokens = sum(len(r.tokens) for r in done)
     board = {
         "mode": mode,
+        "quantize": quantize or "none",
+        "footprint": server.engine.footprint,
+        "_probe": probe,
         "chunk": 1 if mode == "decode" else chunk,
         "slots": n_slots,
         "submitted": len(reqs),
@@ -231,7 +272,7 @@ def check_invariants(boards: dict, chunk: int, max_new: int) -> list[str]:
                          f"requests completed")
         for pr in board["per_request"]:
             ln = pr["prompt_len"]
-            if mode in ("chunked", "paged"):
+            if mode in ("chunked", "paged", "quantized"):
                 want_p, want_d = -(-ln // chunk), pr["max_new"] - 1
             else:
                 want_p, want_d = ln, pr["max_new"]
@@ -269,6 +310,42 @@ def check_invariants(boards: dict, chunk: int, max_new: int) -> list[str]:
         if pg["ttft_p50_ms"] > 1.1 * ch["ttft_p50_ms"] + 5.0:
             fails.append(f"paged p50 TTFT {pg['ttft_p50_ms']:.1f}ms regresses "
                          f">10%+5ms over chunked {ch['ttft_p50_ms']:.1f}ms")
+    return fails
+
+
+# measured fixed-prompt prefill deltas on the reduced random-init model
+# (weights AND KV quantized, noise compounding through every layer) are
+# ~0.23x (int8) / ~0.20x (fp8) of the fp32 logit magnitude; the gate
+# sits ~3x above, relative to that magnitude, so it trips on a broken
+# scale path (rel >= 1: scales ignored or misapplied), not on
+# quantization noise
+QUANT_LOGIT_ENVELOPE = {"int8": 0.6, "fp8": 0.6}
+
+
+def check_quantized_invariants(boards: dict, fmt: str,
+                               budget_demo: dict) -> list[str]:
+    """The --quantize --smoke assertions: footprint shrink, budget-gated
+    admission, and a bounded prefill-logit delta vs the fp32 run."""
+    fails = []
+    fp = boards["chunked"]["footprint"]
+    qf = boards["quantized"]["footprint"]
+    if qf["kv_bytes"] * 3.0 > fp["kv_bytes"]:
+        fails.append(f"quantized KV cache {qf['kv_bytes']:,}B not >=3x "
+                     f"below fp32 {fp['kv_bytes']:,}B")
+    if qf["weight_bytes"] * 2.5 > fp["weight_bytes"]:
+        fails.append(f"quantized weights {qf['weight_bytes']:,}B not >=2.5x "
+                     f"below fp32 {fp['weight_bytes']:,}B")
+    if not budget_demo["fp32_rejected"]:
+        fails.append(f"fp32 deploy was admitted under the "
+                     f"{budget_demo['budget']:,}B budget it cannot fit")
+    if not budget_demo["quantized_admitted"]:
+        fails.append(f"quantized deploy was rejected under the "
+                     f"{budget_demo['budget']:,}B budget it fits")
+    rel = boards["quantized"]["quality_rel_delta"]
+    if rel > QUANT_LOGIT_ENVELOPE[fmt]:
+        fails.append(f"quantized prefill logits drifted {rel:.3f}x of the "
+                     f"fp32 logit magnitude (envelope "
+                     f"{QUANT_LOGIT_ENVELOPE[fmt]}x)")
     return fails
 
 
@@ -594,6 +671,11 @@ def main(argv=None) -> int:
     ap.add_argument("--paged", action="store_true",
                     help="add a paged-KV-cache run (2x slots from the same "
                          "cache-memory budget) to the scoreboard")
+    ap.add_argument("--quantize", choices=("none", "int8", "fp8"),
+                    default="none",
+                    help="add a quantized-deploy run (1-byte weights + "
+                         "quantized KV) with footprint, budget-admission, "
+                         "and quality-delta rows (docs/quantization.md)")
     ap.add_argument("--fleet", action="store_true",
                     help="run the disaggregated-fleet storm instead: capture "
                          "-> warm -> bundle export, then a static vs elastic "
@@ -633,7 +715,9 @@ def main(argv=None) -> int:
     reqs = make_requests(args.requests, vocab=cfg.vocab_size,
                          chunk=args.chunk, max_new=args.max_new)
 
+    fmt = None if args.quantize == "none" else args.quantize
     modes = _MODES + (("paged",) if args.paged else ())
+    modes += ("quantized",) if fmt else ()
     boards = {}
     for mode in modes:
         boards[mode] = serve_once(
@@ -641,7 +725,46 @@ def main(argv=None) -> int:
             [Request(rid=r.rid, prompt=r.prompt.copy(), max_new=r.max_new)
              for r in reqs],
             mode=mode, slots=args.slots, max_len=args.max_len,
-            chunk=args.chunk, interleave=args.interleave)
+            chunk=args.chunk, interleave=args.interleave,
+            quantize=fmt if mode == "quantized" else None)
+
+    budget_demo = None
+    if fmt:
+        # the admission demo: a budget only the quantized footprint fits
+        from repro.launch.serve import DeploymentRejected, JaxEngine
+
+        fp_total = boards["chunked"]["footprint"]["total_bytes"]
+        q_total = boards["quantized"]["footprint"]["total_bytes"]
+        budget = (fp_total + q_total) // 2
+        try:
+            JaxEngine(cfg, container, slots=args.slots, max_len=args.max_len,
+                      chunk=args.chunk, memory_budget=budget)
+            fp32_rejected = False
+        except DeploymentRejected:
+            fp32_rejected = True
+        try:
+            JaxEngine(cfg, container, slots=args.slots, max_len=args.max_len,
+                      chunk=args.chunk, quantize=fmt, memory_budget=budget)
+            quantized_admitted = True
+        except DeploymentRejected:
+            quantized_admitted = False
+        budget_demo = {"budget": budget, "fp32_rejected": fp32_rejected,
+                       "quantized_admitted": quantized_admitted}
+
+        # quality delta: fixed-prompt prefill logits + served-token match
+        probe_fp = boards["chunked"].pop("_probe")
+        probe_q = boards["quantized"].pop("_probe")
+        qb = boards["quantized"]
+        qb["quality_logit_delta"] = float(np.abs(probe_q - probe_fp).max())
+        qb["quality_rel_delta"] = (qb["quality_logit_delta"]
+                                   / max(float(np.abs(probe_fp).max()), 1e-9))
+        by_rid = {pr["rid"]: pr["tokens"]
+                  for pr in boards["chunked"]["per_request"]}
+        matched = sum(1 for pr in qb["per_request"]
+                      if pr["tokens"] == by_rid.get(pr["rid"]))
+        qb["token_match_frac"] = matched / max(len(qb["per_request"]), 1)
+    for b in boards.values():
+        b.pop("_probe", None)
     runtime.cleanup()
 
     slo_s = (args.slo_ms / 1e3 if args.slo_ms is not None
@@ -669,6 +792,27 @@ def main(argv=None) -> int:
             print(f"table7/paged/fragmentation,{b['fragmentation']:.2f},"
                   f"pages_alloc_mean={b['pages_allocated_mean']:.1f};"
                   f"pages_used_mean={b['pages_used_mean']:.1f}")
+        if mode == "quantized":
+            fpb = boards["chunked"]["footprint"]
+            qfb = b["footprint"]
+            print(f"table7/quantized/kv_bytes,{qfb['kv_bytes']},"
+                  f"fp32_kv={fpb['kv_bytes']};"
+                  f"kv_ratio={fpb['kv_bytes'] / qfb['kv_bytes']:.2f}x;"
+                  f"weight_ratio="
+                  f"{fpb['weight_bytes'] / qfb['weight_bytes']:.2f}x;"
+                  f"fmt={b['quantize']}")
+            print(f"table7/quantized/quality_logit_delta,"
+                  f"{b['quality_logit_delta']:.3f},"
+                  f"rel={b['quality_rel_delta']:.3f}x;"
+                  f"envelope={QUANT_LOGIT_ENVELOPE[b['quantize']]}x;"
+                  f"token_match={b['token_match_frac']:.2f};"
+                  f"greedy_argmax_flips_are_info_only")
+            print(f"table7/quantized/admitted_under_budget,"
+                  f"{int(budget_demo['quantized_admitted'])},"
+                  f"budget={budget_demo['budget']};"
+                  f"fp32_rejected={int(budget_demo['fp32_rejected'])};"
+                  f"fp32_total={fpb['total_bytes']};"
+                  f"quant_total={qfb['total_bytes']}")
     speedup = (boards["decode"]["ttft_p50_ms"]
                / max(boards["chunked"]["ttft_p50_ms"], 1e-9))
     print(f"table7/summary/ttft_p50_speedup,{speedup:.2f},"
@@ -688,6 +832,8 @@ def main(argv=None) -> int:
     if not args.smoke:
         return 0
     fails = check_invariants(boards, args.chunk, args.max_new)
+    if fmt:
+        fails += check_quantized_invariants(boards, fmt, budget_demo)
     for f in fails:
         print(f"FAIL: {f}")
     if fails:
@@ -698,6 +844,13 @@ def main(argv=None) -> int:
     if args.paged:
         msg += ("; paged admission served strictly more concurrent requests "
                 "from the same cache-memory budget with identical tokens")
+    if fmt:
+        qb = boards["quantized"]
+        msg += (f"; the {fmt} deploy fit a budget that rejected fp32, shrank "
+                f"the KV cache "
+                f"{boards['chunked']['footprint']['kv_bytes'] / qb['footprint']['kv_bytes']:.1f}x, "
+                f"and held the prefill-logit delta to "
+                f"{qb['quality_rel_delta']:.2f}x of the fp32 magnitude")
     print(msg)
     return 0
 

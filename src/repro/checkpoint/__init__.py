@@ -3,6 +3,7 @@ from repro.checkpoint.manifest import (
     file_op_counts,
     latest_step,
     load_naive,
+    quantize_tree,
     restore_checkpoint,
     save_checkpoint,
     save_naive,
@@ -10,5 +11,5 @@ from repro.checkpoint.manifest import (
 
 __all__ = [
     "AsyncCheckpointer", "file_op_counts", "latest_step", "load_naive",
-    "restore_checkpoint", "save_checkpoint", "save_naive",
+    "quantize_tree", "restore_checkpoint", "save_checkpoint", "save_naive",
 ]

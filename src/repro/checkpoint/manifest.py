@@ -41,6 +41,7 @@ __all__ = [
     "restore_checkpoint",
     "latest_step",
     "AsyncCheckpointer",
+    "quantize_tree",
     "save_naive",
     "load_naive",
     "file_op_counts",
@@ -79,13 +80,74 @@ def _unflatten_into(skeleton: Any, values: dict[str, np.ndarray], prefix: str = 
 # --------------------------------------------------------------------------- #
 # single-manifest format
 # --------------------------------------------------------------------------- #
+# subtrees whose apply functions consume raw arrays (no dequant hook), so
+# their weights must stay full-precision even in a quantized save
+_QUANT_EXCLUDED_SUBTREES = ("moe", "ssm")
+
+
+def _quantizable(path: str, leaf: Any) -> bool:
+    """Leaves the checkpoint quantizer touches: matmul-style float weights
+    (name ``w*`` or the ``tok`` embedding, >= 2-d) outside the moe/ssm
+    subtrees.  Norm gains, biases, and integer leaves stay full-precision —
+    they are a rounding error of the footprint, and once layer-stacked a
+    norm gain is 2-d too, so the filter is by name, not just rank."""
+    dtype = getattr(leaf, "dtype", None)
+    shape = getattr(leaf, "shape", None)
+    if dtype is None or shape is None or len(shape) < 2:
+        return False
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return False
+    parts = path.split("/")
+    if any(seg in _QUANT_EXCLUDED_SUBTREES for seg in parts):
+        return False
+    return parts[-1].startswith("w") or parts[-1] == "tok"
+
+
+def quantize_tree(tree: Any, fmt: str) -> Any:
+    """In-memory analogue of a quantized save + ``dequantize=False``
+    restore: every quantizable leaf becomes a ``{"q", "scale"}`` storage
+    subtree (codes + axis -2 per-channel fp32 scales), everything else
+    passes through.  The serving engine uses this to deploy a freshly
+    initialized model in storage form without touching disk."""
+    from repro.kernels.quant import FORMATS, quantize_per_channel
+
+    if fmt not in FORMATS:
+        raise ValueError(f"quantize format must be one of {FORMATS}, got {fmt!r}")
+    values: dict[str, Any] = {}
+    for path, leaf in _flatten(tree):
+        if _quantizable(path, leaf):
+            q, s = quantize_per_channel(jnp.asarray(leaf), axis=-2, fmt=fmt)
+            values[path] = {"q": q, "scale": s}
+        else:
+            values[path] = leaf
+    return _unflatten_into(tree, values)
+
+
 def save_checkpoint(
     directory: Path | str,
     step: int,
     tree: Any,
     *,
     extra_meta: dict | None = None,
+    quantize: str | None = None,
 ) -> Path:
+    """Write one manifest + blob checkpoint.
+
+    ``quantize`` ("int8"/"fp8") stores every quantizable leaf (see
+    _quantizable) as 1-byte code points with per-channel fp32 scales:
+    the leaf's entry gains a ``"quant": {format, axis, orig_dtype}``
+    block and a companion ``<path>.scale`` entry holds the scales.
+    Axis -2 is reduced away: for a plain (d, f) weight that is the
+    contraction dim — one scale per output channel, the layout
+    quant_matmul consumes directly — and for layer-stacked leaves
+    ((layers, ...) from the scanned decoder) it keeps the leading stack
+    axis intact, so scales scan alongside their codes.
+    restore_checkpoint dequantizes transparently by default.
+    """
+    from repro.kernels.quant import FORMATS, quantize_per_channel
+
+    if quantize is not None and quantize not in FORMATS:
+        raise ValueError(f"quantize must be one of {FORMATS}, got {quantize!r}")
     directory = Path(directory)
     ckpt_dir = directory / f"step_{step:010d}"
     tmp_dir = directory / f".tmp_step_{step:010d}"
@@ -96,8 +158,8 @@ def save_checkpoint(
     offset = 0
     blob_path = tmp_dir / "data.blob"
     with open(blob_path, "wb") as blob:
-        for path, leaf in leaves:
-            arr = np.asarray(jax.device_get(leaf))
+        def write_leaf(path: str, arr: np.ndarray, extra: dict | None = None):
+            nonlocal offset
             raw = arr.tobytes()
             digest = hashlib.sha256(raw).hexdigest()[:16]
             entries[path] = {
@@ -107,8 +169,22 @@ def save_checkpoint(
                 "nbytes": len(raw),
                 "sha256_16": digest,
             }
+            if extra:
+                entries[path].update(extra)
             blob.write(raw)
             offset += len(raw)
+
+        for path, leaf in leaves:
+            if quantize is not None and _quantizable(path, leaf):
+                x = jnp.asarray(leaf)
+                q, s = quantize_per_channel(x, axis=-2, fmt=quantize)
+                write_leaf(path, np.asarray(jax.device_get(q)), {
+                    "quant": {"format": quantize, "axis": -2,
+                              "orig_dtype": str(x.dtype)},
+                })
+                write_leaf(path + ".scale", np.asarray(jax.device_get(s)))
+            else:
+                write_leaf(path, np.asarray(jax.device_get(leaf)))
     manifest = {
         "format": "repro-manifest-v1",
         "step": step,
@@ -137,10 +213,21 @@ def restore_checkpoint(
     step: int | None = None,
     sharding_fn: Callable[[str, np.ndarray], Any] | None = None,
     verify: bool = False,
+    dequantize: bool = True,
 ) -> tuple[Any, int]:
     """Restore into `skeleton`'s structure.  `sharding_fn(path, arr)` may
     return a jax.sharding.Sharding to place each leaf — reshard-on-restore
-    is what makes restarts mesh-shape-agnostic (elastic rescaling)."""
+    is what makes restarts mesh-shape-agnostic (elastic rescaling).
+
+    Entries a quantized save wrote (``"quant"`` block + ``<path>.scale``
+    companion) are dequantized back to their original dtype by default.
+    ``dequantize=False`` keeps the storage form: the leaf restores as a
+    ``{"q": codes, "scale": scales}`` dict — the quantized-weight subtree
+    layout the serving model binds against quant_matmul directly, so a
+    quantized deploy never materializes the full-precision weights.
+    """
+    from repro.kernels.quant import dequantize as dequant
+
     directory = Path(directory)
     if step is None:
         step = latest_step(directory)
@@ -150,21 +237,42 @@ def restore_checkpoint(
     manifest = json.loads((ckpt_dir / "manifest.json").read_text())
     blob = np.memmap(ckpt_dir / "data.blob", dtype=np.uint8, mode="r")
 
-    values: dict[str, Any] = {}
+    arrays: dict[str, np.ndarray] = {}
     for path, ent in manifest["entries"].items():
         raw = blob[ent["offset"] : ent["offset"] + ent["nbytes"]]
         if verify:
             digest = hashlib.sha256(raw.tobytes()).hexdigest()[:16]
             if digest != ent["sha256_16"]:
                 raise IOError(f"checksum mismatch for {path} in step {step}")
-        arr = np.frombuffer(raw.tobytes(), dtype=np.dtype(ent["dtype"])).reshape(
-            ent["shape"]
-        )
+        arrays[path] = np.frombuffer(
+            raw.tobytes(), dtype=np.dtype(ent["dtype"])
+        ).reshape(ent["shape"])
+
+    def place(path: str, arr: Any) -> Any:
         if sharding_fn is not None:
-            sh = sharding_fn(path, arr)
-            values[path] = jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr)
+            sh = sharding_fn(path, np.asarray(arr))
+            if sh is not None:
+                return jax.device_put(arr, sh)
+        return jnp.asarray(arr)
+
+    values: dict[str, Any] = {}
+    for path, ent in manifest["entries"].items():
+        if path.endswith(".scale") and path[: -len(".scale")] in manifest["entries"]:
+            continue                      # companion of a quantized leaf
+        qmeta = ent.get("quant")
+        arr = arrays[path]
+        if qmeta is not None:
+            scale = arrays[path + ".scale"]
+            if dequantize:
+                values[path] = place(path, dequant(
+                    jnp.asarray(arr), jnp.asarray(scale),
+                    axis=int(qmeta["axis"]),
+                    dtype=jnp.dtype(qmeta["orig_dtype"])))
+            else:
+                values[path] = {"q": place(path, arr),
+                                "scale": place(path + ".scale", scale)}
         else:
-            values[path] = jnp.asarray(arr)
+            values[path] = place(path, arr)
     return _unflatten_into(skeleton, values), step
 
 

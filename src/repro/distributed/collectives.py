@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels.quant import compress_int8
+
 __all__ = [
     "compat_shard_map",
     "flat_grad_allreduce",
@@ -68,10 +70,11 @@ def flat_grad_allreduce(grads: Any, *, data_axis: str = "data",
     return _pmean_tree(grads, axes)
 
 
-def _compress_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+# the DCN gradient compressor now lives in the shared quant module so
+# the serving kernels and the checkpoint schema quantize with the same
+# numerics the conformance grid pins; kept under its old private name
+# for the call below and existing importers
+_compress_int8 = compress_int8
 
 
 def hierarchical_grad_allreduce(

@@ -48,6 +48,16 @@ q_start = Sk - Sq).  W >= kv_len degenerates to the ordinary masks —
 bit-identical output, every block still run.  Out-of-window pages may be
 reused (parked) by the serving engine: their scores are masked to -inf
 before the softmax, so stale contents are inert.
+
+**Quantized KV cache** (``k_scale``/``v_scale``): k/v (contiguous or
+paged pools) may be stored int8 or fp8 with per-batch float32
+dequantization scales.  The scales ride the same int32 SMEM meta as
+kv_len/q_start/ws — their fp32 bits reinterpreted via
+``jax.lax.bitcast_convert_type`` on the way in and bitcast back inside
+the kernel — so the scalar-prefetch ABI stays single-dtype.  Tiles are
+dequantized in VMEM after the DMA: the cache streams from HBM at one
+byte per element, the softmax math stays fp32
+(docs/quantization.md pins the per-format error envelopes).
 """
 
 from __future__ import annotations
@@ -70,8 +80,9 @@ _NEG_INF = -1e30
 
 
 def _flash_kernel(
-    meta_ref,       # SMEM (2[+1], B) int32: row 0 kv_len, row 1 q_start,
-                    # row 2 window start (windowed only)
+    meta_ref,       # SMEM (2[+1][+2], B) int32: row 0 kv_len, row 1 q_start,
+                    # then window start (windowed only), then the fp32
+                    # k/v scales bitcast to int32 (quantized KV only)
     q_ref,          # (1, bq, 1, dh)
     k_ref,          # (1, bk, 1, dh)
     v_ref,          # (1, bk, 1, dh)
@@ -88,6 +99,7 @@ def _flash_kernel(
     q_offset: int,      # sk - sq: static diagonal for the skip heuristic
     dyn_offset: bool,   # True when q_start is a traced value (chunk prefill)
     windowed: bool,     # True when meta carries a window-start row
+    quantized: bool,    # True when meta carries bitcast k/v scale rows
 ):
     bi = pl.program_id(0)
     iq = pl.program_id(2)
@@ -95,6 +107,12 @@ def _flash_kernel(
     kvl = meta_ref[0, bi]
     qs = meta_ref[1, bi]
     ws = meta_ref[2, bi] if windowed else None
+    if quantized:
+        # the scales ride the int32 SMEM meta bit-exactly: fp32 bits in,
+        # fp32 bits out (docs/quantization.md, "kernel meta ABI")
+        srow = 3 if windowed else 2
+        ksc = jax.lax.bitcast_convert_type(meta_ref[srow, bi], jnp.float32)
+        vsc = jax.lax.bitcast_convert_type(meta_ref[srow + 1, bi], jnp.float32)
 
     @pl.when(ik == 0)
     def _init():
@@ -123,6 +141,11 @@ def _flash_kernel(
         q = q_ref[0, :, 0, :].astype(jnp.float32) * scale
         k = k_ref[0, :, 0, :].astype(jnp.float32)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            # dequantize the 1-byte cache tiles in VMEM: k/v stream from
+            # HBM at a quarter of the fp32 bytes, math stays fp32
+            k = k * ksc
+            v = v * vsc
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (bq, bk)
@@ -168,6 +191,8 @@ def flash_attention(
     q_start: jnp.ndarray | None = None,  # () or (B,) int32; None -> Sk - Sq
     *,
     window: jnp.ndarray | None = None,   # () or (B,) int32 width W; None -> full
+    k_scale: jnp.ndarray | None = None,  # () or (B,) fp32; k is quantized (int8/fp8)
+    v_scale: jnp.ndarray | None = None,  # () or (B,) fp32; v is quantized
     causal: bool = True,
     scale: float | None = None,
     block_q: int | None = None,
@@ -211,6 +236,9 @@ def flash_attention(
         jnp.asarray(sk - sq if q_start is None else q_start, jnp.int32), (b,)
     )
     windowed = window is not None
+    quantized = k_scale is not None
+    if quantized != (v_scale is not None):
+        raise ValueError("quantized KV needs both k_scale and v_scale")
     rows = [kv_len, q_start]
     if windowed:
         # per-batch window start of the FIRST query: local query i's
@@ -219,7 +247,14 @@ def flash_attention(
         # base is kv_len - sq.
         w = jnp.broadcast_to(jnp.asarray(window, jnp.int32), (b,))
         rows.append(kv_len - sq - w + 1)
-    meta = jnp.stack(rows)                       # (2 [+1], B) in SMEM
+    if quantized:
+        # the dequantization scales ride the same int32 SMEM meta: fp32
+        # bits reinterpreted, bitcast back inside the kernel (the meta
+        # stack must stay single-dtype for jnp.stack)
+        for s in (k_scale, v_scale):
+            s32 = jnp.broadcast_to(jnp.asarray(s, jnp.float32), (b,))
+            rows.append(jax.lax.bitcast_convert_type(s32, jnp.int32))
+    meta = jnp.stack(rows)                       # (2 [+1] [+2], B) in SMEM
     tbl_row = len(rows)                          # first block-table meta row
     if paged:
         # block-table rows ride below the scalar rows: meta[tbl_row+j, bi]
@@ -238,6 +273,7 @@ def flash_attention(
         q_offset=sk - sq,
         dyn_offset=dyn_offset,
         windowed=windowed,
+        quantized=quantized,
     )
     if paged:
         bpp = page // block_k                    # k-tiles per page

@@ -131,6 +131,15 @@ def windowed_attention_ref(
     return out.reshape(b, sq, h, dh)
 
 
+def _dequant_cache(cache: jnp.ndarray, scale) -> jnp.ndarray:
+    """Dequantize an int8/fp8 logical cache (B, S, KV, Dh) with a ()- or
+    (B,)-shaped fp32 scale — the oracle of the in-kernel VMEM dequant."""
+    s = jnp.asarray(scale, jnp.float32)
+    if s.ndim:
+        s = s.reshape(-1, 1, 1, 1)
+    return cache.astype(jnp.float32) * s
+
+
 def _gather_pages(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
     """(P, page, KV, Dh) pool + (B, nblocks) table -> the logical
     (B, nblocks*page, KV, Dh) cache each batch row sees — the jnp oracle
@@ -147,6 +156,8 @@ def decode_attention_ref(
     pos: jnp.ndarray,
     block_table: jnp.ndarray | None = None,
     window: jnp.ndarray | None = None,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
     *,
     scale: float | None = None,
 ) -> jnp.ndarray:
@@ -160,11 +171,16 @@ def decode_attention_ref(
     each row's logical cache is gathered through its table row first.
     `window` (() or (B,) int32) additionally masks keys at positions
     <= pos - window — the sliding-window decode: only the trailing
-    `window` cache slots are attended.
+    `window` cache slots are attended.  With `k_scale`/`v_scale` (() or
+    (B,) fp32) the caches are quantized (int8/fp8) and dequantized here
+    before the math — the oracle of the kernel's in-VMEM dequant.
     """
     if block_table is not None:
         k_cache = _gather_pages(k_cache, block_table)
         v_cache = _gather_pages(v_cache, block_table)
+    if k_scale is not None:
+        k_cache = _dequant_cache(k_cache, k_scale)
+        v_cache = _dequant_cache(v_cache, v_scale)
     b, _, h, dh = q.shape
     kv = k_cache.shape[2]
     group = h // kv
@@ -182,7 +198,7 @@ def decode_attention_ref(
     p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
     p = p / p.sum(axis=-1, keepdims=True)
     out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
-    return out.reshape(b, 1, h, dh)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
 
 
 def chunk_attention_ref(
@@ -192,6 +208,8 @@ def chunk_attention_ref(
     pos: jnp.ndarray,
     block_table: jnp.ndarray | None = None,
     window: jnp.ndarray | None = None,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
     *,
     scale: float | None = None,
 ) -> jnp.ndarray:
@@ -206,11 +224,15 @@ def chunk_attention_ref(
     (P, page, KV, Dh), gathered per row as in `decode_attention_ref`.
     `window` (() or (B,) int32) additionally masks keys at positions
     <= pos + i - window: each chunk query attends its trailing `window`
-    keys only.
+    keys only.  `k_scale`/`v_scale` (() or (B,) fp32) mark quantized
+    (int8/fp8) caches, dequantized here before the math.
     """
     if block_table is not None:
         k_cache = _gather_pages(k_cache, block_table)
         v_cache = _gather_pages(v_cache, block_table)
+    if k_scale is not None:
+        k_cache = _dequant_cache(k_cache, k_scale)
+        v_cache = _dequant_cache(v_cache, v_scale)
     b, c, h, dh = q.shape
     kv = k_cache.shape[2]
     group = h // kv
@@ -229,4 +251,4 @@ def chunk_attention_ref(
     p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
     p = p / p.sum(axis=-1, keepdims=True)
     out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache)
-    return out.reshape(b, c, h, dh)
+    return out.reshape(b, c, h, dh).astype(q.dtype)

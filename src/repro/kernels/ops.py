@@ -28,6 +28,8 @@ from repro.kernels.flash_attention_ref import (
 )
 from repro.kernels.moe_gmm import moe_gmm
 from repro.kernels.moe_gmm_ref import moe_gmm_ref
+from repro.kernels.quant_matmul import quant_matmul
+from repro.kernels.quant_matmul_ref import quant_matmul_ref
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.rmsnorm_ref import rmsnorm_ref
 from repro.kernels.ssd_scan import ssd_scan
@@ -84,6 +86,12 @@ _SIGS = {
         "semantics": ("per-group matmul, groups partition rows of x; "
                       "capacity-truncated baseline, dropless native"),
     },
+    "quant_matmul": {
+        "args": ["x:[t,d]", "qw:[d,f] int8|fp8", "scale:[f] f32"],
+        "kwargs": [],
+        "semantics": ("y = x @ (qw * scale[None,:]) per output channel, "
+                      "fp32 accumulation, output in x's dtype"),
+    },
 }
 
 # Minor revisions: compatible extensions of a kernel (libtool "revision").
@@ -109,7 +117,13 @@ _SIGS = {
 #              out-of-window k-blocks are skipped; the kernel grew a
 #              per-batch window-start row in the same SMEM meta
 #              (docs/kernels.md "window meta ABI")
-_ABI_MINORS = {"moe_gmm": 2, "decode_attention": 3, "chunk_attention": 2}
+#   decode_attention 4 / chunk_attention 3: optional trailing
+#              k_scale/v_scale args (traced () or (B,) f32) — k/v caches
+#              may be int8/fp8 quantized pools, dequantized in-kernel
+#              after the VMEM upcast; the scales ride the same SMEM meta
+#              as the kv_len/window rows, fp32 bits bitcast to int32
+#              (docs/quantization.md "scale meta ABI")
+_ABI_MINORS = {"moe_gmm": 2, "decode_attention": 4, "chunk_attention": 3}
 
 ABIS: dict[str, AbiString] = {
     name: AbiString.make(name, sig, major=1, minor=_ABI_MINORS.get(name, 0))
@@ -138,45 +152,49 @@ def _ref_windowed_attention(q, k, v, window, *, scale=None):
 
 
 def _native_decode_attention(q, k_cache, v_cache, pos, block_tables=None,
-                             window=None, *, scale=None, config=None,
-                             interpret=False):
+                             window=None, k_scale=None, v_scale=None, *,
+                             scale=None, config=None, interpret=False):
     # decode = flash with Sq=1 over the written prefix of the cache; with
     # block_tables the caches are page pools and the kernel's index maps
     # gather pages (page size = the pool's second dim); with window only
     # the trailing `window` slots are attended (out-of-window pages may
-    # already be parked)
+    # already be parked); with k_scale/v_scale the pools are int8/fp8
+    # and dequantized in-kernel after the VMEM upcast
     page = k_cache.shape[1] if block_tables is not None else None
     return flash_attention(
         q, k_cache, v_cache, kv_len=pos + 1, causal=False, scale=scale,
-        window=window, config=config, interpret=interpret,
-        block_tables=block_tables, page_size=page,
+        window=window, k_scale=k_scale, v_scale=v_scale, config=config,
+        interpret=interpret, block_tables=block_tables, page_size=page,
     )
 
 
 def _ref_decode_attention(q, k_cache, v_cache, pos, block_tables=None,
-                          window=None, *, scale=None):
+                          window=None, k_scale=None, v_scale=None, *,
+                          scale=None):
     return decode_attention_ref(q, k_cache, v_cache, pos, block_tables,
-                                window, scale=scale)
+                                window, k_scale, v_scale, scale=scale)
 
 
 def _native_chunk_attention(q, k_cache, v_cache, pos, block_tables=None,
-                            window=None, *, scale=None, config=None,
-                            interpret=False):
+                            window=None, k_scale=None, v_scale=None, *,
+                            scale=None, config=None, interpret=False):
     # chunked prefill = flash with the causal diagonal re-anchored at pos:
     # query i (global position pos+i) sees cache keys <= pos+i, and the
     # kv_len mask hides slots past the chunk's own freshly written tail.
     page = k_cache.shape[1] if block_tables is not None else None
     return flash_attention(
         q, k_cache, v_cache, kv_len=pos + q.shape[1], q_start=pos,
-        causal=True, scale=scale, window=window, config=config,
-        interpret=interpret, block_tables=block_tables, page_size=page,
+        causal=True, scale=scale, window=window, k_scale=k_scale,
+        v_scale=v_scale, config=config, interpret=interpret,
+        block_tables=block_tables, page_size=page,
     )
 
 
 def _ref_chunk_attention(q, k_cache, v_cache, pos, block_tables=None,
-                         window=None, *, scale=None):
+                         window=None, k_scale=None, v_scale=None, *,
+                         scale=None):
     return chunk_attention_ref(q, k_cache, v_cache, pos, block_tables,
-                               window, scale=scale)
+                               window, k_scale, v_scale, scale=scale)
 
 
 def _ref_attention(q, k, v, *, causal=True, scale=None):
@@ -194,6 +212,7 @@ _REFS = {
     "chunk_attention": _ref_chunk_attention,
     "ssd_scan": ssd_scan_ref,
     "moe_gmm": moe_gmm_ref,
+    "quant_matmul": quant_matmul_ref,
 }
 
 _NATIVES = {
@@ -204,6 +223,7 @@ _NATIVES = {
     "chunk_attention": _native_chunk_attention,
     "ssd_scan": functools.partial(ssd_scan, interpret=False),
     "moe_gmm": functools.partial(moe_gmm, interpret=False),
+    "quant_matmul": functools.partial(quant_matmul, interpret=False),
 }
 
 # interpret-mode variants: the Pallas kernel body executed by the HLO
@@ -218,6 +238,7 @@ _NATIVES_INTERPRET = {
     "chunk_attention": functools.partial(_native_chunk_attention, interpret=True),
     "ssd_scan": functools.partial(ssd_scan, interpret=True),
     "moe_gmm": functools.partial(moe_gmm, interpret=True),
+    "quant_matmul": functools.partial(quant_matmul, interpret=True),
 }
 
 # -- autotuner hooks ---------------------------------------------------------
@@ -448,6 +469,36 @@ def _feasible_moe(cfg, platform, args):
             and vmem <= _VMEM_BUDGET)
 
 
+def _spec_quant_matmul(platform):
+    # the serving-matmul geometry: a decode/chunk activation against a
+    # per-channel int8 weight (fp8 buckets reuse the same tuned entries
+    # modulo the dtype suffix on the bucket key)
+    t, d, f = (64, 64, 64) if _is_cpu(platform) else (256, 4096, 4096)
+    return (jax.ShapeDtypeStruct((t, d), jnp.float32),
+            jax.ShapeDtypeStruct((d, f), jnp.int8),
+            jax.ShapeDtypeStruct((f,), jnp.float32))
+
+
+def _example_quant_matmul(platform):
+    sx, sw, ss = _spec_quant_matmul(platform)
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    return (jax.random.normal(ks[0], sx.shape, sx.dtype),
+            jax.random.randint(ks[1], sw.shape, -127, 128,
+                               jnp.int32).astype(sw.dtype),
+            jax.random.uniform(ks[2], ss.shape, ss.dtype, 0.001, 0.02))
+
+
+def _feasible_quant_matmul(cfg, platform, args):
+    t, d = args[0].shape
+    f = args[1].shape[1]
+    bm, bn = cfg["block_m"], cfg["block_n"]
+    qbytes = jnp.dtype(args[1].dtype).itemsize
+    # fp32 x tile + 1-byte weight tile + fp32 scale slice + fp32 out tile;
+    # the full D contraction stays resident like rmsnorm's row
+    vmem = bm * d * 4 + d * bn * qbytes + bn * 4 + bm * bn * 4
+    return bm <= max(t, 8) and bn <= f and vmem <= _VMEM_BUDGET
+
+
 _TUNERS: dict[str, OpTuner] = {
     "rmsnorm": OpTuner(
         op="rmsnorm",
@@ -499,6 +550,13 @@ _TUNERS: dict[str, OpTuner] = {
         example_args=_example_moe, feasible=_feasible_moe,
         example_specs=_spec_moe,
     ),
+    "quant_matmul": OpTuner(
+        op="quant_matmul",
+        space={"block_m": (8, 16, 32, 64, 128, 256),
+               "block_n": (8, 16, 32, 64, 128, 256)},
+        example_args=_example_quant_matmul, feasible=_feasible_quant_matmul,
+        example_specs=_spec_quant_matmul,
+    ),
 }
 
 
@@ -521,9 +579,26 @@ def _parse_bucket(shapes: str) -> list[tuple[int, ...]] | None:
 
 
 def _normal(key, shape, dtype):
-    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
-        return jax.random.randint(key, shape, 0, 8, jnp.dtype(dtype))
-    return jax.random.normal(key, shape, jnp.dtype(dtype))
+    dt = jnp.dtype(dtype)
+    if dt == jnp.int8:
+        # quantized code points span the symmetric clip range
+        return jax.random.randint(key, shape, -127, 128, jnp.int32).astype(dt)
+    if jnp.issubdtype(dt, jnp.integer):
+        return jax.random.randint(key, shape, 0, 8, dt)
+    if dt.itemsize == 1:
+        # fp8 storage: sample in fp32, snap to the fp8 grid
+        return jax.random.normal(key, shape).astype(dt)
+    return jax.random.normal(key, shape, dt)
+
+
+def _split_dtype(dtype: str) -> tuple[str, str | None]:
+    """Split a composite bucket dtype "float32+int8" into (base, quant).
+
+    The "+<storage dtype>" suffix is how quantized-KV calls bucket
+    separately from full-precision ones (repro.tuning.bucket_shapes);
+    plain buckets return (dtype, None)."""
+    base, _, quant = str(dtype).partition("+")
+    return base, (quant or None)
 
 
 def _synth_rmsnorm(platform, shapes, dtype):
@@ -542,7 +617,7 @@ def _synth_attention(platform, shapes, dtype):
     return tuple(_normal(k, p, dtype) for k, p in zip(ks, parts))
 
 
-def _attn_cache_parts(shapes):
+def _attn_cache_parts(shapes, quantized=False):
     """Normalize a decode/chunk attention bucket to its array parts.
 
     Returns ``(parts, windowed)`` where parts is [q, k_cache, v_cache]
@@ -553,18 +628,27 @@ def _attn_cache_parts(shapes):
     rank disambiguates; a trailing rank-0 part *after* pos/table is the
     traced sliding-window width (ABI decode/1:3, chunk/1:2) — this is
     how "window rides the bucket key": windowed calls bucket separately
-    from full-attention calls and warm to their own tuned entries."""
+    from full-attention calls and warm to their own tuned entries.
+
+    ``quantized`` (the caller reads it off the bucket dtype's "+int8"/
+    "+float8*" suffix — the authoritative signal, since a scale part is
+    shaped exactly like a traced pos) strips the trailing k/v dequant
+    scale pair (ABI decode/1:4, chunk/1:3) before the tail parse."""
     parts = _parse_bucket(shapes)
     if not parts or len(parts) < 3 or any(len(p) != 4 for p in parts[:3]):
         return None
     tail = parts[3:]
+    if quantized:
+        if len(tail) < 2 or any(len(p) > 1 for p in tail[-2:]):
+            return None                  # scale pair missing/misshapen
+        tail = tail[:-2]
     if tail and len(tail[0]) <= 1:       # traced pos: () or (B,)
         tail = tail[1:]
     table = None
     if tail and len(tail[0]) == 2:       # paged block table
         table = tail[0]
         tail = tail[1:]
-    windowed = bool(tail) and tail[0] == ()
+    windowed = bool(tail) and len(tail[0]) <= 1
     if windowed:
         tail = tail[1:]
     if tail:                             # unrecognized residue
@@ -580,13 +664,35 @@ def _synth_window(logical: int):
     return jnp.asarray(max(1, logical // 4), jnp.int32)
 
 
+def _synth_scales(parts, windowed, quantized):
+    """Optional trailing (window, k_scale, v_scale) args for a
+    resynthesized attention bucket, in adapter positional order.  The
+    scale values are representative dequant magnitudes — like the window
+    width they never reach the bucket key, only their 0-d shapes do."""
+    tail = ()
+    logical = (parts[3][1] * parts[1][1]) if len(parts) == 4 else parts[1][1]
+    if windowed:
+        tail += (_synth_window(logical),)
+    if quantized:
+        if not windowed:
+            tail += (None,)              # hold the window slot
+        sc = jnp.asarray(0.02, jnp.float32)
+        tail += (sc, sc)
+    return tail
+
+
 def _synth_decode(platform, shapes, dtype):
-    norm = _attn_cache_parts(shapes)
+    base, quant = _split_dtype(dtype)
+    quantized = quant is not None
+    norm = _attn_cache_parts(shapes, quantized=quantized)
     if norm is None:
         return None
     parts, windowed = norm
+    kv_dt = quant if quantized else base
     ks = jax.random.split(jax.random.PRNGKey(2), 4)
-    q, k, v = (_normal(kk, p, dtype) for kk, p in zip(ks, parts[:3]))
+    q = _normal(ks[0], parts[0], base)
+    k = _normal(ks[1], parts[1], kv_dt)
+    v = _normal(ks[2], parts[2], kv_dt)
     if len(parts) == 4:
         npages, page = parts[1][0], parts[1][1]
         b, nblocks = parts[3]
@@ -597,22 +703,28 @@ def _synth_decode(platform, shapes, dtype):
     else:
         logical = parts[1][1]
         args = (q, k, v, logical // 2, None)
-    if windowed:
-        return args + (_synth_window(logical),)
+    tail = _synth_scales(parts, windowed, quantized)
+    if tail:
+        return args + tail
     return args[:4] if args[4] is None else args
 
 
 def _synth_chunk(platform, shapes, dtype):
     # same bucket structure as decode: q/k_cache/v_cache (+ optional
     # trailing "scalar" for a traced pos, + block table when paged,
-    # + trailing "scalar" window when windowed); resynthesize pos
-    # mid-cache
-    norm = _attn_cache_parts(shapes)
+    # + trailing "scalar" window when windowed, + trailing scale pair
+    # when quantized); resynthesize pos mid-cache
+    base, quant = _split_dtype(dtype)
+    quantized = quant is not None
+    norm = _attn_cache_parts(shapes, quantized=quantized)
     if norm is None:
         return None
     parts, windowed = norm
+    kv_dt = quant if quantized else base
     ks = jax.random.split(jax.random.PRNGKey(5), 4)
-    q, k, v = (_normal(kk, p, dtype) for kk, p in zip(ks, parts[:3]))
+    q = _normal(ks[0], parts[0], base)
+    k = _normal(ks[1], parts[1], kv_dt)
+    v = _normal(ks[2], parts[2], kv_dt)
     c = parts[0][1]
     if len(parts) == 4:
         npages, page = parts[1][0], parts[1][1]
@@ -627,8 +739,9 @@ def _synth_chunk(platform, shapes, dtype):
     else:
         logical = parts[1][1]
         args = (q, k, v, logical // 2, None)
-    if windowed:
-        return args + (_synth_window(logical),)
+    tail = _synth_scales(parts, windowed, quantized)
+    if tail:
+        return args + tail
     return args[:4] if args[4] is None else args
 
 
@@ -673,6 +786,19 @@ def _synth_moe(platform, shapes, dtype):
             gs)
 
 
+def _synth_quant_matmul(platform, shapes, dtype):
+    parts = _parse_bucket(shapes)
+    if (not parts or len(parts) != 3 or len(parts[0]) != 2
+            or len(parts[1]) != 2 or len(parts[2]) != 1
+            or parts[0][1] != parts[1][0] or parts[1][1] != parts[2][0]):
+        return None
+    base, quant = _split_dtype(dtype)
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    return (_normal(ks[0], parts[0], base),
+            _normal(ks[1], parts[1], quant if quant is not None else base),
+            jax.random.uniform(ks[2], parts[2], jnp.float32, 0.001, 0.02))
+
+
 _SYNTHS = {
     "rmsnorm": _synth_rmsnorm,
     "attention": _synth_attention,
@@ -681,6 +807,7 @@ _SYNTHS = {
     "chunk_attention": _synth_chunk,
     "ssd_scan": _synth_ssd,
     "moe_gmm": _synth_moe,
+    "quant_matmul": _synth_quant_matmul,
 }
 
 for _name, _synth in _SYNTHS.items():

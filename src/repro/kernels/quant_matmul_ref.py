@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the quantized matmul swap op."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["quant_matmul_ref"]
+
+
+def quant_matmul_ref(x: jnp.ndarray, qw: jnp.ndarray,
+                     scale: jnp.ndarray) -> jnp.ndarray:
+    """x [T, D] float @ qw [D, F] int8/fp8, scale [F] fp32 per output
+    channel -> [T, F] in x's dtype (fp32 math, like the kernel)."""
+    w = qw.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

@@ -63,7 +63,8 @@ from repro.launch.steps import DeployOptions, make_deployment
 from repro.launch.train import make_bundle
 
 __all__ = ["BlockAllocator", "PagedPool", "Request", "Scheduler", "JaxEngine",
-           "Server", "SERVING_STATS_SCHEMA", "main"]
+           "Server", "SERVING_STATS_SCHEMA", "DeploymentRejected",
+           "estimate_footprint", "main"]
 
 # scheduler states (docs/serving.md + docs/fleet.md state machines)
 QUEUED = "queued"
@@ -85,6 +86,53 @@ SERVING_STATS_SCHEMA = frozenset({
     "pages-capacity", "pages-allocated-mean", "pages-written-mean",
     "pages-allocated-peak", "fragmentation-pct",
 })
+
+
+class DeploymentRejected(RuntimeError):
+    """A deployment whose estimated footprint exceeds the memory budget.
+
+    Raised by `JaxEngine` BEFORE any buffer is allocated, with the
+    estimate attached — the caller (or table7's quantized-deploy row)
+    reports exactly what did not fit and retries with ``quantize``."""
+
+    def __init__(self, footprint: dict, budget: int):
+        self.footprint = footprint
+        self.budget = budget
+        super().__init__(
+            f"deployment needs ~{footprint['total_bytes']:,} bytes "
+            f"(weights {footprint['weight_bytes']:,} + "
+            f"kv {footprint['kv_bytes']:,}, quantize="
+            f"{footprint['quantize']}) but the budget is {budget:,}")
+
+
+def estimate_footprint(model, *, slots: int, max_len: int,
+                       quantize: str | None = None, paged: bool = False,
+                       num_pages: int | None = None,
+                       page_size: int | None = None) -> dict:
+    """Deployment memory estimate from abstract shapes — no allocation.
+
+    Weights: quantizable leaves (the checkpoint quantizer's filter) cost
+    1 byte per element plus fp32 per-channel scales when ``quantize`` is
+    set, full dtype width otherwise.  KV: the model's abstract cache,
+    which already reflects the storage dtype and scale leaves when the
+    model was built with ``kv_quantize``."""
+    import math
+
+    from repro.checkpoint.manifest import _flatten, _quantizable
+
+    wb = 0
+    for path, s in _flatten(model.abstract_params()):
+        n = math.prod(s.shape)
+        if quantize and _quantizable(path, s):
+            wb += n + (n // s.shape[-2]) * 4    # 1-byte codes + fp32 scales
+        else:
+            wb += n * jnp.dtype(s.dtype).itemsize
+    cache = (model.abstract_paged_cache(num_pages, page_size, slots)
+             if paged else model.abstract_cache(slots, max_len))
+    kb = sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+             for s in jax.tree.leaves(cache))
+    return {"weight_bytes": int(wb), "kv_bytes": int(kb),
+            "total_bytes": int(wb + kb), "quantize": quantize or "none"}
 
 
 @dataclasses.dataclass
@@ -274,7 +322,8 @@ class JaxEngine:
     def __init__(self, cfg, container, *, slots: int, max_len: int,
                  chunk: int = 16, prefill_mode: str = "chunked",
                  paged: bool = False, num_pages: int | None = None,
-                 window: int | None = None):
+                 window: int | None = None, quantize: str | None = None,
+                 memory_budget: int | None = None):
         if prefill_mode not in ("chunked", "decode"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         if chunk < 1 or chunk > max_len:
@@ -283,6 +332,10 @@ class JaxEngine:
             raise ValueError("paged cache requires prefill_mode='chunked'")
         if window is not None and window < 1:
             raise ValueError(f"sliding window of {window} tokens")
+        if quantize == "none":
+            quantize = None
+        if quantize is not None and quantize not in ("int8", "fp8"):
+            raise ValueError(f"quantize must be int8/fp8/none, got {quantize!r}")
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -290,22 +343,42 @@ class JaxEngine:
         self.prefill_mode = prefill_mode
         self.paged = paged
         self.window = window
+        self.quantize = quantize
         shape = ShapeConfig("serve", max_len, slots, "decode")
         self.dep = make_deployment(
             cfg, shape, container.mesh,
-            options=DeployOptions(donate=False),
+            options=DeployOptions(donate=False, kv_quantize=quantize),
             binding=container.binding,
         )
         self.model = self.dep.model
+        self.pool = PagedPool(slots, max_len, chunk, num_pages) if paged else None
+        # admission control for the deployment itself: the footprint is
+        # priced from abstract shapes and checked against the budget
+        # BEFORE any weight or cache buffer exists, so an over-budget
+        # config is rejected instead of OOM-killed mid-allocation.
+        self.footprint = estimate_footprint(
+            self.model, slots=slots, max_len=max_len, quantize=quantize,
+            paged=paged, num_pages=self.pool.num_pages if paged else None,
+            page_size=chunk if paged else None)
+        if (memory_budget is not None
+                and self.footprint["total_bytes"] > memory_budget):
+            raise DeploymentRejected(self.footprint, memory_budget)
         params = self.model.init(jax.random.PRNGKey(0))
-        self.params = jax.device_put(params, self.dep.param_sharding)
+        if quantize is not None:
+            from repro.checkpoint.manifest import quantize_tree
+
+            # storage-form {"q", "scale"} subtrees no longer match the
+            # per-leaf sharding tree, so quantized serving keeps default
+            # placement (the single-host serving path)
+            self.params = jax.tree.map(jnp.asarray,
+                                       quantize_tree(params, quantize))
+        else:
+            self.params = jax.device_put(params, self.dep.param_sharding)
         if paged:
-            self.pool = PagedPool(slots, max_len, chunk, num_pages)
             self.cache = self.model.init_paged_cache(
                 self.pool.num_pages, chunk, slots
             )
         else:
-            self.pool = None
             self.cache = self.model.init_cache(slots, max_len)
         self._prefill = jax.jit(self.model.prefill_into)
         self._decode = jax.jit(self.model.decode)
@@ -813,11 +886,14 @@ class Server:
                  queue_depth: int = 64, max_new_cap: int = 1 << 30,
                  interleave: int = 2, paged: bool = False,
                  num_pages: int | None = None, window: int | None = None,
+                 quantize: str | None = None,
+                 memory_budget: int | None = None,
                  clock: Callable[[], float] = time.monotonic):
         self.engine = JaxEngine(cfg, container, slots=slots, max_len=max_len,
                                 chunk=chunk, prefill_mode=prefill_mode,
                                 paged=paged, num_pages=num_pages,
-                                window=window)
+                                window=window, quantize=quantize,
+                                memory_budget=memory_budget)
         self.scheduler = Scheduler(self.engine, queue_depth=queue_depth,
                                    max_new_cap=max_new_cap,
                                    interleave=interleave, clock=clock)
@@ -871,6 +947,14 @@ def main(argv=None) -> int:
                          "out-of-window pages are parked and recycled, "
                          "capping each request's admission footprint at "
                          "ceil(W/chunk)+1 pages")
+    ap.add_argument("--quantize", choices=("none", "int8", "fp8"),
+                    default="none",
+                    help="serve with 1-byte weights (quant_matmul storage "
+                         "subtrees) and a quantized KV cache — ~4x smaller "
+                         "fp32 footprint (docs/quantization.md)")
+    ap.add_argument("--memory-budget", type=int, default=None, metavar="BYTES",
+                    help="reject the deployment (DeploymentRejected) if the "
+                         "estimated weights+KV footprint exceeds this")
     ap.add_argument("--queue-depth", type=int, default=64,
                     help="admission control: submits beyond this queue depth "
                          "are rejected, not buffered")
@@ -909,10 +993,21 @@ def main(argv=None) -> int:
                                tuning_bundle=args.tuning_bundle)
     cfg = get_config(args.arch).reduced()
 
-    server = Server(cfg, container, slots=args.slots, max_len=args.max_len,
-                    chunk=args.chunk, prefill_mode=args.prefill_mode,
-                    queue_depth=args.queue_depth, paged=args.paged,
-                    num_pages=args.num_pages, window=args.window)
+    try:
+        server = Server(cfg, container, slots=args.slots, max_len=args.max_len,
+                        chunk=args.chunk, prefill_mode=args.prefill_mode,
+                        queue_depth=args.queue_depth, paged=args.paged,
+                        num_pages=args.num_pages, window=args.window,
+                        quantize=args.quantize,
+                        memory_budget=args.memory_budget)
+    except DeploymentRejected as e:
+        print(f"deployment rejected: {e}")
+        runtime.cleanup()
+        return 2
+    fp = server.engine.footprint
+    print(f"footprint: weights {fp['weight_bytes']:,}B + "
+          f"kv {fp['kv_bytes']:,}B = {fp['total_bytes']:,}B "
+          f"(quantize={fp['quantize']})")
     rng = np.random.default_rng(0)
     t0 = time.time()
     for rid in range(args.requests):

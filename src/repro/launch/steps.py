@@ -46,6 +46,7 @@ class DeployOptions:
                                       # grad accumulator, params x 4B)
     head_padding: bool = True         # group-aligned TP head padding
     cache_seq_shard: bool = True      # seq-sharded KV caches (vs head_dim)
+    kv_quantize: str | None = None    # int8/fp8 KV cache (serving)
     adamw: AdamWConfig = AdamWConfig()
 
 
@@ -128,6 +129,7 @@ def make_deployment(
         moe_token_chunks=options.moe_token_chunks,
         loss_seq_chunks=options.loss_seq_chunks,
         head_pad_multiple=None if options.head_padding else 1,
+        kv_quantize=options.kv_quantize,
     )
 
     pspec = param_shardings(model.schema(), options.rules, mesh)

@@ -26,10 +26,23 @@ __all__ = [
     "attention_apply",
     "attention_decode",
     "attention_chunk",
+    "dequant_param",
     "mlp_schema",
     "mlp_apply",
     "sinusoidal_positions",
 ]
+
+
+def dequant_param(p, dtype=jnp.float32):
+    """Materialize a quantized weight subtree ``{"q", "scale"}`` (the
+    ``restore_checkpoint(dequantize=False)`` layout — codes with axis -2
+    reduced to per-channel scales) back to a dense array; full-precision
+    leaves pass through untouched."""
+    if isinstance(p, dict) and "q" in p and "scale" in p:
+        from repro.kernels.quant import dequantize
+
+        return dequantize(p["q"], p["scale"], axis=-2, dtype=dtype)
+    return p
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,9 +189,9 @@ def attention_apply(
 ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     """Full-sequence attention (train / prefill).  Returns (out, kv)."""
     src = x if kv_source is None else kv_source
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    q = jnp.einsum("bsd,dhk->bshk", x, dequant_param(params["wq"], x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", src, dequant_param(params["wk"], x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, dequant_param(params["wv"], x.dtype))
     if cfg.qkv_bias:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
     if use_rope and positions is not None:
@@ -192,7 +205,7 @@ def attention_apply(
     out = _mask_padded_heads(out, real_group)
     if pctx is not None and pctx.active:
         out = pctx.constrain_heads(out)
-    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    y = jnp.einsum("bshk,hkd->bsd", out, dequant_param(params["wo"], x.dtype))
     return y, {"k": k, "v": v}
 
 
@@ -209,6 +222,21 @@ def _mask_padded_heads(out: jnp.ndarray, real_group: tuple[int, int] | None):
     h = out.shape[-2]
     mask = (jnp.arange(h) % gp) < g
     return out * mask[:, None].astype(out.dtype)
+
+
+def _quant_update(upd: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Quantize a fresh k/v projection onto a quantized cache's grid using
+    the slot's static calibrated scale (() or (B,) fp32).  A plain astype
+    would truncate int8 codes; this divides by the scale and rounds/clips
+    per format — the exact inverse of the kernels' in-VMEM dequant."""
+    from repro.kernels.quant import FP8_MAX, INT8_MAX
+
+    s = jnp.asarray(scale, jnp.float32)
+    s = s.reshape(s.shape + (1,) * (upd.ndim - s.ndim))
+    y = upd.astype(jnp.float32) / s
+    if jnp.dtype(dtype) == jnp.int8:
+        return jnp.clip(jnp.round(y), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return jnp.clip(y, -FP8_MAX, FP8_MAX).astype(dtype)
 
 
 def _cache_write(buf: jnp.ndarray, upd: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
@@ -261,9 +289,15 @@ def attention_decode(
     shared by all slots; the write scatters through the table and the op
     gathers through it (paged decode_attention ABI).  With `window` only
     the trailing `window` cache slots are attended (sliding-window decode
-    ABI) — out-of-window pages may already have been released."""
+    ABI) — out-of-window pages may already have been released.
+
+    A quantized cache carries ``"k_scale"``/``"v_scale"`` leaves (static
+    per-slot calibration, () or (B,) fp32): fresh k/v are quantized onto
+    the cache grid before the write and the scales ride as trailing
+    binding args — the op dequantizes in-kernel (scale meta ABI)."""
+    k_scale, v_scale = cache.get("k_scale"), cache.get("v_scale")
     rope_pos = pos[None] if pos.ndim == 0 else pos[:, None]
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q = jnp.einsum("bsd,dhk->bshk", x, dequant_param(params["wq"], x.dtype))
     if cfg.qkv_bias:
         q = q + params["bq"]
     if use_rope:
@@ -276,19 +310,26 @@ def attention_decode(
         out = binding["decode_attention"](q, k_cache, v_cache, cache_len)
         new_cache = cache
     else:
-        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
-        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        k = jnp.einsum("bsd,dhk->bshk", x, dequant_param(params["wk"], x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, dequant_param(params["wv"], x.dtype))
         if cfg.qkv_bias:
             k, v = k + params["bk"], v + params["bv"]
         if use_rope:
             k = rotary(k, rope_pos, cfg.rope_theta)
+        if k_scale is not None:
+            k = _quant_update(k, k_scale, cache["k"].dtype)
+            v = _quant_update(v, v_scale, cache["v"].dtype)
         if block_tables is not None:
             k_cache = _paged_decode_write(cache["k"], k, pos, block_tables)
             v_cache = _paged_decode_write(cache["v"], v, pos, block_tables)
         else:
             k_cache = _cache_write(cache["k"], k, pos)
             v_cache = _cache_write(cache["v"], v, pos)
-        if window is not None:
+        if k_scale is not None:
+            out = binding["decode_attention"](q, k_cache, v_cache, pos,
+                                              block_tables, window,
+                                              k_scale, v_scale)
+        elif window is not None:
             out = binding["decode_attention"](q, k_cache, v_cache, pos,
                                               block_tables, window)
         elif block_tables is not None:
@@ -297,10 +338,12 @@ def attention_decode(
         else:
             out = binding["decode_attention"](q, k_cache, v_cache, pos)
         new_cache = {"k": k_cache, "v": v_cache}
+        if k_scale is not None:
+            new_cache["k_scale"], new_cache["v_scale"] = k_scale, v_scale
     out = _mask_padded_heads(out, real_group)
     if pctx is not None and pctx.active:
         out = pctx.constrain_heads(out)
-    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    y = jnp.einsum("bshk,hkd->bsd", out, dequant_param(params["wo"], x.dtype))
     return y, new_cache
 
 
@@ -333,11 +376,12 @@ def attention_chunk(
     page == C makes the chunk's write exactly one page: the chunk at
     global position pos fills page block_tables[pos // page] whole.
     """
+    k_scale, v_scale = cache.get("k_scale"), cache.get("v_scale")
     c = x.shape[1]
     chunk_pos = pos + jnp.arange(c)
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = jnp.einsum("bsd,dhk->bshk", x, dequant_param(params["wq"], x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, dequant_param(params["wk"], x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, dequant_param(params["wv"], x.dtype))
     if cfg.qkv_bias:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
     if use_rope:
@@ -345,6 +389,9 @@ def attention_chunk(
         k = rotary(k, chunk_pos, cfg.rope_theta)
     if pctx is not None and pctx.active:
         q = pctx.constrain_heads(q)
+    if k_scale is not None:
+        k = _quant_update(k, k_scale, cache["k"].dtype)
+        v = _quant_update(v, v_scale, cache["v"].dtype)
     if block_tables is not None:
         page = cache["k"].shape[1]
         assert c == page, f"paged prefill requires chunk == page, {c} != {page}"
@@ -355,7 +402,11 @@ def attention_chunk(
             cache["k"], k.astype(cache["k"].dtype), (blk, 0, 0, 0))
         v_cache = jax.lax.dynamic_update_slice(
             cache["v"], v.astype(cache["v"].dtype), (blk, 0, 0, 0))
-        if window is not None:
+        if k_scale is not None:
+            out = binding["chunk_attention"](q, k_cache, v_cache, pos,
+                                             block_tables[None], window,
+                                             k_scale, v_scale)
+        elif window is not None:
             out = binding["chunk_attention"](q, k_cache, v_cache, pos,
                                              block_tables[None], window)
         else:
@@ -364,7 +415,10 @@ def attention_chunk(
     else:
         k_cache = _cache_write(cache["k"], k, pos)
         v_cache = _cache_write(cache["v"], v, pos)
-        if window is not None:
+        if k_scale is not None:
+            out = binding["chunk_attention"](q, k_cache, v_cache, pos,
+                                             None, window, k_scale, v_scale)
+        elif window is not None:
             out = binding["chunk_attention"](q, k_cache, v_cache, pos,
                                              None, window)
         else:
@@ -372,8 +426,11 @@ def attention_chunk(
     out = _mask_padded_heads(out, real_group)
     if pctx is not None and pctx.active:
         out = pctx.constrain_heads(out)
-    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
-    return y, {"k": k_cache, "v": v_cache}
+    y = jnp.einsum("bshk,hkd->bsd", out, dequant_param(params["wo"], x.dtype))
+    kv = {"k": k_cache, "v": v_cache}
+    if k_scale is not None:
+        kv["k_scale"], kv["v_scale"] = k_scale, v_scale
+    return y, kv
 
 
 # --------------------------------------------------------------------------- #
@@ -390,11 +447,27 @@ def mlp_schema(cfg: ModelConfig, d_ff: int | None = None) -> dict[str, LeafSpec]
     return leaves
 
 
-def mlp_apply(params, x, cfg: ModelConfig):
-    h = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+def mlp_apply(params, x, cfg: ModelConfig, binding=None):
+    """Dense MLP.  Quantized weight subtrees (``{"q", "scale"}``) route
+    through ``binding["quant_matmul"]`` when a binding is supplied — the
+    per-output-channel dequant happens inside the kernel, so the dense
+    weight matrix is never materialized; without a binding (or for
+    full-precision leaves) the plain einsum path runs."""
+
+    def matmul(y, w):
+        if isinstance(w, dict) and "q" in w and "scale" in w:
+            if binding is not None and "quant_matmul" in binding:
+                b, s, d = y.shape
+                out = binding["quant_matmul"](
+                    y.reshape(b * s, d), w["q"], w["scale"])
+                return out.reshape(b, s, -1)
+            w = dequant_param(w, y.dtype)
+        return jnp.einsum("bsd,df->bsf", y, w)
+
+    h = matmul(x, params["w_in"])
     if cfg.activation == "silu_glu":
-        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        g = matmul(x, params["w_gate"])
         h = jax.nn.silu(g) * h
     else:
         h = jax.nn.gelu(h)
-    return jnp.einsum("bsf,fd->bsd", h, params["w_out"])
+    return matmul(h, params["w_out"])

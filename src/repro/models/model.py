@@ -49,6 +49,14 @@ def _stack(tree: Tree, n: int) -> Tree:
     )
 
 
+# Static KV-cache calibration: attention k/v projections from scaled-init
+# weights land well inside |x| < 8 after rotary, so the quantized cache
+# uses one conservative amax for every slot (scale = amax / format-top).
+# A static scale is what lets the (B,) scale vector live as a cache leaf
+# and ride the kernels' SMEM scale-meta rows unchanged across steps.
+KV_CALIBRATION_AMAX = 8.0
+
+
 class Model:
     def __init__(
         self,
@@ -61,6 +69,7 @@ class Model:
         head_pad_multiple: int | None = None,
         moe_token_chunks: int = 1,
         loss_seq_chunks: int = 1,
+        kv_quantize: str | None = None,
     ):
         if binding is None:
             from repro.kernels.ops import default_binding
@@ -70,6 +79,22 @@ class Model:
         self.binding = binding
         self.pctx = pctx or L.ParallelCtx()
         self.moe_oracle = moe_oracle
+        self.kv_quantize = kv_quantize
+        self.kv_storage_dtype = None
+        self.kv_scale_init = None
+        if kv_quantize is not None:
+            from repro.kernels.quant import (
+                FORMATS, FP8_MAX, INT8_MAX, storage_dtype)
+
+            if kv_quantize not in FORMATS:
+                raise ValueError(
+                    f"kv_quantize must be one of {FORMATS}, got {kv_quantize!r}")
+            if cfg.is_enc_dec or cfg.modality == "vision":
+                raise NotImplementedError(
+                    "quantized KV cache supports text decoders only")
+            self.kv_storage_dtype = str(jnp.dtype(storage_dtype(kv_quantize)))
+            top = INT8_MAX if kv_quantize == "int8" else FP8_MAX
+            self.kv_scale_init = KV_CALIBRATION_AMAX / top
         # dry-run sets scan_unroll: XLA cost_analysis does not multiply
         # while-loop bodies by trip count, so the roofline pass unrolls.
         self.scan_unroll = scan_unroll
@@ -183,8 +208,12 @@ class Model:
             entry: Tree = {}
             if cfg.is_attn_layer(j):
                 kv_shape = (nb, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
-                entry["k"] = (kv_shape, cfg.dtype)
-                entry["v"] = (kv_shape, cfg.dtype)
+                kv_dt = self.kv_storage_dtype or cfg.dtype
+                entry["k"] = (kv_shape, kv_dt)
+                entry["v"] = (kv_shape, kv_dt)
+                if self.kv_quantize:
+                    entry["k_scale"] = ((nb, batch), "float32")
+                    entry["v_scale"] = ((nb, batch), "float32")
             else:
                 ss = ssm_init_cache_shapes(cfg, batch)
                 entry["state"] = ((nb,) + ss["state"][0], ss["state"][1])
@@ -205,10 +234,22 @@ class Model:
     def abstract_cache(self, batch: int, max_len: int) -> Tree:
         return self._to_abstract(self.cache_shapes(batch, max_len))
 
+    def _init_cache_tree(self, abstract: Tree) -> Tree:
+        """Zeros everywhere except the quantized cache's scale leaves,
+        which start at the static calibration (a zero scale would blow up
+        the first quantized write)."""
+        return {
+            pj: {
+                name: (jnp.full(s.shape, self.kv_scale_init, s.dtype)
+                       if name in ("k_scale", "v_scale")
+                       else jnp.zeros(s.shape, s.dtype))
+                for name, s in entry.items()
+            }
+            for pj, entry in abstract.items()
+        }
+
     def init_cache(self, batch: int, max_len: int) -> Tree:
-        return jax.tree.map(
-            lambda s: jnp.zeros(s.shape, s.dtype), self.abstract_cache(batch, max_len)
-        )
+        return self._init_cache_tree(self.abstract_cache(batch, max_len))
 
     def paged_cache_shapes(self, num_pages: int, page_size: int, slots: int) -> Tree:
         """Paged-cache entry shapes: attention k/v become page *pools*
@@ -225,8 +266,12 @@ class Model:
             entry: Tree = {}
             if cfg.is_attn_layer(j):
                 kv_shape = (nb, num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
-                entry["k"] = (kv_shape, cfg.dtype)
-                entry["v"] = (kv_shape, cfg.dtype)
+                kv_dt = self.kv_storage_dtype or cfg.dtype
+                entry["k"] = (kv_shape, kv_dt)
+                entry["v"] = (kv_shape, kv_dt)
+                if self.kv_quantize:
+                    entry["k_scale"] = ((nb, slots), "float32")
+                    entry["v_scale"] = ((nb, slots), "float32")
             else:
                 ss = ssm_init_cache_shapes(cfg, slots)
                 entry["state"] = ((nb,) + ss["state"][0], ss["state"][1])
@@ -238,10 +283,8 @@ class Model:
         return self._to_abstract(self.paged_cache_shapes(num_pages, page_size, slots))
 
     def init_paged_cache(self, num_pages: int, page_size: int, slots: int) -> Tree:
-        return jax.tree.map(
-            lambda s: jnp.zeros(s.shape, s.dtype),
-            self.abstract_paged_cache(num_pages, page_size, slots),
-        )
+        return self._init_cache_tree(
+            self.abstract_paged_cache(num_pages, page_size, slots))
 
     def export_paged_slot(self, cache: Tree, pages, slot: int) -> dict:
         """One slot's state out of a paged cache, as host numpy arrays.
@@ -311,16 +354,15 @@ class Model:
         h = L.norm_apply(lp["pre_norm"], x, cfg, binding)
         rg = (self.q_group, self.q_group_padded)
         if cfg.is_attn_layer(j):
-            if mode == "decode":
-                y, kv = L.attention_decode(
-                    lp["attn"], h, {"k": lc["k"], "v": lc["v"]}, pos, cfg, binding,
-                    use_rope=self.use_rope, pctx=self.pctx, real_group=rg,
-                    block_tables=block_tables, window=window,
-                )
-                new_cache.update(kv)
-            elif mode == "chunk":
-                y, kv = L.attention_chunk(
-                    lp["attn"], h, {"k": lc["k"], "v": lc["v"]}, pos, cfg, binding,
+            if mode in ("decode", "chunk"):
+                attn_cache = {"k": lc["k"], "v": lc["v"]}
+                if "k_scale" in lc:
+                    attn_cache["k_scale"] = lc["k_scale"]
+                    attn_cache["v_scale"] = lc["v_scale"]
+                apply = (L.attention_decode if mode == "decode"
+                         else L.attention_chunk)
+                y, kv = apply(
+                    lp["attn"], h, attn_cache, pos, cfg, binding,
                     use_rope=self.use_rope, pctx=self.pctx, real_group=rg,
                     block_tables=block_tables, window=window,
                 )
@@ -332,8 +374,17 @@ class Model:
                     real_group=rg,
                 )
                 if mode == "prefill":
-                    new_cache["k"] = kv["k"].astype(jnp.dtype(cfg.dtype))
-                    new_cache["v"] = kv["v"].astype(jnp.dtype(cfg.dtype))
+                    if self.kv_quantize:
+                        sc = jnp.full((h.shape[0],), self.kv_scale_init,
+                                      jnp.float32)
+                        sd = jnp.dtype(self.kv_storage_dtype)
+                        new_cache["k"] = L._quant_update(kv["k"], sc, sd)
+                        new_cache["v"] = L._quant_update(kv["v"], sc, sd)
+                        new_cache["k_scale"] = sc
+                        new_cache["v_scale"] = sc
+                    else:
+                        new_cache["k"] = kv["k"].astype(jnp.dtype(cfg.dtype))
+                        new_cache["v"] = kv["v"].astype(jnp.dtype(cfg.dtype))
         else:
             if mode == "decode":
                 y, sc = ssm_decode(lp["ssm"], h, {"state": lc["state"], "conv": lc["conv"]}, cfg)
@@ -395,7 +446,7 @@ class Model:
                     )
                     aux = aux + layer_aux
                 else:
-                    y = L.mlp_apply(lp["mlp"], h, cfg)
+                    y = L.mlp_apply(lp["mlp"], h, cfg, binding)
                 x = x + y
         x = self.pctx.constrain_residual(x)
         return x, (new_cache if mode in ("prefill", "decode", "chunk") else None), aux
@@ -509,7 +560,7 @@ class Model:
             )
             x = x + y
             h = L.norm_apply(lp["post_norm"], x, cfg, binding)
-            x = x + L.mlp_apply(lp["mlp"], h, cfg)
+            x = x + L.mlp_apply(lp["mlp"], h, cfg, binding)
             return x, None
 
         if cfg.remat != "none":
@@ -524,7 +575,8 @@ class Model:
     # embeddings + logits
     # ------------------------------------------------------------------ #
     def _embed(self, params, tokens, offset: jnp.ndarray | int = 0):
-        x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+        tok = L.dequant_param(params["embed"]["tok"], jnp.dtype(self.cfg.dtype))
+        x = jnp.take(tok, tokens, axis=0)
         if self.cfg.family == "audio":
             x = x + L.sinusoidal_positions(
                 tokens.shape[1], self.cfg.d_model, offset
@@ -532,12 +584,22 @@ class Model:
         return x
 
     def _logits(self, params, x):
-        w = (
-            params["embed"]["tok"].T
-            if self.cfg.tie_embeddings
-            else params["lm_head"]["w"]
-        )
-        logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+        if self.cfg.tie_embeddings:
+            # tied head reuses the (vocab, d) embedding; its axis-0 scales
+            # do not match quant_matmul's per-output-channel layout after
+            # the transpose, so the tied path always densifies.
+            w = L.dequant_param(params["embed"]["tok"], x.dtype).T
+        else:
+            w = params["lm_head"]["w"]
+        if isinstance(w, dict) and "quant_matmul" in self.binding:
+            b, s, d = x.shape
+            logits = self.binding["quant_matmul"](
+                x.reshape(b * s, d), w["q"], w["scale"]
+            ).reshape(b, s, -1).astype(jnp.float32)
+        else:
+            logits = jnp.einsum(
+                "bsd,dv->bsv", x, L.dequant_param(w, x.dtype)
+            ).astype(jnp.float32)
         if self.padded_vocab != self.cfg.vocab_size:
             mask = jnp.arange(self.padded_vocab) < self.cfg.vocab_size
             logits = jnp.where(mask, logits, -1e9)

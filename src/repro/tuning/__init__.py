@@ -48,6 +48,7 @@ from repro.tuning.cache import (
     SCHEMA_VERSION,
     CacheKey,
     TuningCache,
+    base_dtype,
     bucket_shapes,
     platform_fingerprint,
     resolve_cache_path,
@@ -62,6 +63,7 @@ from repro.tuning.dispatch import (
     GeometryOutcome,
     TunedDispatch,
     bucket_distance,
+    calibrate_dtype_penalty,
     consolidated_stats,
 )
 from repro.tuning.expiry import (
@@ -107,11 +109,12 @@ def __getattr__(name):
 
 __all__ = [
     "ENV_TUNING_CACHE", "SCHEMA_VERSION", "CacheKey", "TuningCache",
-    "bucket_shapes", "platform_fingerprint", "resolve_cache_path",
+    "bucket_shapes", "base_dtype", "platform_fingerprint",
+    "resolve_cache_path",
     "BlockConfig", "default_config",
     "ConfigTable", "GeometryOutcome", "TunedDispatch", "bucket_distance",
     "DTYPE_PENALTY", "DEMOTED_PENALTY", "DISPATCH_PATHS", "STATS_SCHEMA",
-    "consolidated_stats", "bucket_validator",
+    "consolidated_stats", "calibrate_dtype_penalty", "bucket_validator",
     "BUNDLE_SCHEMA_VERSION", "ENV_TUNING_BUNDLE", "BundleFormatError",
     "ImportReport", "SiteFingerprint", "export_bundle", "import_bundle",
     "verify_bundle",

@@ -57,6 +57,7 @@ __all__ = [
     "resolve_cache_path",
     "platform_fingerprint",
     "bucket_shapes",
+    "base_dtype",
     "file_lock",
 ]
 
@@ -114,22 +115,49 @@ def _bucket(n: int) -> int:
     return 1 if n <= 1 else 1 << math.ceil(math.log2(n))
 
 
+def _is_quant_dtype(dt: str) -> bool:
+    """1-byte quantized storage dtypes (int8 code points, fp8 grids)."""
+    return dt in ("int8", "uint8") or dt.startswith("float8")
+
+
+def base_dtype(dtype: str) -> str:
+    """Full-precision component of a (possibly composite) bucket dtype:
+    ``"float32+int8" -> "float32"``, plain dtypes pass through.  What
+    the bucket validator and feasibility re-checks rebuild non-quantized
+    args in."""
+    return str(dtype).partition("+")[0]
+
+
 def bucket_shapes(args: Sequence[Any]) -> tuple[str, str]:
     """(shape-bucket string, dtype) of a workload's array arguments.
 
     Bucketing to powers of two lets nearby geometries share one tuned
     entry instead of re-searching per exact shape; scalars and Python
     ints (step counters etc.) carry no geometry and are skipped.
+
+    The dtype is the first array arg's; when a *later* array arg is a
+    quantized storage dtype (int8/fp8) differing from it, the bucket
+    dtype becomes the composite ``"<base>+<quant>"`` — a quantized-KV
+    decode and its fp32 twin must not share one tuned entry (the
+    quantized kernel moves a quarter of the bytes, so its block sweet
+    spot differs).  Integer positional args (pos vectors, block tables,
+    group sizes) are int32, not 1-byte, so they never trip the suffix.
     """
     shapes = []
     dtype = "none"
+    quant = None
     for a in args:
         shape = getattr(a, "shape", None)
         if shape is None or not hasattr(a, "dtype"):
             continue
+        dt = str(a.dtype)
         if dtype == "none":
-            dtype = str(a.dtype)
+            dtype = dt
+        elif quant is None and dt != dtype and _is_quant_dtype(dt):
+            quant = dt
         shapes.append("x".join(str(_bucket(int(d))) for d in shape) or "scalar")
+    if quant is not None:
+        dtype = f"{dtype}+{quant}"
     return ",".join(shapes), dtype
 
 

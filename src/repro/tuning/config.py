@@ -87,6 +87,7 @@ _OP_DEFAULTS: dict[str, BlockConfig] = {
     "chunk_attention": BlockConfig.make(block_q=128, block_k=128),
     "ssd_scan": BlockConfig.make(chunk=128),
     "moe_gmm": BlockConfig.make(block_m=128, block_n=128, block_k=2048),
+    "quant_matmul": BlockConfig.make(block_m=128, block_n=128),
 }
 
 # Per-platform refinements of the fallback (still not *tuned* — just a
@@ -100,6 +101,7 @@ _PLATFORM_DEFAULTS: dict[tuple[str, str], BlockConfig] = {
     ("pod-sim", "chunk_attention"): BlockConfig.make(block_q=32, block_k=32),
     ("pod-sim", "ssd_scan"): BlockConfig.make(chunk=32),
     ("pod-sim", "moe_gmm"): BlockConfig.make(block_m=32, block_n=32, block_k=64),
+    ("pod-sim", "quant_matmul"): BlockConfig.make(block_m=32, block_n=32),
 }
 
 

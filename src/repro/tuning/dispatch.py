@@ -40,21 +40,58 @@ default / explicit), which is exactly the multi-bucket hit rate the
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 from repro.tuning.cache import bucket_shapes
 from repro.tuning.config import BlockConfig
 
 __all__ = ["GeometryOutcome", "ConfigTable", "TunedDispatch", "bucket_distance",
            "DTYPE_PENALTY", "DEMOTED_PENALTY", "DISPATCH_PATHS", "STATS_SCHEMA",
-           "consolidated_stats"]
+           "consolidated_stats", "calibrate_dtype_penalty"]
 
 # What crossing a dtype costs, in doublings: a bf16 call prefers any
 # same-dtype bucket within 4 doublings of it over an exact-shape fp32
 # bucket, but borrows the fp32 entry rather than fall to the shipped
-# default when its own dtype was never warmed.
+# default when its own dtype was never warmed.  This is the *fixed
+# fallback*: a table built from a cache with measured timings for more
+# than one dtype carries a calibrated penalty instead (see
+# calibrate_dtype_penalty) — quantized buckets made dtype-crossing
+# borrows routine enough that a guessed constant over- or under-lends.
 DTYPE_PENALTY = 4.0
+
+
+def calibrate_dtype_penalty(
+    measured: Mapping[tuple[str, str], float],
+) -> float | None:
+    """Dtype-crossing borrow penalty from measured bucket timings.
+
+    ``measured`` maps (shape bucket, dtype) -> best_us from the tuning
+    cache.  Every same-shape pair that differs only in dtype is one
+    observation of what crossing dtypes actually costs on this platform:
+    |log2(time ratio)| doublings.  The penalty is the median observation
+    clamped to [1, 8] — never cheaper than one doubling (an exact
+    same-dtype neighbour should still win) and never so dear that a
+    validated borrow loses to the shipped default.  Returns None when no
+    cross-dtype pair was measured (callers keep DTYPE_PENALTY).
+    """
+    by_shape: dict[str, list[tuple[str, float]]] = {}
+    for (shapes, dtype), us in measured.items():
+        if us and us > 0:
+            by_shape.setdefault(shapes, []).append((dtype, float(us)))
+    ratios = []
+    for group in by_shape.values():
+        for (da, ua), (db, ub) in itertools.combinations(group, 2):
+            if da != db:
+                ratios.append(abs(math.log2(ua / ub)))
+    if not ratios:
+        return None
+    ratios.sort()
+    mid = len(ratios) // 2
+    med = (ratios[mid] if len(ratios) % 2
+           else (ratios[mid - 1] + ratios[mid]) / 2)
+    return min(max(med, 1.0), 8.0)
 
 # What a *demoted* candidate costs on top of its distance: a config a
 # tuning-bundle import could not validate at its own bucket (foreign
@@ -180,11 +217,16 @@ class ConfigTable:
                  default: BlockConfig, *,
                  validate: Callable[[BlockConfig, str, str], bool] | None = None,
                  max_entries: int | None = None,
-                 demoted: Sequence[GeometryOutcome] = ()) -> None:
+                 demoted: Sequence[GeometryOutcome] = (),
+                 dtype_penalty: float | None = None) -> None:
         self.op = op
         self.default = default
         self.validate = validate
         self.max_entries = max_entries
+        # dtype-crossing borrow cost: measured (calibrate_dtype_penalty)
+        # when the bind had cross-dtype timings, else the fixed fallback
+        self.dtype_penalty = (DTYPE_PENALTY if dtype_penalty is None
+                              else float(dtype_penalty))
         self._by_geom: dict[tuple[str, str], BlockConfig] = {}
         kept: list[GeometryOutcome] = []
         for o in outcomes:
@@ -278,14 +320,14 @@ class ConfigTable:
             if g_dtype == dtype:
                 scored.append((d, 0, g_shapes, "nearest", config))
             else:
-                scored.append((d + DTYPE_PENALTY, 1, g_shapes,
+                scored.append((d + self.dtype_penalty, 1, g_shapes,
                                "near-dtype", config))
         for (g_shapes, g_dtype), config in self._demoted_by_geom.items():
             d = bucket_distance(shapes, g_shapes)
             if d is None:
                 continue
-            penalty = DEMOTED_PENALTY + (DTYPE_PENALTY if g_dtype != dtype
-                                         else 0.0)
+            penalty = DEMOTED_PENALTY + (self.dtype_penalty
+                                         if g_dtype != dtype else 0.0)
             scored.append((d + penalty, 2, g_shapes, "demoted", config))
         scored.sort(key=lambda t: t[:3])
         for _, _, _, how, config in scored:

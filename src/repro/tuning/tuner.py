@@ -63,6 +63,7 @@ from repro.tuning.dispatch import (
     GeometryOutcome,
     TunedDispatch,
     _parse_bucket,
+    calibrate_dtype_penalty,
 )
 from repro.tuning.search import search
 
@@ -139,8 +140,13 @@ def bucket_validator(tuner: "OpTuner", platform: Any):
     call's dtype (the predicates only read shapes/dtypes, so nothing is
     allocated) and re-runs the VMEM/divisibility check — a config tuned
     for fp32 must re-qualify for the bf16 geometry before it is lent out.
-    Returns None when the tuner has no predicate (any structural borrow
-    is admissible).
+    A composite quantized dtype ("float32+int8") rebuilds the first part
+    in the base dtype and the rest in the quantized storage dtype — the
+    conservative assignment: the only predicate that reads operand
+    dtypes (quant_matmul's byte accounting) keys off a non-first arg,
+    and sizing the others at 1 byte can only under-estimate VMEM for
+    predicates that ignore dtype anyway.  Returns None when the tuner
+    has no predicate (any structural borrow is admissible).
     """
     if tuner.feasible is None:
         return None
@@ -151,9 +157,13 @@ def bucket_validator(tuner: "OpTuner", platform: Any):
         parts = _parse_bucket(shapes)
         if parts is None:
             return False
+        base, _, quant = str(dtype).partition("+")
         try:
-            args = tuple(jax.ShapeDtypeStruct(p, dtype) if p else 0
-                         for p in parts)
+            args = tuple(
+                jax.ShapeDtypeStruct(p, quant if (quant and i) else base)
+                if p else 0
+                for i, p in enumerate(parts)
+            )
             return bool(tuner.feasible(config, platform, args))
         except Exception:
             return False
@@ -541,10 +551,20 @@ class TuningContext:
 
             outcomes = [o for o in outcomes if not shadows(o)]
             table_outcomes = [o for o in table_outcomes if not shadows(o)]
+        # dtype-crossing borrow penalty: calibrated from this op's measured
+        # cross-dtype timings when the cache holds any (same shape bucket,
+        # different dtype, both with a best_us), else the fixed fallback
+        measured: dict[tuple[str, str], float] = {}
+        for geom in entries:
+            us = self.cache.metrics(self._key(impl, *geom)).get("best_us")
+            if us:
+                measured[geom] = float(us)
+        penalty = calibrate_dtype_penalty(measured)
         table = ConfigTable(name, table_outcomes,
                             default=default_config(name, self.platform),
                             validate=bucket_validator(tuner, self.platform),
-                            max_entries=cap, demoted=demoted_outcomes)
+                            max_entries=cap, demoted=demoted_outcomes,
+                            dtype_penalty=penalty)
         outcomes = outcomes + evicted       # report shows what was shed
         outcomes += demoted_outcomes        # ...and what binds second-class
         if self.bundle_report is not None:   # ...and what the import refused

@@ -209,7 +209,7 @@ def _selftest() -> int:   # pragma: no cover — runs as its own CI job
         "REPRO_TUNING_CACHE": str(tmp / "tuning.json"),
         "REPRO_WORKLOAD_PROFILE": str(tmp / "workload.json"),
     }
-    ops = ("rmsnorm", "moe_gmm", "windowed_attention")
+    ops = ("rmsnorm", "moe_gmm", "windowed_attention", "quant_matmul")
     bundle = Bundle(name="warm-selftest", tag="t", model_config={}, recipe={},
                     required_ops={op: str(ABIS[op]) for op in ops}, env={})
 
@@ -245,6 +245,15 @@ def _selftest() -> int:   # pragma: no cover — runs as its own CI job
         win_geoms.append((q, kc, vc, win))
         for _ in range(2):
             jax.block_until_ready(c1.binding["windowed_attention"](q, kc, vc, win))
+    qmm_geoms = []
+    for rows, d, f in ((64, 64, 64), (16, 32, 64)):   # quantized weight buckets
+        kx, kw, ks = jax.random.split(jax.random.PRNGKey(rows), 3)
+        xq = jax.random.normal(kx, (rows, d), jnp.float32)
+        qw = jax.random.randint(kw, (d, f), -127, 128, jnp.int8)
+        sc = jax.random.uniform(ks, (f,), jnp.float32, 0.01, 0.1)
+        qmm_geoms.append((xq, qw, sc))
+        for _ in range(2):
+            jax.block_until_ready(c1.binding["quant_matmul"](xq, qw, sc))
     rt.cleanup()   # persists the profile
 
     profile = WorkloadProfile.load(tmp / "workload.json")
@@ -300,7 +309,8 @@ def _selftest() -> int:   # pragma: no cover — runs as its own CI job
     # 4. drive both live geometries through each bound op: the dispatch
     # must resolve every one exactly (no nearest/default fallbacks)
     for op, geoms in (("rmsnorm", rms_geoms), ("moe_gmm", moe_geoms),
-                      ("windowed_attention", win_geoms)):
+                      ("windowed_attention", win_geoms),
+                      ("quant_matmul", qmm_geoms)):
         for args in geoms:
             jax.block_until_ready(c2.binding[op](*args))
         dispatch = c2.binding.impl(op).fn

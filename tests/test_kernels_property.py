@@ -178,3 +178,107 @@ def test_windowed_bucket_roundtrip_is_feasible(sq, extra, group, kv, dh, w, seed
         if t.feasible(cfg, POD_SIM, synth)
     ]
     assert feasible, f"no feasible config for bucket {shapes}"
+
+
+# ---------------------------------------------------------------------------
+# quantization numerics (repro.kernels.quant)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.quant import (  # noqa: E402
+    quantize,
+    quantize_per_channel,
+    dequantize,
+)
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.sampled_from([4, 8, 16]),
+    f=st.sampled_from([4, 8, 32]),
+    amp=st.floats(0.01, 100.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_roundtrip_error_bounded_per_channel(d, f, amp, seed):
+    """int8 quantize -> dequantize reconstructs every element to within
+    half a step of ITS channel's scale, at any input magnitude."""
+    w = amp * jax.random.normal(jax.random.PRNGKey(seed), (d, f))
+    q, s = quantize_per_channel(w, axis=-2, fmt="int8")
+    err = np.abs(np.asarray(dequantize(q, s, axis=-2) - w))
+    bound = np.asarray(s)[None, :] / 2 + 1e-6 * amp
+    assert np.all(err <= bound), float((err - bound).max())
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.sampled_from([4, 8]),
+    f=st.sampled_from([4, 8]),
+    c=st.sampled_from([0.25, 0.5, 2.0, 4.0]),   # powers of two: exact in fp
+    ch=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_per_channel_scale_invariance(d, f, c, ch, seed):
+    """Rescaling ONE output channel rescales only that channel's scale;
+    the int8 codes are invariant — per-channel really is per-channel."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (d, f))
+    q0, s0 = quantize_per_channel(w, axis=-2, fmt="int8")
+    w1 = w.at[:, ch].multiply(c)
+    q1, s1 = quantize_per_channel(w1, axis=-2, fmt="int8")
+    assert np.array_equal(np.asarray(q0), np.asarray(q1))
+    np.testing.assert_allclose(np.asarray(s1)[ch], c * np.asarray(s0)[ch],
+                               rtol=1e-6)
+    others = np.arange(f) != ch
+    assert np.array_equal(np.asarray(s0)[others], np.asarray(s1)[others])
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 64),
+    amp=st.floats(1e-6, 1e6),
+    fmt=st.sampled_from(["int8", "fp8"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_codes_never_exceed_symmetric_clip(n, amp, fmt, seed):
+    """Codes stay inside the symmetric range at any magnitude: int8 in
+    [-127, 127] (-128 unreachable, so negation is exact), fp8 finite."""
+    x = amp * jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    q, s = quantize(x, fmt)
+    assert float(s) > 0
+    if fmt == "int8":
+        qi = np.asarray(q, np.int32)
+        assert qi.min() >= -127 and qi.max() <= 127
+        qn, _ = quantize(-x, fmt)
+        assert np.array_equal(np.asarray(qn, np.int32), -qi)
+    else:
+        assert np.all(np.isfinite(np.asarray(q, np.float32)))
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 48),
+    d=st.sampled_from([8, 16, 32]),
+    f=st.sampled_from([8, 32, 64]),
+    fmt=st.sampled_from(["int8", "fp8"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_bucket_roundtrip_is_feasible(t, d, f, fmt, seed):
+    """Every quantized matmul geometry buckets to a composite dtype
+    ("float32+int8"/"+float8_e4m3fn") that args_from_shapes rebuilds
+    bit-compatibly, with at least one feasible tuning config — autotune
+    can always warm what serving emits."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], (t, d))
+    qw, scale = quantize_per_channel(
+        jax.random.normal(ks[1], (d, f)), axis=-2, fmt=fmt)
+    tu = tuners()["quant_matmul"]
+    shapes, dtype = bucket_shapes((x, qw, scale))
+    assert "+" in str(dtype)
+    synth = tu.args_from_shapes(POD_SIM, shapes, dtype)
+    assert synth is not None, f"no synth for bucket {shapes}"
+    shapes2, dtype2 = bucket_shapes(synth)
+    assert shapes2 == shapes and dtype2 == dtype
+    feasible = [
+        cfg for cfg in (BlockConfig.make(**dict(zip(tu.space, vals)))
+                        for vals in itertools.product(*tu.space.values()))
+        if tu.feasible(cfg, POD_SIM, synth)
+    ]
+    assert feasible, f"no feasible config for bucket {shapes}"

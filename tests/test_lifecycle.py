@@ -327,6 +327,78 @@ def test_env_capped_redeploy_binds_k_hottest_with_near_dtype(tmp_path):
     assert len(final) == 2
 
 
+def test_calibrated_penalty_borrow_quantized_traffic(tmp_path):
+    """Quantized<->full-precision borrows price distance with the
+    MEASURED dtype penalty: a cache holding best_us for the same shape
+    bucket at "float32" and "float32+int8" calibrates |log2(ratio)|
+    doublings (here 4x -> 2.0, not the fixed DTYPE_PENALTY=4), and a
+    quantized call whose own bucket was never warmed borrows the fp32
+    entry via near-dtype instead of falling to the shipped default."""
+    from repro.core.bundle import Bundle
+    from repro.tuning.dispatch import DTYPE_PENALTY
+
+    fp = platform_fingerprint(POD_SIM)
+    abi = str(ABIS["quant_matmul"])
+    cache = TuningCache(tmp_path / "tuning.json")
+    # the calibration pair: one (large) shape bucket measured at both
+    # dtypes — far from the traffic below, so the SAME-shape fp32 entry
+    # (cross-dtype, distance == penalty) outranks it for the borrow
+    cache.put(CacheKey(abi=abi, platform=fp, shapes="256x256,256x256,256",
+                       dtype="float32"),
+              BlockConfig.make(block_m=64, block_n=64),
+              metrics={"best_us": 40.0})
+    cache.put(CacheKey(abi=abi, platform=fp, shapes="256x256,256x256,256",
+                       dtype="float32+int8"),
+              BlockConfig.make(block_m=64, block_n=64),
+              metrics={"best_us": 10.0})
+    # an fp32-only bucket the quantized traffic below must borrow
+    cache.put(CacheKey(abi=abi, platform=fp, shapes="32x64,64x64,64",
+                       dtype="float32"),
+              BlockConfig.make(block_m=32, block_n=64),
+              metrics={"best_us": 20.0})
+    cache.save()
+    prof = WorkloadProfile(tmp_path / "workload.json")
+    x256 = jnp.zeros((256, 256), jnp.float32)
+    qw256 = jnp.zeros((256, 256), jnp.int8)
+    sc256 = jnp.zeros((256,), jnp.float32)
+    prof.record("quant_matmul", (x256, qw256, sc256), weight=3)
+    prof.record("quant_matmul", (x256, x256, sc256), weight=2)
+    prof.record("quant_matmul", (jnp.zeros((32, 64)), jnp.zeros((64, 64)),
+                                 jnp.zeros((64,))), weight=1)
+    prof.save()
+
+    host_env = {
+        "REPRO_PLATFORM": "pod-sim",
+        "REPRO_TUNING_CACHE": str(tmp_path / "tuning.json"),
+        "REPRO_WORKLOAD_PROFILE": str(tmp_path / "workload.json"),
+        "REPRO_SEARCH_BUDGET": "0",
+    }
+    bundle = Bundle(name="qpen", tag="t", model_config={}, recipe={},
+                    required_ops={"quant_matmul": abi}, env={})
+    rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c = rt.deploy(bundle, native_ops=True, autotune=True)
+
+    table = c.binding.impl("quant_matmul").config
+    assert table.dtype_penalty == pytest.approx(2.0)      # |log2(40/10)|
+    assert table.dtype_penalty != DTYPE_PENALTY           # not the guess
+
+    # live int8 traffic at the fp32-only bucket: near-dtype borrow
+    out = c.binding["quant_matmul"](jnp.ones((32, 64), jnp.float32),
+                                    jnp.ones((64, 64), jnp.int8),
+                                    jnp.full((64,), 0.01, jnp.float32))
+    dispatch = c.binding.impl("quant_matmul").fn
+    assert out.shape == (32, 64)
+    assert dispatch.stats["near-dtype"] == 1
+    assert dispatch.stats["default"] == 0
+    # ...and the warmed quantized bucket still dispatches exactly
+    out2 = c.binding["quant_matmul"](
+        jnp.ones((256, 256), jnp.float32), jnp.ones((256, 256), jnp.int8),
+        jnp.full((256,), 0.01, jnp.float32))
+    assert out2.shape == (256, 256)
+    assert dispatch.stats["exact"] >= 1
+    rt.cleanup()
+
+
 # ----------------------------------------------------------- concurrency --
 
 

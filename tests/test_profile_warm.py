@@ -234,6 +234,55 @@ def test_windowed_capture_warm_redeploy_zero_misses(tmp_path):
     assert stats["exact"] >= 1 and not stats["nearest"] and not stats["default"]
 
 
+def test_quantized_capture_warm_redeploy_zero_misses(tmp_path):
+    """A quantized op rides the same capture -> warm -> redeploy loop:
+    the composite bucket dtype ("float32+int8") keys its own cache
+    entries, warm synthesizes storage-dtype weights with representative
+    scales, and the second deploy dispatches the live quantized
+    geometry exactly — zero misses."""
+    host_env = {
+        "REPRO_PLATFORM": "pod-sim",
+        "REPRO_TUNING_CACHE": str(tmp_path / "tuning.json"),
+        "REPRO_WORKLOAD_PROFILE": str(tmp_path / "workload.json"),
+    }
+    bundle = Bundle(name="qcap", tag="t", model_config={}, recipe={},
+                    required_ops={"quant_matmul": str(ABIS["quant_matmul"])},
+                    env={})
+
+    # capture: one quantized geometry (fp32 activations, int8 weights)
+    rt = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c1 = rt.deploy(bundle, native_ops=True, autotune=False, profile=True)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (48, 32))
+    qw = jax.random.randint(ks[1], (32, 64), -127, 128, jnp.int8)
+    scale = jax.random.uniform(ks[2], (64,), jnp.float32, 0.01, 0.1)
+    for _ in range(3):
+        jax.block_until_ready(c1.binding["quant_matmul"](x, qw, scale))
+    rt.cleanup()   # persists
+
+    prof = WorkloadProfile.load(tmp_path / "workload.json")
+    top = prof.top(op="quant_matmul")
+    assert top and top[0][0].dtype == "float32+int8"   # composite bucket
+
+    # warm
+    cache = TuningCache.load(tmp_path / "tuning.json")
+    results = warm_cache(prof, cache, POD_SIM,
+                         registry=register_all(OpRegistry()))
+    cache.save()
+    assert [r.status for r in results
+            if r.op == "quant_matmul"] == ["warmed"]
+
+    # redeploy: cache-hit, live quantized traffic dispatches exactly
+    rt2 = Runtime(registry=register_all(OpRegistry()), host_env=host_env)
+    c2 = rt2.deploy(bundle, native_ops=True, autotune=True)
+    report = next(r for r in c2.binding.reports if r.op == "quant_matmul")
+    assert report.tuning == "cache-hit"
+    jax.block_until_ready(c2.binding["quant_matmul"](x, qw, scale))
+    stats = c2.binding.impl("quant_matmul").fn.stats
+    rt2.cleanup()
+    assert stats["exact"] >= 1 and not stats["nearest"] and not stats["default"]
+
+
 def test_warm_moe_narrow_d_geometry_searches(tmp_path):
     """moe_gmm geometries with D below the block_k space minimum must still
     search (the kernel degrades block_k via gcd), not silently persist the
@@ -420,7 +469,7 @@ def test_tuning_context_without_profile_uses_canonical(tmp_path):
 
 @pytest.mark.parametrize("op", ["rmsnorm", "attention", "decode_attention",
                                 "chunk_attention", "windowed_attention",
-                                "ssd_scan", "moe_gmm"])
+                                "ssd_scan", "moe_gmm", "quant_matmul"])
 def test_synthesizers_roundtrip_canonical_bucket(op):
     """Every op's args_from_shapes must rebuild args whose bucket equals the
     recorded one — otherwise warm would persist under a key deploys never

@@ -1,0 +1,348 @@
+"""Quantization stack units: shared numerics, checkpoint schema, serving.
+
+Complements the conformance grid (tests/test_quant_conformance.py) with
+the non-kernel layers of the quantized serving path:
+
+  * `repro.kernels.quant` — the one shared numerics module: symmetric
+    int8 (clip at +/-127, never -128), fp8 e4m3fn grids, per-channel
+    scales, the EPS floor, and the compress/decompress aliases the DCN
+    gradient compressor rides;
+  * the checkpoint schema — per-channel (axis=-2) weight scales, the
+    name-aware quantizable filter, transparent dequantize on restore and
+    the `{"q", "scale"}` storage form a quantized deploy consumes;
+  * serving admission — `estimate_footprint` priced from abstract shapes
+    and `DeploymentRejected` firing BEFORE allocation, with the int8
+    deploy fitting where fp32 is rejected;
+  * `calibrate_dtype_penalty` — the measured quantized<->full-precision
+    borrow penalty replacing the fixed DTYPE_PENALTY guess.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    quantize_tree,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.configs import ARCHS
+from repro.core import Runtime
+from repro.kernels.quant import (
+    EPS,
+    FORMATS,
+    FP8_DTYPE,
+    FP8_MAX,
+    INT8_MAX,
+    compress_int8,
+    decompress_int8,
+    dequantize,
+    quantize,
+    quantize_per_channel,
+    storage_dtype,
+)
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import (
+    DeploymentRejected,
+    JaxEngine,
+    Request,
+    Server,
+    estimate_footprint,
+)
+from repro.launch.train import make_bundle
+from repro.models import build_model
+from repro.tuning import calibrate_dtype_penalty
+
+# ---------------------------------------------------------------------------
+# shared numerics
+# ---------------------------------------------------------------------------
+
+
+def _x(shape=(32, 16), seed=0, scale=3.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+def test_int8_roundtrip_error_bound():
+    x = _x()
+    q, s = quantize(x, "int8")
+    assert q.dtype == jnp.int8
+    err = jnp.abs(dequantize(q, s) - x)
+    assert float(err.max()) <= float(s) / 2 + 1e-7
+
+
+def test_int8_clip_symmetric_never_minus_128():
+    """-128 has no positive counterpart; the symmetric clip must never
+    produce it, so negating codes is always exact."""
+    x = jnp.asarray([-10.0, 10.0, -9.99, 5.0])
+    q, s = quantize(x, "int8")
+    qn, sn = quantize(-x, "int8")
+    assert int(q.min()) >= -127 and int(q.max()) <= 127
+    assert np.array_equal(np.asarray(qn), -np.asarray(q))
+    assert float(sn) == float(s)
+
+
+def test_fp8_storage_and_scale():
+    x = _x(seed=1)
+    q, s = quantize(x, "fp8")
+    assert q.dtype == FP8_DTYPE
+    assert float(s) == pytest.approx(float(jnp.abs(x).max()) / FP8_MAX)
+    # e4m3fn: ~2^-4 relative error near the grid, absolute floor ~scale
+    err = jnp.abs(dequantize(q, s) - x)
+    assert float(err.max()) <= 0.08 * float(jnp.abs(x).max())
+
+
+def test_per_channel_axis_minus2_schema():
+    """The checkpoint convention: reduce axis -2 (the contraction dim of
+    a (D, F) weight) -> one fp32 scale per OUTPUT channel, and for
+    layer-stacked (NB, D, F) leaves the stack axis survives in the scale
+    so it scans alongside the codes."""
+    w = _x((8, 16), seed=2)
+    q, s = quantize_per_channel(w, axis=-2, fmt="int8")
+    assert s.shape == (16,) and s.dtype == jnp.float32
+    back = dequantize(q, s, axis=-2)
+    assert float(jnp.abs(back - w).max()) <= float(s.max()) / 2 + 1e-7
+    ws = _x((3, 8, 16), seed=3)
+    qs, ss = quantize_per_channel(ws, axis=-2, fmt="int8")
+    assert ss.shape == (3, 16)          # leading stack axis preserved
+
+
+def test_zero_tensor_quantizes_safely():
+    q, s = quantize(jnp.zeros((4, 4)), "int8")
+    assert float(s) > 0 and float(s) <= EPS / INT8_MAX * 1.01
+    assert not np.any(np.asarray(q))
+    assert np.all(np.isfinite(np.asarray(dequantize(q, s))))
+
+
+def test_unknown_format_raises():
+    with pytest.raises(ValueError):
+        storage_dtype("int4")
+    with pytest.raises(ValueError):
+        quantize(_x(), "int4")
+
+
+def test_formats_vocabulary():
+    assert FORMATS == ("int8", "fp8")
+    assert storage_dtype("int8") == jnp.int8
+    assert storage_dtype("fp8") == FP8_DTYPE
+
+
+# ---------------------------------------------------------------------------
+# DCN gradient compressor: shared module is THE implementation
+# ---------------------------------------------------------------------------
+
+
+def test_collectives_import_shared_compressor():
+    """Regression pin: the hierarchical all-reduce's int8 DCN leg must
+    keep compressing through the shared quant module (the extraction
+    target), not a private reimplementation."""
+    from repro.distributed import collectives
+
+    assert collectives._compress_int8 is compress_int8
+
+
+def test_dcn_compressor_roundtrip_bound():
+    g = _x((64,), seed=4, scale=0.02)
+    q, s = compress_int8(g)
+    assert q.dtype == jnp.int8
+    err = jnp.abs(decompress_int8(q, s) - g)
+    # the bound the multi-process all-reduce test asserts end to end
+    assert float(err.max()) <= float(jnp.abs(g).max()) / 127
+
+
+def test_compress_aliases_are_int8_quantize():
+    x = _x(seed=5)
+    qa, sa = compress_int8(x)
+    qb, sb = quantize(x, "int8")
+    assert np.array_equal(np.asarray(qa), np.asarray(qb))
+    assert float(sa) == float(sb)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint schema: per-channel scales, name filter, storage form
+# ---------------------------------------------------------------------------
+
+
+def _ckpt_tree(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    return {
+        "embed": {"tok": jax.random.normal(ks[0], (16, 8))},
+        "decoder": {
+            "attn": {"wq": jax.random.normal(ks[1], (2, 8, 8))},   # stacked
+            "mlp": {"w_in": jax.random.normal(ks[2], (2, 8, 16))},
+            "norm": {"scale": jax.random.normal(ks[3], (2, 8))},   # gains
+            "moe": {"w_up": jax.random.normal(ks[4], (2, 8, 8))},  # excluded
+            "bias": {"b": jnp.zeros((2, 8))},
+        },
+        "step": jnp.int32(3),
+    }
+
+
+def test_quantized_checkpoint_dequantizes_on_restore(tmp_path):
+    tree = _ckpt_tree()
+    save_checkpoint(tmp_path, 1, tree, quantize="int8")
+    restored, step = restore_checkpoint(tmp_path, tree)
+    assert step == 1
+    # quantized leaves come back dense in their original dtype, within
+    # the per-channel step; untouched leaves are bit-exact
+    wq = restored["decoder"]["attn"]["wq"]
+    assert wq.shape == (2, 8, 8) and wq.dtype == jnp.float32
+    assert float(jnp.abs(wq - tree["decoder"]["attn"]["wq"]).max()) < 0.05
+    np.testing.assert_array_equal(
+        np.asarray(restored["decoder"]["moe"]["w_up"]),
+        np.asarray(tree["decoder"]["moe"]["w_up"]))
+    np.testing.assert_array_equal(
+        np.asarray(restored["decoder"]["norm"]["scale"]),
+        np.asarray(tree["decoder"]["norm"]["scale"]))
+    assert int(restored["step"]) == 3
+
+
+def test_quantized_checkpoint_storage_form(tmp_path):
+    """dequantize=False: quantizable leaves restore as {"q", "scale"}
+    dicts — codes in the storage dtype, axis=-2 per-channel scales with
+    the layer-stack axis preserved."""
+    tree = _ckpt_tree(seed=1)
+    save_checkpoint(tmp_path, 2, tree, quantize="fp8")
+    restored, _ = restore_checkpoint(tmp_path, tree, dequantize=False)
+    wq = restored["decoder"]["attn"]["wq"]
+    assert set(wq) == {"q", "scale"}
+    assert wq["q"].shape == (2, 8, 8) and wq["q"].dtype == FP8_DTYPE
+    assert wq["scale"].shape == (2, 8) and wq["scale"].dtype == jnp.float32
+    tok = restored["embed"]["tok"]
+    assert set(tok) == {"q", "scale"} and tok["scale"].shape == (8,)
+    # excluded subtrees and non-weight leaves stay plain arrays
+    assert isinstance(restored["decoder"]["moe"]["w_up"], jnp.ndarray)
+    assert isinstance(restored["decoder"]["bias"]["b"], jnp.ndarray)
+    assert isinstance(restored["decoder"]["norm"]["scale"], jnp.ndarray)
+
+
+def test_quantize_tree_matches_checkpoint_storage_form(tmp_path):
+    """The in-memory quantizer (the quantized deploy's path) must pick
+    the same leaves and produce the same codes as a quantized save
+    followed by a storage-form restore."""
+    tree = _ckpt_tree(seed=2)
+    save_checkpoint(tmp_path, 3, tree, quantize="int8")
+    from_ckpt, _ = restore_checkpoint(tmp_path, tree, dequantize=False)
+    in_mem = quantize_tree(tree, "int8")
+    def flatten(t, prefix=""):
+        if isinstance(t, dict):
+            out = {}
+            for k, v in t.items():
+                out.update(flatten(v, f"{prefix}/{k}"))
+            return out
+        return {prefix: t}
+    a, b = flatten(from_ckpt), flatten(in_mem)
+    assert set(a) == set(b)
+    for path in a:
+        np.testing.assert_array_equal(np.asarray(a[path]),
+                                      np.asarray(b[path]), err_msg=path)
+
+
+def test_quantize_tree_rejects_unknown_format():
+    with pytest.raises(ValueError):
+        quantize_tree(_ckpt_tree(), "int4")
+
+
+# ---------------------------------------------------------------------------
+# serving admission: footprint pricing + budget rejection before alloc
+# ---------------------------------------------------------------------------
+
+ARCH = "qwen2.5-14b"
+
+
+@pytest.fixture(scope="module")
+def served_container():
+    rt = Runtime(host_env={})
+    container = rt.deploy(make_bundle(ARCH, reduced=True),
+                          mesh=make_host_mesh(data=1))
+    yield ARCHS[ARCH].reduced(), container
+    rt.cleanup()
+
+
+def _footprints(cfg):
+    fp32 = estimate_footprint(build_model(cfg), slots=2, max_len=32)
+    int8 = estimate_footprint(build_model(cfg, kv_quantize="int8"),
+                              slots=2, max_len=32, quantize="int8")
+    return fp32, int8
+
+
+def test_estimate_footprint_quantized_shrinks():
+    cfg = ARCHS[ARCH].reduced()
+    fp32, int8 = _footprints(cfg)
+    # 4B -> 1B codes + fp32 scales: ~3x on weights, ~3.5x on KV
+    assert int8["weight_bytes"] * 2.5 < fp32["weight_bytes"]
+    assert int8["kv_bytes"] * 2.5 < fp32["kv_bytes"]
+    assert int8["total_bytes"] < fp32["total_bytes"]
+    assert fp32["quantize"] == "none" and int8["quantize"] == "int8"
+    for fp in (fp32, int8):
+        assert fp["total_bytes"] == fp["weight_bytes"] + fp["kv_bytes"]
+
+
+def test_budget_rejects_fp32_admits_int8(served_container):
+    """The deployment scenario the tentpole exists for: a budget between
+    the two footprints rejects fp32 BEFORE any allocation and admits the
+    int8 deploy of the same config."""
+    cfg, container = served_container
+    fp32, int8 = _footprints(cfg)
+    budget = (fp32["total_bytes"] + int8["total_bytes"]) // 2
+    with pytest.raises(DeploymentRejected) as ei:
+        JaxEngine(cfg, container, slots=2, max_len=32, chunk=4,
+                  memory_budget=budget)
+    assert ei.value.footprint["total_bytes"] == fp32["total_bytes"]
+    assert ei.value.budget == budget
+    assert str(budget) in str(ei.value) or f"{budget:,}" in str(ei.value)
+    eng = JaxEngine(cfg, container, slots=2, max_len=32, chunk=4,
+                    quantize="int8", memory_budget=budget)
+    assert eng.footprint["total_bytes"] <= budget
+    # weights really are storage-form subtrees
+    w_in = eng.params["decoder"]["p0"]["mlp"]["w_in"]
+    assert set(w_in) == {"q", "scale"} and w_in["q"].dtype == jnp.int8
+
+
+def test_quantized_server_completes(served_container):
+    """An int8 server completes real traffic end to end — the tokens are
+    not pinned to the fp32 reference (quantization legitimately moves
+    near-ties), table7 quantifies the quality delta instead."""
+    cfg, container = served_container
+    server = Server(cfg, container, slots=2, max_len=32, chunk=4,
+                    prefill_mode="chunked", paged=True, quantize="int8")
+    rng = np.random.default_rng(7)
+    for rid, plen in enumerate((4, 6, 3)):
+        prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        assert server.submit(Request(rid=rid, prompt=prompt, max_new=3))
+    server.run()
+    assert all(r.done for r in server.requests)
+    assert all(len(r.tokens) == 3 for r in server.requests)
+    assert server.engine.quantize == "int8"
+    # the KV pools really store int8 codes with fp32 scale leaves
+    entry = next(iter(server.engine.cache.values()))
+    assert entry["k"].dtype == jnp.int8
+    assert entry["k_scale"].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# calibrated dtype-crossing borrow penalty
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_penalty_none_without_cross_pairs():
+    assert calibrate_dtype_penalty({}) is None
+    assert calibrate_dtype_penalty(
+        {("64x64", "float32"): 10.0, ("32x32", "float32"): 5.0}) is None
+
+
+def test_calibrate_penalty_median_of_observed_ratios():
+    measured = {
+        ("64x64,64x64,64", "float32"): 40.0,
+        ("64x64,64x64,64", "float32+int8"): 10.0,   # 4x -> 2 doublings
+        ("32x32,32x32,32", "float32"): 16.0,
+        ("32x32,32x32,32", "float32+int8"): 2.0,    # 8x -> 3 doublings
+    }
+    assert calibrate_dtype_penalty(measured) == pytest.approx(2.5)
+
+
+def test_calibrate_penalty_clamped():
+    near = {("s", "a"): 10.0, ("s", "b"): 10.5}      # ~0.07 doublings
+    assert calibrate_dtype_penalty(near) == 1.0
+    far = {("s", "a"): 1.0, ("s", "b"): 5000.0}      # ~12 doublings
+    assert calibrate_dtype_penalty(far) == 8.0
